@@ -1,0 +1,33 @@
+"""Table 2 calibration: the synthesized workload profiles must reproduce the
+paper's published per-model latencies (the anchor for every other number)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, book, timed
+
+# paper Table 2: (layers, server_ms @ share 30 batch 1, nano_ms, tx2_ms)
+TABLE2 = {
+    "inc": (17, 29.0, 165.0, 94.0),
+    "res": (16, 30.0, 226.0, 114.0),
+    "vgg": (6, 6.0, 147.0, 77.0),
+    "mob": (18, 19.0, 84.0, 67.0),
+    "vit": (15, 58.0, 816.0, 603.0),
+}
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    for model, (L, srv, nano, tx2) in TABLE2.items():
+        prof = b[model]
+        costs = prof.costs
+        with timed() as tb:
+            got_srv = float(prof.latency_ms(0, L, 1, 30))
+        got_nano = costs.mobile_latency_ms("nano", L)
+        got_tx2 = costs.mobile_latency_ms("tx2", L)
+        err = max(abs(got_srv - srv) / srv, abs(got_nano - nano) / nano,
+                  abs(got_tx2 - tx2) / tx2)
+        rows.add(f"calibration/table2/{model}", tb["us"],
+                 f"layers={costs.n_layers}/{L};server_ms={got_srv:.1f}/{srv};"
+                 f"nano_ms={got_nano:.0f}/{nano:.0f};"
+                 f"tx2_ms={got_tx2:.0f}/{tx2:.0f};max_rel_err={err:.3f}")

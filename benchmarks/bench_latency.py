@@ -1,0 +1,39 @@
+"""Figs 8-10: end-to-end latency distributions & SLO compliance."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner, plan_gslice, plan_static
+from repro.serving import fleet_fragments, simulate
+
+from benchmarks.common import Rows, book, scenario, timed, PAPER_MODELS
+
+
+def run(rows: Rows, *, quick=False, duration_s=8.0) -> None:
+    b = book()
+    models = PAPER_MODELS[:3] if quick else PAPER_MODELS
+    for scale in (["small"] if quick else ["small", "small_het", "large"]):
+        for model in models:
+            fleet, frags = scenario(model, scale, seed=7)
+            if not frags:
+                continue
+            avg = fleet_fragments(fleet, b, t=42.0, use_average_bw=True)
+            plans = {
+                "graft": GraftPlanner(b).plan(frags),
+                "gslice": plan_gslice(frags, b),
+                "static": plan_static(frags, b, avg_frags=avg),
+            }
+            for name, plan in plans.items():
+                if not np.isfinite(plan.total_resource):
+                    continue
+                with timed() as tb:
+                    r = simulate(plan, fleet, b, duration_s=duration_s,
+                                 t0=42.0,
+                                 use_average_partition=(name == "static"))
+                lat = r.all_latencies()
+                if len(lat) == 0:
+                    continue
+                p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+                rows.add(f"latency/{scale}/{model}/{name}", tb["us"],
+                         f"p50={p50:.0f};p95={p95:.0f};p99={p99:.0f};"
+                         f"viol={r.violation_rate():.3f}")

@@ -1,0 +1,26 @@
+"""Fig. 18: massive-scale simulation (hundreds-thousands of fragments),
+merging threshold 0.01 per §5.8."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner, plan_gslice
+
+from benchmarks.common import Rows, book, timed, PAPER_MODELS
+from benchmarks.bench_merging import _frag_population
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    n = 200 if quick else 1000
+    for model in (PAPER_MODELS[:2] if quick else PAPER_MODELS):
+        frags = _frag_population(model, b, n=n, seed=13)
+        with timed() as tb:
+            g = GraftPlanner(b, merging_threshold=0.01).plan(frags)
+        gs = plan_gslice(frags, b)
+        gsp = plan_gslice(frags, b, merge_uniform=True)
+        rows.add(f"massive/fig18/{model}/n{n}", tb["us"],
+                 f"graft={g.total_resource:.0f};gslice={gs.total_resource:.0f};"
+                 f"gslice+={gsp.total_resource:.0f};"
+                 f"gslice_over_graft={gs.total_resource/max(g.total_resource,1e-9):.2f}x;"
+                 f"n_merged={g.n_fragments_merged}")

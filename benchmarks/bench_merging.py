@@ -1,0 +1,59 @@
+"""Figs 13-15: merging strategies (none / uniform / uniform+), threshold
+sensitivity, and fragment-count reduction."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Fragment, GraftPlanner, merge
+
+from benchmarks.common import Rows, book, rate_for, timed, PAPER_MODELS
+
+
+def _frag_population(model, b, n=50, seed=0):
+    """n fragments with realistic clustering: a few popular partition points,
+    budget jitter (the situation merging exploits)."""
+    rng = np.random.RandomState(seed)
+    L = b[model].costs.n_layers
+    n_pts = max(L // 2, 2)
+    pts = rng.choice(n_pts, size=min(4, n_pts), replace=False)
+    out = []
+    for i in range(n):
+        p = int(rng.choice(pts))
+        base_t = 60.0 + 6.0 * p
+        # budgets are bandwidth-driven and therefore continuous: a third of
+        # the fleet shares quantized budgets (stable networks -> uniform,
+        # mergeable), the rest jitter continuously (what re-alignment, not
+        # uniform merging, has to handle)
+        if rng.rand() < 0.33:
+            t = base_t * (1.0 + 0.02 * rng.randint(0, 3))
+        else:
+            t = base_t * (1.0 + 0.15 * rng.rand())
+        out.append(Fragment(model, p, t, rate_for(model), client=f"m{i}"))
+    return out
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    n = 20 if quick else 50
+    for model in PAPER_MODELS:
+        frags = _frag_population(model, b, n=n, seed=3)
+        base = None
+        for strat, thr in (("none", 0.0), ("uniform", 0.0),
+                           ("uniform+", 0.2)):
+            with timed() as tb:
+                plan = GraftPlanner(b, merge_strategy=strat,
+                                    merging_threshold=thr).plan(frags)
+            res = plan.total_resource
+            if strat == "none":
+                base = res
+            rel = res / base if base else 1.0
+            rows.add(f"merging/fig13/{model}/{strat}", tb["us"],
+                     f"resource={res:.0f};vs_none={rel:.3f};"
+                     f"n_after_merge={plan.n_fragments_merged}")
+        # Fig. 15a: threshold sweep
+        for thr in ([0.1, 0.4] if quick else [0.05, 0.1, 0.2, 0.3, 0.4]):
+            with timed() as tb:
+                plan = GraftPlanner(b, merging_threshold=thr).plan(frags)
+            rows.add(f"merging/fig15/{model}/thr_{thr}", tb["us"],
+                     f"resource={plan.total_resource:.0f};"
+                     f"n_after_merge={plan.n_fragments_merged}")

@@ -1,0 +1,36 @@
+"""Fig. 19 / §5.9: scheduler time & memory vs Optimal's enumeration."""
+from __future__ import annotations
+
+import tracemalloc
+
+import numpy as np
+
+from repro.core import GraftPlanner, plan_optimal
+
+from benchmarks.common import Rows, book, timed, PAPER_MODELS
+from benchmarks.bench_merging import _frag_population
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    counts = [10, 25] if quick else [10, 25, 50]
+    for model in (PAPER_MODELS[:2] if quick else PAPER_MODELS):
+        for n in counts:
+            frags = _frag_population(model, b, n=n, seed=17)
+            tracemalloc.start()
+            with timed() as tb:
+                GraftPlanner(b).plan(frags)
+            _, peak = tracemalloc.get_traced_memory()
+            tracemalloc.stop()
+            rows.add(f"overhead/fig19/{model}/n{n}", tb["us"],
+                     f"time_ms={tb['us']/1e3:.1f};peak_mem_mb={peak/2**20:.1f}")
+        # Optimal at n=8 (its enumeration explodes beyond ~10)
+        frags = _frag_population(model, b, n=8, seed=17)
+        with timed() as tg:
+            GraftPlanner(b, merge_strategy="none").plan(frags)
+        with timed() as to:
+            plan_optimal(frags, b)
+        red = 100 * (1 - tg["us"] / to["us"]) if to["us"] else 0.0
+        rows.add(f"overhead/vs_optimal/{model}/n8", tg["us"],
+                 f"graft_ms={tg['us']/1e3:.1f};optimal_ms={to['us']/1e3:.1f};"
+                 f"time_reduction_pct={red:.1f}")

@@ -1,0 +1,80 @@
+"""Fig. 11: resource with vs without re-partitioning (5 random fragments);
+Fig. 12: re-partition point & GPU share under varying bandwidth / rate."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Fragment, realign, solo_plan
+from repro.core.repartition import GroupPlan
+from repro.serving.neurosurgeon import partition
+from repro.data.traces import synth_5g_trace
+
+from benchmarks.common import Rows, book, rate_for, timed, PAPER_MODELS
+
+
+def _random_frags(model, b, n=5, seed=0):
+    prof = b[model]
+    L = prof.costs.n_layers
+    costs = prof.costs
+    rng = np.random.RandomState(seed)
+    tr = synth_5g_trace(seconds=600, seed=seed + 900)
+    out = []
+    slo = 0.95 * costs.mobile_latency_ms("nano", L)
+    for i in range(n):
+        bw = tr.at(float(rng.randint(0, 600)))
+        d = partition(prof, "nano", bw, slo)
+        if d.p >= L:
+            continue
+        out.append(Fragment(model, d.p, max(d.budget_ms, 1.0),
+                            rate_for(model), client=f"r{i}"))
+    return out
+
+
+def run(rows: Rows, *, quick=False, seeds=(1, 2, 3, 4, 5)) -> None:
+    b = book()
+    seeds = seeds[:2] if quick else seeds
+    for model in PAPER_MODELS:
+        ratios = []
+        us = 0.0
+        for seed in seeds:
+            frags = _random_frags(model, b, n=5, seed=seed)
+            if not frags:
+                continue
+            with timed() as tb:
+                with_rp, _ = realign(frags, b[model])
+            us = tb["us"]
+            without = sum(s.resource for s in
+                          filter(None, (solo_plan(f, b[model])
+                                        for f in frags)))
+            if without > 0 and np.isfinite(with_rp):
+                ratios.append(with_rp / without)
+        if ratios:
+            red = 100 * (1 - float(np.mean(ratios)))
+            rows.add(f"repartition/fig11/{model}", us,
+                     f"reduction_pct={red:.1f}")
+
+    # Fig. 12: one varying fragment against four fixed ones (inc)
+    prof = b["inc"]
+    L = prof.costs.n_layers
+    fixed = _random_frags("inc", b, n=4, seed=9)
+    for bw_mbps in ([20, 200] if quick else [10, 50, 100, 200, 400]):
+        slo = 0.95 * prof.costs.mobile_latency_ms("nano", L)
+        d = partition(prof, "nano", bw_mbps * 1e6 / 8, slo)
+        if d.p >= L:
+            continue
+        varying = Fragment("inc", d.p, max(d.budget_ms, 1.0), 30.0,
+                           client="vary")
+        with timed() as tb:
+            res, plans = realign(fixed + [varying], prof)
+        rp = [p.repartition_point for p in plans
+              if isinstance(p, GroupPlan)
+              and any(f.client == "vary" for f in p.fragments)]
+        rows.add(f"repartition/fig12/bw_{bw_mbps}mbps", tb["us"],
+                 f"p={d.p};repartition_point={rp[0] if rp else -1};"
+                 f"resource={res:.0f}")
+    for rate in ([15, 60] if quick else [5, 15, 30, 60, 120]):
+        varying = Fragment("inc", 3, 80.0, float(rate), client="vary")
+        with timed() as tb:
+            res, plans = realign(fixed + [varying], prof)
+        rows.add(f"repartition/fig12/rate_{rate}rps", tb["us"],
+                 f"resource={res:.0f}")

@@ -1,0 +1,61 @@
+"""Table 3 / Fig. 7: resource consumption, Graft vs GSLICE(+)/Static(+)/
+Optimal, small & large scale, homogeneous & heterogeneous fleets."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (GraftPlanner, plan_gslice, plan_static, plan_optimal)
+from repro.serving import fleet_fragments
+
+from benchmarks.common import Rows, book, scenario, timed, PAPER_MODELS
+
+
+def run(rows: Rows, *, seeds=(7, 11, 23), quick=False) -> None:
+    b = book()
+    scales = ["small", "small_het"] if quick else \
+        ["small", "small_het", "large", "large_het"]
+    models = PAPER_MODELS
+    for scale in scales:
+        max_inst = 5 if scale.startswith("large") else 0   # §5.3 bound
+        for model in models:
+            res = {k: [] for k in
+                   ("graft", "gslice", "gslice+", "static", "static+",
+                    "optimal")}
+            times = []
+            for seed in seeds:
+                fleet, frags = scenario(model, scale, seed=seed)
+                if not frags:
+                    continue
+                avg = fleet_fragments(fleet, b, t=42.0, use_average_bw=True)
+                with timed() as tb:
+                    g = GraftPlanner(b, max_instances=max_inst).plan(frags)
+                times.append(tb["us"])
+                res["graft"].append(g.total_resource)
+                res["gslice"].append(
+                    plan_gslice(frags, b, max_instances=max_inst)
+                    .total_resource)
+                res["gslice+"].append(
+                    plan_gslice(frags, b, merge_uniform=True,
+                                max_instances=max_inst).total_resource)
+                res["static"].append(
+                    plan_static(frags, b, avg_frags=avg,
+                                max_instances=max_inst).total_resource)
+                res["static+"].append(
+                    plan_static(frags, b, avg_frags=avg, merge_uniform=True,
+                                max_instances=max_inst).total_resource)
+                if scale == "small" and len(frags) <= 8:
+                    res["optimal"].append(
+                        plan_optimal(frags, b, max_instances=max_inst)
+                        .total_resource)
+            if not res["graft"]:
+                continue
+            graft = float(np.mean(res["graft"]))
+            us = float(np.mean(times))
+            for base in ("gslice", "gslice+", "static", "static+", "optimal"):
+                if not res[base]:
+                    continue
+                other = float(np.mean(res[base]))
+                save = 100 * (1 - graft / other) if other else 0.0
+                rows.add(f"resource/{scale}/{model}/graft_vs_{base}", us,
+                         f"saving_pct={save:.1f};graft={graft:.0f};"
+                         f"{base}={other:.0f}")

@@ -1,0 +1,31 @@
+"""Fig. 20: sensitivity to the SLO ratio (0.5 - 0.9)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner, plan_optimal, default_book
+from repro.serving import make_fleet, fleet_fragments
+
+from benchmarks.common import Rows, book, rate_for, timed
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    ratios = [0.6, 0.8] if quick else [0.5, 0.6, 0.7, 0.8, 0.9]
+    for model in ("inc", "mob"):
+        for ratio in ratios:
+            fleet = make_fleet(model, b, n_nano=4, rate=rate_for(model),
+                               seed=7, slo_ratio=ratio)
+            frags = fleet_fragments(fleet, b, t=42.0)
+            if not frags:
+                rows.add(f"slo/fig20/{model}/ratio_{ratio}", 0.0,
+                         "infeasible=no_partition_point")
+                continue
+            with timed() as tb:
+                g = GraftPlanner(b).plan(frags)
+            o = plan_optimal(frags, b) if len(frags) <= 8 else None
+            norm = g.total_resource / o.total_resource if o and \
+                o.total_resource else float("nan")
+            rows.add(f"slo/fig20/{model}/ratio_{ratio}", tb["us"],
+                     f"graft={g.total_resource:.0f};"
+                     f"vs_optimal={norm:.3f}")

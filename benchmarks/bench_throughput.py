@@ -1,0 +1,40 @@
+"""Fig. 17: max achievable throughput under a resource cap."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner, plan_gslice, plan_static
+
+from benchmarks.common import Rows, book, timed, PAPER_MODELS
+from benchmarks.bench_merging import _frag_population
+
+
+def _max_load(planner_fn, b, model, cap, step=4, max_n=120):
+    """Grow the fragment population until the plan exceeds ``cap`` resource;
+    return the highest aggregate RPS that fits."""
+    best = 0.0
+    for n in range(step, max_n + 1, step):
+        frags = _frag_population(model, b, n=n, seed=11)
+        plan = planner_fn(frags)
+        if not np.isfinite(plan.total_resource) or plan.total_resource > cap:
+            break
+        best = sum(f.q for f in frags)
+    return best
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    cap = 400.0                                            # 4 chips
+    models = PAPER_MODELS[:2] if quick else PAPER_MODELS
+    for model in models:
+        with timed() as tb:
+            graft = _max_load(lambda f: GraftPlanner(b).plan(f), b, model,
+                              cap, step=8 if quick else 4)
+        gslice = _max_load(lambda f: plan_gslice(f, b), b, model, cap,
+                           step=8 if quick else 4)
+        gslicep = _max_load(lambda f: plan_gslice(f, b, merge_uniform=True),
+                            b, model, cap, step=8 if quick else 4)
+        ratio = graft / gslice if gslice else float("inf")
+        rows.add(f"throughput/fig17/{model}", tb["us"],
+                 f"graft_rps={graft:.0f};gslice_rps={gslice:.0f};"
+                 f"gslice+_rps={gslicep:.0f};speedup={ratio:.2f}x")

@@ -1,0 +1,60 @@
+"""Shared benchmark scaffolding.
+
+Every bench emits rows ``(name, us_per_call, derived)`` where us_per_call is
+the scheduler/simulator wall time per invocation and ``derived`` carries the
+paper's metric for that table/figure (resource %, violation rate, ...).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+from repro.core import default_book
+from repro.serving import make_fleet, fleet_fragments
+
+_BOOK = None
+
+PAPER_MODELS = ("inc", "res", "vgg", "mob", "vit")
+
+
+def book():
+    global _BOOK
+    if _BOOK is None:
+        _BOOK = default_book()
+    return _BOOK
+
+
+def rate_for(model: str) -> float:
+    return 1.0 if model == "vit" else 30.0       # §5.1: ViT at 1 RPS
+
+
+def scenario(model: str, scale: str, seed: int = 0, t: float = 42.0):
+    """Paper testbeds -> (fleet, fragments)."""
+    b = book()
+    n = {"small": (4, 0), "small_het": (4, 2),
+         "large": (20, 0), "large_het": (15, 5)}[scale]
+    fleet = make_fleet(model, b, n_nano=n[0], n_tx2=n[1],
+                       rate=rate_for(model), seed=seed)
+    return fleet, fleet_fragments(fleet, b, t=t)
+
+
+class Rows:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+@contextmanager
+def timed():
+    t0 = time.perf_counter()
+    box = {}
+    yield box
+    box["us"] = (time.perf_counter() - t0) * 1e6

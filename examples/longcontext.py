@@ -1,0 +1,53 @@
+"""Long-context decode: why long_500k runs only on sub-quadratic archs.
+
+Decodes N tokens on a reduced RWKV6 (O(1) state), hymba (ring KV + SSM
+state) and dense qwen2 (full KV), printing the decode-state bytes as
+context grows — the long_500k feasibility argument from DESIGN.md §4 in
+runnable form.
+
+  PYTHONPATH=src python examples/longcontext.py --steps 24
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro import models as M
+
+
+def state_bytes(cache) -> int:
+    return sum(np.prod(a.shape) * a.dtype.itemsize
+               for a in jax.tree.leaves(cache))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+    rng = np.random.RandomState(0)
+
+    for arch in ("rwkv6-7b", "hymba-1.5b", "qwen2-0.5b"):
+        cfg = get_smoke_config(arch)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompt = rng.randint(0, cfg.vocab_size, (1, 8)).astype(np.int32)
+        _, cache = M.prefill(params, cfg, prompt,
+                             cache_seq=8 + args.steps)
+        step = jax.jit(lambda c, t: M.decode_step(params, cfg, c, t))
+        tok = prompt[:, -1:]
+        for i in range(args.steps):
+            logits, cache = step(cache, tok)
+            tok = np.argmax(np.asarray(logits[:, -1]), -1)[:, None] \
+                .astype(np.int32)
+        kind = {"ssm": "O(1) recurrent state",
+                "hybrid": f"ring KV (window {cfg.sliding_window}) + SSM state",
+                "dense": "full KV cache (grows with context)"}[cfg.family]
+        print(f"{arch:14s} [{cfg.family:6s}] decode state after "
+              f"{8 + args.steps:4d} ctx: {state_bytes(cache) / 2**10:8.1f} KiB"
+              f"  <- {kind}")
+    print("\nAt 524,288-token context the dense cache scales by ~4000x while"
+          "\nrwkv6/hymba stay constant — hence long_500k's arch policy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Train a small decoder (default ~20M params) for a few hundred steps on
+CPU with the full substrate: data pipeline, AdamW, remat, checkpointing.
+
+  PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig
+from repro import models as M
+from repro.data.tokens import token_batches
+from repro.training import (AdamWConfig, init_opt_state, make_train_step,
+                            save_checkpoint, restore_checkpoint)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="tiny-lm", family="dense", n_layers=4, d_model=384,
+        n_heads=6, n_kv_heads=2, d_ff=1536, vocab_size=8192,
+        dtype="float32", tie_embeddings=True).validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params / 1e6:.1f}M params")
+
+    opt = init_opt_state(params)
+    start = 0
+    if args.resume:
+        params, start = restore_checkpoint(args.ckpt, params)
+        print(f"resumed at step {start}")
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+    data = token_batches(batch=args.batch, seq_len=args.seq,
+                         vocab=cfg.vocab_size, seed=1)
+
+    t0 = time.perf_counter()
+    for i in range(start, start + args.steps):
+        params, opt, m = step_fn(params, opt, next(data))
+        if i % 20 == 0 or i == start + args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  "
+                  f"({dt / max(i - start + 1, 1):.2f}s/step)")
+    save_checkpoint(args.ckpt, params, step=start + args.steps)
+    print(f"checkpoint saved to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

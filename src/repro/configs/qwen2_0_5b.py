@@ -1,0 +1,18 @@
+"""qwen2-0.5b [dense] — GQA, QKV bias. [arXiv:2407.10671]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151_936,
+    attn_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="arXiv:2407.10671 (Qwen2 technical report)",
+).validate()

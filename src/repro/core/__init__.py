@@ -1,0 +1,18 @@
+"""Graft's contribution: DNN re-alignment scheduling for hybrid DL."""
+from repro.core.costmodel import LayerCosts, arch_layer_costs
+from repro.core.fragment import Fragment, merge_fragments
+from repro.core.profiles import PerfProfile, ProfileBook, Allocation, default_book
+from repro.core.merging import merge
+from repro.core.grouping import group_fragments
+from repro.core.repartition import realign, GroupPlan, SoloPlan, solo_plan
+from repro.core.planner import GraftPlanner, ExecutionPlan
+from repro.core.baselines import plan_gslice, plan_static, plan_optimal
+from repro.core.placement import place, Placement
+
+__all__ = [
+    "LayerCosts", "arch_layer_costs", "Fragment", "merge_fragments",
+    "PerfProfile", "ProfileBook", "Allocation", "default_book",
+    "merge", "group_fragments", "realign", "GroupPlan", "SoloPlan",
+    "solo_plan", "GraftPlanner", "ExecutionPlan",
+    "plan_gslice", "plan_static", "plan_optimal", "place", "Placement",
+]

@@ -1,0 +1,94 @@
+"""The paper's five evaluation workloads (Inc / Res / VGG / Mob / ViT) as
+synthesized LayerCosts tables, calibrated against paper Table 2.
+
+The original profiles are measurements of TorchVision models on V100-class
+GPUs under CUDA MPS; those measurements are not reproducible in this
+container, so we synthesize per-layer cost tables whose induced latency
+functions match the paper's published aggregates:
+
+  * layer counts  (Table 2 row 1),
+  * mobile latency on Nano / TX2 at batch 1 (rows 2-3),
+  * server latency at GPU-share 30, batch 1 (row 4),
+  * activation-size profiles that reproduce the paper's partitioning
+    behaviour (Fig. 6): Mob's layer 1 shrinks activations by 71 %, Res/Mob/
+    ViT polarise, Inception/VGG spread out.
+
+Batching behaviour: per layer, latency_l(b, share) =
+  max(b * flops_l / C_f, mem_l / C_m) / share
+so batch-1 latency is memory/overhead-bound (matching the paper's Fig. 4
+discreteness) with a compute crossover around batch ~8.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.costmodel import (LayerCosts, PEAK_FLOPS, HBM_BW,
+                                  COMPUTE_EFF, MEMORY_EFF)
+
+CF = PEAK_FLOPS * COMPUTE_EFF
+CM = HBM_BW * MEMORY_EFF
+
+# name: (n_layers, server_ms @ share .30 batch 1, nano_ms, tx2_ms,
+#        crossover batch, act profile)
+_SPECS = {
+    # act profile: relative activation size at each boundary (len L+1),
+    # scaled to input_bytes at boundary 0.
+    "inc": (17, 29.0, 165.0, 94.0, 8),
+    "res": (16, 30.0, 226.0, 114.0, 6),
+    "vgg": (6, 6.0, 147.0, 77.0, 10),
+    "mob": (18, 19.0, 84.0, 67.0, 8),
+    "vit": (15, 58.0, 816.0, 603.0, 12),
+}
+
+INPUT_BYTES = 588e3
+
+
+def _act_profile(name: str, L: int) -> np.ndarray:
+    """Relative activation bytes at boundaries 0..L (1.0 = input size)."""
+    if name == "inc":      # gradual CNN pyramid
+        prof = np.concatenate([[1.0, 1.45, 0.9], np.geomspace(0.8, 0.02, L - 2)])
+    elif name == "res":    # sharp early reduction -> polarised partitioning
+        prof = np.concatenate([[1.0, 0.35], np.geomspace(0.33, 0.02, L - 1)])
+    elif name == "vgg":    # big early activations, few layers
+        prof = np.array([1.0, 1.8, 0.9, 0.45, 0.2, 0.05, 0.01])
+    elif name == "mob":    # paper: layer 1 cuts 71.1% vs raw input
+        prof = np.concatenate([[1.0, 0.289], np.geomspace(0.27, 0.015, L - 1)])
+    elif name == "vit":    # token stream: constant-ish width
+        prof = np.concatenate([[1.0], np.full(L, 0.52)])
+    else:
+        raise KeyError(name)
+    assert len(prof) == L + 1
+    return prof
+
+
+def _layer_weights(name: str, L: int) -> np.ndarray:
+    """Relative per-layer cost distribution (sums to 1)."""
+    rng = np.random.RandomState(hash(name) % 2**31)
+    if name == "vgg":
+        w = np.array([0.8, 1.0, 1.1, 1.2, 1.5, 2.2])      # fc-heavy tail
+    elif name == "vit":
+        w = np.concatenate([[1.4], np.full(L - 1, 1.0)])  # patch-embed block
+    else:
+        w = 0.7 + 0.6 * rng.rand(L)                       # mild heterogeneity
+    return w / w.sum()
+
+
+def paper_layer_costs(name: str) -> LayerCosts:
+    L, server_ms, nano_ms, tx2_ms, bstar = _SPECS[name]
+    wdist = _layer_weights(name, L)
+    # memory term per layer: at share .30 batch 1, sum_l (mem_l/CM)/.30 = server_ms
+    mem = wdist * (server_ms / 1e3) * 0.30 * CM
+    # compute term: crossover at batch bstar -> b*flops/CF == mem/CM
+    flops = mem * (CF / CM) / bstar
+    act = _act_profile(name, L) * INPUT_BYTES
+    mobile_nano = wdist * (nano_ms / 1e3)                 # seconds per layer
+    mobile_tx2 = wdist * (tx2_ms / 1e3)
+    return LayerCosts(
+        name=name, n_layers=L, flops_per_item=flops, weight_bytes=mem,
+        act_bytes=act, mobile_flops=flops,                # placeholder; see mobile_ms
+        input_bytes=INPUT_BYTES,
+        mobile_ms={"nano": mobile_nano * 1e3, "tx2": mobile_tx2 * 1e3},
+    )
+
+
+PAPER_MODELS = tuple(_SPECS)

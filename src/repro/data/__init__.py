@@ -1,0 +1,4 @@
+from repro.data.traces import BandwidthTrace, synth_5g_trace
+from repro.data.tokens import token_batches
+
+__all__ = ["BandwidthTrace", "synth_5g_trace", "token_batches"]

@@ -1,0 +1,23 @@
+"""Synthetic token pipeline for the training example / train_step dry-run.
+
+A deterministic, infinite stream of (tokens, labels) batches — a zipfian
+unigram source so losses are non-degenerate, double-buffered via a
+generator (the substrate a real loader would slot into).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+def token_batches(*, batch: int, seq_len: int, vocab: int,
+                  seed: int = 0) -> Iterator[dict]:
+    rng = np.random.RandomState(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks ** 1.1
+    probs /= probs.sum()
+    while True:
+        toks = rng.choice(vocab, size=(batch, seq_len + 1), p=probs)
+        yield {"tokens": toks[:, :-1].astype(np.int32),
+               "labels": toks[:, 1:].astype(np.int32)}

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (
+    param_pspec, batch_axes_for, params_shardings, cache_shardings,
+    batch_shardings, ShardingRules,
+)
+
+__all__ = ["param_pspec", "batch_axes_for", "params_shardings",
+           "cache_shardings", "batch_shardings", "ShardingRules"]

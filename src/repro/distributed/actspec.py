@@ -1,0 +1,85 @@
+"""Residual-stream sharding constraints (a hook the models call).
+
+GSPMD's global sharding assignment can drop batch sharding inside deep
+layer scans (observed: hymba train activations lowered as [256,4096,200] —
+batch replicated, features sharded — inflating per-device activation
+memory 16x and turning the layer scan's resharding into TB-scale
+collective-permutes). Anchoring the residual stream's batch dim after
+every block pins the propagation.
+
+The hook is a no-op unless a spec is installed (CPU tests/examples see
+zero overhead); the launcher installs P(batch_axes, UNCONSTRAINED,
+UNCONSTRAINED) under the production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def set_residual_spec(spec) -> None:
+    """spec: jax.sharding.PartitionSpec (with UNCONSTRAINED entries for the
+    dims GSPMD should keep solving), or None to disable."""
+    _state.spec = spec
+
+
+def get_residual_spec():
+    return getattr(_state, "spec", None)
+
+
+@contextlib.contextmanager
+def residual_spec(spec):
+    prev = get_residual_spec()
+    set_residual_spec(spec)
+    try:
+        yield
+    finally:
+        set_residual_spec(prev)
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    """Apply the installed constraint to a (B, S, d) residual tensor."""
+    spec = get_residual_spec()
+    if spec is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Anchor ONLY the leading batch dim of an arbitrary-rank tensor (the
+    head-split q/k/v tensors inside attention — GSPMD otherwise sometimes
+    swaps to batch-replicated/head-sharded layouts mid-block, paying
+    (B,S,d)-sized reshard all-reduces per layer)."""
+    spec = get_residual_spec()
+    if spec is None or x.ndim < 2:
+        return x
+    from jax.sharding import PartitionSpec as P
+    batch_entry = tuple(spec)[0]
+    parts = [batch_entry] + [P.UNCONSTRAINED] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+# ---------------------------------------------------------------------------
+# Mesh hook for shard_map-based layers (expert-parallel MoE)
+# ---------------------------------------------------------------------------
+
+def set_moe_mesh(mesh) -> None:
+    _state.moe_mesh = mesh
+
+
+def get_moe_mesh():
+    return getattr(_state, "moe_mesh", None)
+
+
+@contextlib.contextmanager
+def moe_mesh(mesh):
+    prev = get_moe_mesh()
+    set_moe_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_moe_mesh(prev)

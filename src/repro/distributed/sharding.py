@@ -1,0 +1,267 @@
+"""GSPMD sharding rules for every (architecture x workload shape).
+
+Baseline scheme (the §Perf hillclimb iterates on this):
+
+  * tensor parallelism over the ``model`` axis: column-parallel up
+    projections (last dim), row-parallel down projections (first non-layer
+    dim), vocab-parallel embedding/lm-head;
+  * FSDP-style weight sharding over the ``data`` axis on the non-TP dim of
+    each matrix (2-D sharded weights);
+  * batch over ('pod','data') when divisible; long-context decode (batch 1)
+    shards the KV-cache/seq axis over the batch axes instead (sequence/
+    context parallelism for flash-decode);
+  * MoE expert weights: experts replicated across ``data``? No — experts
+    sharded over ``model`` on the ffn dim (TP-in-expert) in the baseline;
+    expert-parallel all-to-all is a recorded §Perf alternative.
+
+Everything returns PartitionSpecs; callers wrap in NamedSharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding, Mesh
+
+from repro.config import ModelConfig, ShapeConfig
+
+PyTree = Any
+
+# leaf-name -> role
+COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_r", "w_k",
+                "w_v", "w_g", "wa", "w_dt", "w_B", "w_C"}
+ROW_PARALLEL = {"wo", "w_down", "w_out", "wb"}
+MODEL_BIAS = {"bq", "bk", "bv", "b_up"}
+REPLICATED = {"router", "w0", "dt_bias", "A_log", "u", "ln_x", "scale",
+              "bias", "b_down", "gate_attn", "gate_mlp", "conv",
+              "mu_r", "mu_k", "mu_v", "mu_w", "mu_g", "q_norm", "k_norm",
+              "step"}
+
+
+class ShardingRules:
+    """Baseline rules plus §Perf policy knobs:
+
+    kv_seq_shard — when the KV-head dim does not divide the model axis,
+        shard the cache SEQUENCE dim over 'model' instead of replicating
+        the cache (flash-decode/context-parallel layout). §Perf iter 1.
+    tp — False replicates params (no tensor parallelism) and leans on
+        batch/sequence sharding only; right for d_model << axis-size
+        models where per-shard matmuls degenerate and GSPMD pays
+        per-layer activation collectives. §Perf iter 2.
+    seq_shard_activations — shard the seq dim of (B,S) inputs over
+        'model' (sequence parallelism for the non-TP policy).
+    """
+
+    def __init__(self, mesh: Mesh, *, fsdp: bool = True, tp: bool = True,
+                 kv_seq_shard: bool = False,
+                 seq_shard_activations: bool = False):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.tp = tp
+        self.kv_seq_shard = kv_seq_shard
+        self.seq_shard_activations = seq_shard_activations
+        self.axes = mesh.axis_names
+        self.batch_axes = tuple(a for a in ("pod", "data") if a in self.axes)
+
+    def _fsdp_axis(self):
+        return "data" if (self.fsdp and "data" in self.axes) else None
+
+    def _model_axis(self):
+        return "model" if self.tp else None
+
+    # ------------------------------------------------------------- params
+    def param_spec(self, path, leaf) -> P:
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name in REPLICATED or nd == 0:
+            return P()
+        if not self.tp:
+            # FSDP-only: shard the largest dim over 'data'
+            if nd >= 2:
+                return _lead(P(self._fsdp_axis()), nd - 2)
+            return P()
+        if name == "embed":                      # (V, d) vocab-parallel
+            return P("model", None)
+        if name == "lm_head":                    # (d, V)
+            return P(self._fsdp_axis(), "model")
+        if name in MODEL_BIAS:
+            return _lead(P("model"), nd - 1)
+        if name in COL_PARALLEL and nd >= 2:
+            return _lead(P(self._fsdp_axis(), "model"), nd - 2)
+        if name in ROW_PARALLEL and nd >= 2:
+            return _lead(P("model", self._fsdp_axis()), nd - 2)
+        return P()
+
+    def params_shardings(self, params_sds: PyTree) -> PyTree:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(
+                self.mesh, _fit_spec(self.param_spec(p, l), l.shape, self.mesh)),
+            params_sds)
+
+    # ------------------------------------------------------------- batch
+    def batch_dim_axes(self, batch_size: int):
+        """Mesh axes to shard the batch dim over (largest divisible prefix)."""
+        axes = []
+        prod = 1
+        for a in self.batch_axes:
+            n = self.mesh.shape[a]
+            if batch_size % (prod * n) == 0:
+                axes.append(a)
+                prod *= n
+        return tuple(axes)
+
+    def data_spec(self, batch_size: int, ndim: int,
+                  seq_axis: Optional[int] = None) -> P:
+        """Spec for (B, ...) arrays; if B unshardable and seq_axis given,
+        shard that axis instead (context parallelism)."""
+        ax = self.batch_dim_axes(batch_size)
+        if ax:
+            return _lead(P(ax), 0, total=ndim)
+        if seq_axis is not None:
+            parts = [None] * ndim
+            parts[seq_axis] = self.batch_axes
+            return P(*parts)
+        return P(*([None] * ndim))
+
+    def batch_shardings(self, batch_sds: PyTree) -> PyTree:
+        def spec(_, l):
+            B = l.shape[0]
+            s = self.data_spec(B, l.ndim)
+            if (self.seq_shard_activations and l.ndim >= 2
+                    and l.shape[1] > 1):
+                parts = list(s) + [None] * (l.ndim - len(s))
+                parts[1] = "model"
+                s = P(*parts)
+            return NamedSharding(self.mesh, _fit_spec(s, l.shape, self.mesh))
+        return jax.tree_util.tree_map_with_path(spec, batch_sds)
+
+    # ------------------------------------------------------------- caches
+    def cache_spec(self, path, leaf) -> P:
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name == "pos":                         # (B,)
+            return self.data_spec(leaf.shape[0], 1)
+        if name == "kv_pos":                      # (B, Sc)
+            return self.data_spec(leaf.shape[0], 2, seq_axis=1)
+        if name in ("k_scale", "v_scale"):        # (L, B, Sc, KV)
+            B, KV = leaf.shape[1], leaf.shape[3]
+            bax = self.batch_dim_axes(B)
+            n_model = self.mesh.shape.get("model", 1)
+            if self.kv_seq_shard and KV % n_model != 0:
+                if bax:
+                    return P(None, bax, "model", None)
+                return P(None, None, (*self.batch_axes, "model"), None)
+            return P(None, bax if bax else None, None, "model")
+        if name in ("k", "v", "xk", "xv"):        # (L, B, Sc, KV, hd)
+            B, KV = leaf.shape[1], leaf.shape[3]
+            bax = self.batch_dim_axes(B)
+            n_model = self.mesh.shape.get("model", 1)
+            if self.kv_seq_shard and KV % n_model != 0:
+                # KV heads can't split the model axis: shard the cache
+                # sequence instead of replicating it (flash-decode layout)
+                if bax:
+                    return P(None, bax, "model", None, None)
+                return P(None, None, (*self.batch_axes, "model"), None, None)
+            if bax:
+                return P(None, bax, None, "model", None)
+            return P(None, None, self.batch_axes, "model", None)
+        if name in ("img_k", "img_v"):            # (G, B, Timg, KV, hd)
+            B = leaf.shape[1]
+            bax = self.batch_dim_axes(B)
+            return P(None, bax if bax else None, None, "model", None)
+        if name == "wkv":                         # (L, B, H, hd, hd)
+            B = leaf.shape[1]
+            bax = self.batch_dim_axes(B)
+            if bax:
+                return P(None, bax, "model", None, None)
+            return P(None, None, self.batch_axes, "model", None)
+        if name in ("shift_tm", "shift_cm"):      # (L, B, 1, d)
+            B = leaf.shape[1]
+            bax = self.batch_dim_axes(B)
+            return P(None, bax if bax else None, None, "model")
+        if name == "ssm_conv":                    # (L, B, cw-1, d_in)
+            B = leaf.shape[1]
+            bax = self.batch_dim_axes(B)
+            return P(None, bax if bax else None, None, "model")
+        if name == "ssm_scan":                    # (L, B, H, hd, N)
+            B = leaf.shape[1]
+            bax = self.batch_dim_axes(B)
+            if bax:
+                return P(None, bax, "model", None, None)
+            return P(None, None, self.batch_axes, "model", None)
+        return P(*([None] * nd))
+
+    def cache_shardings(self, cache_sds: PyTree) -> PyTree:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(
+                self.mesh, _fit_spec(self.cache_spec(p, l), l.shape, self.mesh)),
+            cache_sds)
+
+    # ------------------------------------------------------------- opt
+    def opt_shardings(self, opt_sds: PyTree, params_sds: PyTree) -> PyTree:
+        pshard = self.params_shardings(params_sds)
+        return {
+            "m": pshard, "v": pshard,
+            "step": NamedSharding(self.mesh, P()),
+        }
+
+
+def _fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the dim — explicit
+    in_shardings demand exact divisibility. Dropped axes mean replication
+    (visible in the roofline as extra memory/collectives; §Perf target)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, parts):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            n = mesh.shape[a]
+            if dim % (prod * n) == 0:
+                kept.append(a)
+                prod *= n
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        key = getattr(k, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _lead(spec: P, n_lead: int, total: Optional[int] = None) -> P:
+    parts = [None] * n_lead + list(spec)
+    if total is not None:
+        parts += [None] * (total - len(parts))
+    return P(*parts)
+
+
+# convenience wrappers -------------------------------------------------------
+
+def param_pspec(mesh, params_sds, *, fsdp=True):
+    return ShardingRules(mesh, fsdp=fsdp).params_shardings(params_sds)
+
+
+def batch_axes_for(mesh, batch_size):
+    return ShardingRules(mesh).batch_dim_axes(batch_size)
+
+
+def params_shardings(mesh, sds, **kw):
+    return ShardingRules(mesh, **kw).params_shardings(sds)
+
+
+def cache_shardings(mesh, sds, **kw):
+    return ShardingRules(mesh, **kw).cache_shardings(sds)
+
+
+def batch_shardings(mesh, sds, **kw):
+    return ShardingRules(mesh, **kw).batch_shardings(sds)

@@ -1,0 +1,161 @@
+"""Dispatching wrappers over the Pallas kernels and their jnp references.
+
+The models call these entry points; the implementation is selected by
+``set_default_impl`` / the ``impl=`` kwarg:
+
+  * ``reference``         — chunked pure-jnp (CPU execution, dry-run lowering)
+  * ``pallas``            — compiled Pallas TPU kernel (the deployment target)
+  * ``pallas_interpret``  — Pallas kernel body interpreted on CPU (tests)
+  * ``naive``             — full-materialisation oracle (small tests only)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.rwkv6_scan import wkv6_scan
+from repro.kernels.ssm_scan import ssm_scan
+
+Array = jax.Array
+
+IMPLS = ("reference", "pallas", "pallas_interpret", "naive")
+
+_state = threading.local()
+
+
+def set_default_impl(impl: str) -> None:
+    assert impl in IMPLS, impl
+    _state.impl = impl
+
+
+def get_default_impl() -> str:
+    return getattr(_state, "impl", "reference")
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    prev = get_default_impl()
+    set_default_impl(impl)
+    try:
+        yield
+    finally:
+        set_default_impl(prev)
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return impl or get_default_impl()
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention(q: Array, k: Array, v: Array, *,
+              causal: bool = True, window: int = 0,
+              scale: Optional[float] = None,
+              impl: Optional[str] = None) -> Array:
+    """Prefill/training attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
+    impl = _resolve(impl)
+    if impl == "naive":
+        return _ref.ref_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+    if impl == "reference":
+        return _ref.chunked_attention(q, k, v, causal=causal, window=window,
+                                      scale=scale)
+    interp = impl == "pallas_interpret"
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq = _pick_block(Sq, 256)
+    bk = _pick_block(Sk, 256)
+    # the trainable (custom_vjp) variant so jax.grad flows through the
+    # Pallas fwd/bwd kernels rather than failing to differentiate pallas_call
+    from repro.kernels.flash_attention_bwd import flash_attention_trainable
+    return flash_attention_trainable(q, k, v, causal, window, scale,
+                                     bq, bk, interp)
+
+
+def attend_cache(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
+                 window: int = 0, scale: Optional[float] = None,
+                 impl: Optional[str] = None) -> Array:
+    """Single-token decode attention against a (possibly ring-buffer) cache.
+
+    q (B,1,H,hd), k/v (B,Sk,KV,hd), q_pos (B,), kv_pos (B,Sk).
+    """
+    impl = _resolve(impl)
+    if impl in ("naive", "reference"):
+        return _ref.ref_attention(q, k, v, q_pos=q_pos[:, None],
+                                  kv_pos=kv_pos, causal=True, window=window,
+                                  scale=scale)
+    interp = impl == "pallas_interpret"
+    bk = _pick_block(k.shape[1], 512)
+    return decode_attention(q, k, v, q_pos, kv_pos, window=window,
+                            scale=scale, block_k=bk, interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+def wkv6(r, k, v, w, u, state, *, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "naive":
+        return _ref.ref_wkv6(r, k, v, w, u, state)
+    if impl == "reference":
+        return _ref.chunked_wkv6(r, k, v, w, u, state,
+                                 chunk=_pick_block(r.shape[1], 32))
+    interp = impl == "pallas_interpret"
+    return wkv6_scan(r, k, v, w, u, state,
+                     chunk=_pick_block(r.shape[1], 32), interpret=interp)
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """One-token WKV6 update (decode path; recurrence is trivial here).
+
+    r,k,v,w: (B,1,H,hd); state (B,H,hd,hd) fp32.
+    """
+    rt, kt, vt, wt = (x[:, 0].astype(jnp.float32) for x in (r, k, v, w))
+    wt = jnp.exp(jnp.clip(jnp.log(jnp.clip(wt, 1e-12, 1.0)), -2.5, -1e-6))
+    kv = kt[..., :, None] * vt[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+    new = wt[..., :, None] * state + kv
+    return o[:, None].astype(r.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Selective SSM scan
+# ---------------------------------------------------------------------------
+
+def ssm(x, dt, A, Bm, Cm, state, *, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "naive":
+        return _ref.ref_ssm_scan(x, dt, A, Bm, Cm, state)
+    if impl == "reference":
+        return _ref.chunked_ssm_scan(x, dt, A, Bm, Cm, state,
+                                     chunk=_pick_block(x.shape[1], 32))
+    interp = impl == "pallas_interpret"
+    return ssm_scan(x, dt, A, Bm, Cm, state,
+                    chunk=_pick_block(x.shape[1], 32), interpret=interp)
+
+
+def ssm_step(x, dt, A, Bm, Cm, state):
+    """One-token SSM update. x (B,1,H,hd); dt (B,1,H); Bm/Cm (B,1,N)."""
+    xt = x[:, 0].astype(jnp.float32)
+    dtt = dt[:, 0].astype(jnp.float32)
+    bt, ct = Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32)
+    a = jnp.exp(jnp.clip(dtt * A[None], -2.5, 0.0))
+    h = a[..., None, None] * state + (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+    y = jnp.einsum("bhdn,bn->bhd", h, ct)
+    return y[:, None].astype(x.dtype), h
+
+
+def _pick_block(size: int, preferred: int) -> int:
+    b = min(preferred, size)
+    while size % b:
+        b -= 1
+    return max(b, 1)

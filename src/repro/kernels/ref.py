@@ -1,0 +1,294 @@
+"""Pure-jnp oracles for every Pallas kernel, plus memory-bounded chunked
+reference implementations used by the models on CPU and in the dry-run.
+
+Conventions
+-----------
+q:        (B, Sq, H, hd)
+k, v:     (B, Sk, KV, hd)           (GQA: KV divides H)
+q_pos:    (B, Sq) int32 global positions of the queries
+kv_pos:   (B, Sk) int32 global positions of the keys; -1 marks unwritten slots
+window:   0 = full (causal) attention, W>0 = only kv with q_pos-kv_pos < W
+causal:   mask kv_pos > q_pos (False for encoder/cross attention)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+# Per-step log-decay clamp shared by the recurrent kernels (WKV6 / SSM).
+# Bounds the within-chunk cumulative decay so the matmul-form chunked
+# re-association (which divides by cumulative products) stays inside fp32
+# range: |chunk * LOG_DECAY_MIN| = 32 * 2.5 = 80, exp(80) ~ 5.5e34 < fp32 max.
+LOG_DECAY_MIN = -2.5
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """(B,Sq,H,hd) x (B,Sk,KV,hd) -> (B, H, Sq, Sk) with GQA grouping."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    gs = H // KV
+    qg = q.reshape(B, Sq, KV, gs, hd)
+    s = jnp.einsum("bqgsd,bkgd->bgsqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    return s.reshape(B, H, Sq, k.shape[1])
+
+
+def _mask(q_pos: Array, kv_pos: Array, *, causal: bool, window: int) -> Array:
+    """(B, Sq, Sk) boolean validity mask."""
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    m = kp >= 0
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= (qp - kp) < window
+    return m
+
+
+def ref_attention(q: Array, k: Array, v: Array, *,
+                  q_pos: Optional[Array] = None,
+                  kv_pos: Optional[Array] = None,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> Array:
+    """Naive full-materialisation attention — the oracle."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    if kv_pos is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    scale = scale if scale is not None else hd ** -0.5
+    s = _gqa_scores(q, k) * scale                       # (B,H,Sq,Sk) fp32
+    m = _mask(q_pos, kv_pos, causal=causal, window=window)[:, None]
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid kv produce uniform junk; zero them for determinism
+    p = jnp.where(m.any(axis=-1, keepdims=True), p, 0.0)
+    gs = H // KV
+    pv = p.reshape(B, KV, gs, Sq, Sk)
+    o = jnp.einsum("bgsqk,bkgd->bqgsd", pv, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *,
+                      q_pos: Optional[Array] = None,
+                      kv_pos: Optional[Array] = None,
+                      causal: bool = True, window: int = 0,
+                      scale: Optional[float] = None,
+                      q_chunk: int = 1024) -> Array:
+    """Memory-bounded reference: scan over query chunks, full softmax inside.
+
+    Peak score memory is (B, H, q_chunk, Sk) instead of (B, H, Sq, Sk).
+    Used as the model-side attention on CPU and in the dry-run.
+    """
+    B, Sq, H, hd = q.shape
+    if Sq <= q_chunk:
+        return ref_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                             causal=causal, window=window, scale=scale)
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    if kv_pos is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(k.shape[1], dtype=jnp.int32)[None],
+                                  (B, k.shape[1]))
+    pad = (-Sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=0)
+    n = q.shape[1] // q_chunk
+    qs = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        qc, qpc = xs
+        o = ref_attention(qc, k, v, q_pos=qpc, kv_pos=kv_pos,
+                          causal=causal, window=window, scale=scale)
+        return carry, o
+
+    _, outs = jax.lax.scan(body, None, (qs, qp))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n * q_chunk, H, hd)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) WKV oracle
+# ---------------------------------------------------------------------------
+
+def ref_wkv6(r: Array, k: Array, v: Array, w: Array, u: Array,
+             state: Optional[Array] = None) -> tuple[Array, Array]:
+    """Token-by-token WKV6 recurrence (the oracle).
+
+    r,k,v,w: (B, T, H, hd); w in (0,1) is the data-dependent per-channel decay;
+    u: (H, hd) learned bonus; state: (B, H, hd, hd) carrying S (k-dim x v-dim).
+
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+    w is clamped to [exp(LOG_DECAY_MIN), 1) — the shared decay clamp.
+    Returns (o (B,T,H,hd), final state).
+    """
+    B, T, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                                # (B,H,hd) each
+        wt = jnp.exp(jnp.clip(jnp.log(jnp.clip(wt, 1e-12, 1.0)),
+                              LOG_DECAY_MIN, -1e-6))
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hd,hd)
+        o = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, o
+
+    seq = tuple(x.transpose(1, 0, 2, 3).astype(jnp.float32)
+                for x in (r, k, v, w))
+    state, o = jax.lax.scan(step, state, seq)
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def chunked_wkv6(r: Array, k: Array, v: Array, w: Array, u: Array,
+                 state: Optional[Array] = None,
+                 chunk: int = 32) -> tuple[Array, Array]:
+    """Matmul-form chunked WKV6 (the algorithm the Pallas kernel implements).
+
+    Within a chunk with cumulative decay P_t = prod_{s<=t} w_s:
+      o_t = (r_t * P_{t-1}) @ S_in
+            + sum_{s<t} ((r_t * P_{t-1} / P_s) . k_s) v_s
+            + (r_t * u * k_t) @ v_t
+      S_out = diag(P_T) S_in + (k_chunk * (P_T / P_s))^T v_chunk
+    """
+    B, T, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    pad = (-T) % chunk
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    n = r.shape[1] // chunk
+    resh = lambda x: (x.reshape(B, n, chunk, H, hd)
+                      .transpose(1, 0, 3, 2, 4).astype(jnp.float32))
+    rs, ks, vs, ws = map(resh, (r, k, v, w))               # (n,B,H,C,hd)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def body(S, xs):
+        rc, kc, vc, wc = xs                                # (B,H,C,hd)
+        logw = jnp.clip(jnp.log(jnp.clip(wc, 1e-12, 1.0)),
+                        LOG_DECAY_MIN, -1e-6)
+        wc = jnp.exp(logw)                                 # clamped decay
+        P = jnp.exp(jnp.cumsum(logw, axis=-2))             # P_t, (B,H,C,hd)
+        Pprev = P / wc                                     # P_{t-1}
+        r_t = rc * Pprev
+        k_s = kc / P
+        inter = jnp.einsum("bhck,bhkv->bhcv", r_t, S)
+        scores = jnp.einsum("bhck,bhsk->bhcs", r_t, k_s) * tri[None, None]
+        diag = jnp.sum(rc * (u[None, :, None, :] * kc), axis=-1)  # (B,H,C)
+        intra = jnp.einsum("bhcs,bhsv->bhcv", scores, vc) + diag[..., None] * vc
+        o = inter + intra
+        PT = P[..., -1:, :]                                # (B,H,1,hd)
+        k_carry = kc * (PT / P)
+        S = PT[..., 0, :, None] * S + jnp.einsum("bhsk,bhsv->bhkv", k_carry, vc)
+        return S, o
+
+    state, o = jax.lax.scan(body, state, (rs, ks, vs, ws))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, n * chunk, H, hd)
+    return o[:, :T].astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2-style selective scan oracle (hymba SSM heads)
+# ---------------------------------------------------------------------------
+
+def ref_ssm_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                 state: Optional[Array] = None) -> tuple[Array, Array]:
+    """Per-head scalar-decay selective state-space scan (the oracle).
+
+    x:  (B, T, H, hd)   inner activations split into heads
+    dt: (B, T, H)       softplus'd step sizes
+    A:  (H,)            negative decay rates (A < 0)
+    Bm: (B, T, N)       input->state projection (shared across heads)
+    Cm: (B, T, N)       state->output projection
+    state: (B, H, hd, N)
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * (x_t outer B_t);  y_t = h_t @ C_t
+
+    The per-step log-decay dt*A is clamped to [LOG_DECAY_MIN, 0] — the same
+    clamp all implementations (oracle, chunked, Pallas) apply, keeping the
+    matmul-form chunked re-association inside fp32 range.
+    """
+    B, T, H, hd = x.shape
+    N = Bm.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, hd, N), jnp.float32)
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs
+        a = jnp.exp(jnp.clip(dtt.astype(jnp.float32) * A[None],
+                             LOG_DECAY_MIN, 0.0))          # (B,H)
+        upd = (dtt[..., None].astype(jnp.float32) * xt.astype(jnp.float32))
+        h = a[..., None, None] * h + upd[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhdn,bn->bhd", h, ct)
+        return h, y
+
+    seq = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+           Bm.transpose(1, 0, 2).astype(jnp.float32),
+           Cm.transpose(1, 0, 2).astype(jnp.float32))
+    state, y = jax.lax.scan(step, state, seq)
+    return y.transpose(1, 0, 2, 3).astype(x.dtype), state
+
+
+def chunked_ssm_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                     state: Optional[Array] = None,
+                     chunk: int = 32) -> tuple[Array, Array]:
+    """Matmul-form chunked selective scan (the algorithm of the Pallas kernel).
+
+    With scalar per-head decay a_t = exp(dt_t A), cumulative L_t = prod a_s:
+      y_t = C_t @ (L_t h_0 + sum_{s<=t} (L_t/L_s) dt_s x_s B_s^T)
+    """
+    B, T, H, hd = x.shape
+    N = Bm.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, hd, N), jnp.float32)
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    n = x.shape[1] // chunk
+    xs = x.reshape(B, n, chunk, H, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    dts = dt.reshape(B, n, chunk, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+    Bs = Bm.reshape(B, n, chunk, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cs = Cm.reshape(B, n, chunk, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def body(h, inp):
+        xc, dtc, bc, cc = inp          # (B,H,C,hd), (B,H,C), (B,C,N), (B,C,N)
+        la = jnp.clip(dtc * A[None, :, None], LOG_DECAY_MIN, 0.0)  # (B,H,C)
+        L = jnp.exp(jnp.cumsum(la, axis=-1))                # (B,H,C)
+        # inter-chunk: y_inter = C_t @ (L_t h_0)
+        ch = jnp.einsum("bcn,bhdn->bhcd", cc, h)            # C_t @ h0
+        y_inter = ch * L[..., None]
+        # intra-chunk: scores_ts = (L_t/L_s) dt_s (C_t . B_s), s<=t
+        cb = jnp.einsum("bcn,bsn->bcs", cc, bc)             # (B,C,C)
+        ratio = L[..., :, None] / L[..., None, :]           # (B,H,C,C)
+        scr = cb[:, None] * ratio * dtc[..., None, :] * tri[None, None]
+        y_intra = jnp.einsum("bhcs,bhsd->bhcd", scr, xc)
+        y = y_inter + y_intra
+        # state update
+        LT = L[..., -1:]                                    # (B,H,1)
+        wgt = (LT / L) * dtc                                # (B,H,C)
+        h = LT[..., None] * h + jnp.einsum("bhc,bhcd,bcn->bhdn", wgt, xc, bc)
+        return h, y
+
+    state, y = jax.lax.scan(body, state, (xs, dts, Bs, Cs))
+    y = y.transpose(1, 0, 3, 2, 4).reshape(B, n * chunk, H, hd)
+    return y[:, :T].astype(x.dtype), state

@@ -1,0 +1,107 @@
+"""Chunked RWKV6 (Finch) WKV scan as a Pallas TPU kernel.
+
+TPU adaptation: the token-recurrent WKV update is re-associated into
+matmul-form chunks (see ``ref.chunked_wkv6``) so the MXU does the work:
+each grid step processes one (chunk x head_dim) tile with three
+(C,hd)x(hd,hd)-class matmuls. The (hd x hd) per-head state lives in fp32
+VMEM scratch and persists across the sequential time-chunk grid dimension —
+the TPU grid is executed in order, which is exactly the dependence the
+recurrence needs (no GPU-style inter-block atomics required).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 32
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 o_ref, sout_ref, s_scr, *, chunk: int, hd: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)                    # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                       # (hd,)
+    S = s_scr[...]                                         # (hd, hd) k x v
+
+    logw = jnp.clip(jnp.log(jnp.clip(w, 1e-12, 1.0)), -2.5, -1e-6)
+    w = jnp.exp(logw)                                      # clamped decay
+    P = jnp.exp(jnp.cumsum(logw, axis=0))                  # (C, hd)
+    Pprev = P / w
+    r_t = r * Pprev
+    k_s = k / P
+
+    inter = jax.lax.dot_general(r_t, S, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    scores = jax.lax.dot_general(r_t, k_s, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(jj < ii, scores, 0.0)               # strict lower tri
+    diag = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)
+    intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) + diag * v
+    o_ref[0, 0] = (inter + intra).astype(o_ref.dtype)
+
+    PT = P[-1:, :]                                         # (1, hd)
+    k_carry = k * (PT / P)
+    S_new = PT.T * S + jax.lax.dot_general(
+        k_carry, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = S_new
+
+    @pl.when(ti == pl.num_programs(2) - 1)
+    def _final():
+        sout_ref[0, 0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_scan(r: Array, k: Array, v: Array, w: Array, u: Array,
+              state: Array, *, chunk: int = DEFAULT_CHUNK,
+              interpret: bool = False) -> tuple[Array, Array]:
+    """r,k,v,w: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd) fp32.
+
+    Returns (o (B,T,H,hd), new_state (B,H,hd,hd)).
+    """
+    B, T, H, hd = r.shape
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    tr = lambda x: x.transpose(0, 2, 1, 3)                 # (B,H,T,hd)
+    grid = (B, H, T // c)
+
+    o, s_out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=c, hd=hd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(w), u, state)
+    return o.transpose(0, 2, 1, 3), s_out

@@ -1,0 +1,102 @@
+"""Chunked selective state-space scan (mamba2-style scalar-decay heads) as a
+Pallas TPU kernel — the SSM half of hymba's hybrid blocks.
+
+Same TPU re-association as the WKV kernel: the per-token recurrence
+  h_t = a_t h_{t-1} + dt_t x_t B_t^T,   y_t = h_t C_t
+becomes per-chunk matmuls with cumulative scalar decays; the (hd x N) state
+sits in fp32 VMEM scratch across the sequential time-chunk grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 32
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref,
+                o_ref, sout_ref, s_scr, *, chunk: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)                    # (C, hd)
+    dt = dt_ref[0, 0].astype(jnp.float32).reshape(chunk, 1)  # (C, 1)
+    A = a_ref[0]                                           # scalar
+    Bm = b_ref[0].astype(jnp.float32)                      # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)                      # (C, N)
+    h = s_scr[...]                                         # (hd, N)
+
+    la = jnp.clip(dt * A, -2.5, 0.0)                       # (C,1) log a_t
+    L = jnp.exp(jnp.cumsum(la, axis=0))                    # (C,1)
+    # inter: y_t += L_t * (C_t @ h^T)
+    ch = jax.lax.dot_general(Cm, h, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (C, hd)
+    y = L * ch
+    # intra: scores_ts = (L_t/L_s) dt_s (C_t . B_s) for s<=t
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (C, C)
+    ratio = L / L.reshape(1, chunk)                        # (C, C)
+    scr = cb * ratio * dt.reshape(1, chunk)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scr = jnp.where(jj <= ii, scr, 0.0)
+    y = y + jax.lax.dot_general(scr, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    LT = L[-1:, :]                                         # (1,1)
+    wgt = (LT / L) * dt                                    # (C,1)
+    h_new = LT * h + jax.lax.dot_general(
+        x * wgt, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (hd, N)
+    s_scr[...] = h_new
+
+    @pl.when(ti == pl.num_programs(2) - 1)
+    def _final():
+        sout_ref[0, 0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+             state: Array, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False) -> tuple[Array, Array]:
+    """x: (B,T,H,hd); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,N);
+    state: (B,H,hd,N) fp32. Returns (y (B,T,H,hd), new_state)."""
+    B, T, H, hd = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0
+    grid = (B, H, T // c)
+
+    y, s_out = pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c), lambda b, h, t: (b, h, t)),
+            pl.BlockSpec((1,), lambda b, h, t: (h,)),
+            pl.BlockSpec((1, c, N), lambda b, h, t: (b, t, 0)),
+            pl.BlockSpec((1, c, N), lambda b, h, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A, Bm, Cm, state)
+    return y.transpose(0, 2, 1, 3), s_out

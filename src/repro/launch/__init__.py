@@ -1,0 +1,1 @@
+# launch: production mesh construction, multi-pod dry-run, roofline analysis.

@@ -1,0 +1,60 @@
+"""Serving launcher: plan a fleet of hybrid-DL clients for one architecture,
+place instances on the pod, and report resource/SLO outcomes.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --clients 20
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import (GraftPlanner, plan_gslice, plan_static, place,
+                        default_book)
+from repro.serving import make_fleet, fleet_fragments, simulate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--tx2", type=int, default=0)
+    ap.add_argument("--rate", type=float, default=30.0)
+    ap.add_argument("--t", type=float, default=42.0,
+                    help="trace timestamp to plan at")
+    ap.add_argument("--duration", type=float, default=10.0)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    book = default_book()
+    fleet = make_fleet(args.arch, book, n_nano=args.clients - args.tx2,
+                       n_tx2=args.tx2, rate=args.rate, seed=args.seed)
+    frags = fleet_fragments(fleet, book, t=args.t)
+    if not frags:
+        print("all clients run fully on-device at this instant")
+        return 0
+    print(f"{len(frags)} fragments: "
+          f"{sorted((f.p, round(f.t)) for f in frags)}")
+
+    plan = GraftPlanner(book).plan(frags)
+    gs = plan_gslice(frags, book)
+    print(f"Graft : {plan.total_resource:7.0f} chip-share% "
+          f"({plan.n_fragments_merged} frags after merge, "
+          f"{plan.schedule_time_s * 1e3:.0f} ms to plan)")
+    print(f"GSLICE: {gs.total_resource:7.0f} chip-share%  "
+          f"-> saving {100 * (1 - plan.total_resource / gs.total_resource):.0f}%")
+
+    pl = place(plan)
+    print(f"placement: {pl.n_chips} chips @ {pl.utilization:.0%} mean util")
+    res = simulate(plan, fleet, book, duration_s=args.duration, t0=args.t)
+    lat = res.all_latencies()
+    if len(lat):
+        print(f"e2e latency p50/p95/p99 = {np.percentile(lat, 50):.0f}/"
+              f"{np.percentile(lat, 95):.0f}/{np.percentile(lat, 99):.0f} ms; "
+              f"SLO violations {res.violation_rate():.1%}; "
+              f"drops {sum(res.drops.values())}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

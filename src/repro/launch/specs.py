@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct stand-ins for every entry point — nothing is allocated.
+
+``input_specs(arch, shape)`` returns the exact pytrees the dry-run lowers
+against, covering all three entries:
+
+  train_4k            -> train_step(params, opt_state, batch[, extras])
+  prefill_32k         -> prefill_step(params, tokens[, extras])
+  decode_* / long_*   -> serve_step(params, cache, tokens)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, shape_for
+from repro.configs import get_config, SHAPES
+from repro.models import init_params, init_cache, prefill, decode_step, forward
+from repro.models.stubs import extras_shapes
+from repro.training import make_train_step, init_opt_state
+from repro.training.train_step import lm_loss
+
+PyTree = Any
+
+
+def _sds(tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def params_specs(cfg: ModelConfig) -> PyTree:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return _sds(jax.eval_shape(lambda k: init_params(k, cfg), key))
+
+
+def input_specs(arch: str, shape_name: str, *,
+                kv_cache_dtype: str = "") -> dict:
+    """All entry inputs as ShapeDtypeStructs for (arch, workload shape)."""
+    import dataclasses
+    shape = SHAPES[shape_name]
+    cfg = shape_for(get_config(arch), shape)
+    if kv_cache_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_cache_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    p_sds = params_specs(cfg)
+    ex = dict(extras_shapes(cfg, B)) or None
+    out = {"cfg": cfg, "params": p_sds, "extras": ex}
+
+    if shape.kind == "train":
+        out["opt_state"] = _sds(jax.eval_shape(init_opt_state, p_sds))
+        out["batch"] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:                                    # decode: ONE token + cache(S)
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        out["cache"] = _sds(jax.eval_shape(
+            lambda: init_cache(cfg, B, S)))
+    return out
+
+
+def entry_fn(cfg: ModelConfig, shape: ShapeConfig, *, train_remat=True,
+             ce_impl: str = "onehot", microbatches: int = 1):
+    """The function the dry-run lowers for this workload kind."""
+    if shape.kind == "train":
+        step = make_train_step(cfg, remat=train_remat, ce_impl=ce_impl,
+                               microbatches=microbatches)
+
+        def train_entry(params, opt_state, batch, extras=None):
+            return step(params, opt_state, batch, extras=extras)
+        return train_entry
+
+    if shape.kind == "prefill":
+        def prefill_entry(params, tokens, extras=None):
+            return prefill(params, cfg, tokens, extras=extras)
+        return prefill_entry
+
+    def serve_entry(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+    return serve_entry

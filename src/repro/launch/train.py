@@ -1,0 +1,63 @@
+"""Training launcher: runs the real train loop for a (reduced) arch on the
+local devices, with checkpointing. Full-size configs are exercised via the
+dry-run (`repro.launch.dryrun` lowers train_4k for every arch).
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config, get_config
+from repro import models as M
+from repro.data.tokens import token_batches
+from repro.training import (AdamWConfig, init_opt_state, make_train_step,
+                            save_checkpoint, restore_checkpoint)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (needs a real pod)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n / 1e6:.1f}M params on {jax.device_count()} device(s)")
+
+    opt = init_opt_state(params)
+    start = 0
+    if args.resume and args.ckpt:
+        params, start = restore_checkpoint(args.ckpt, params)
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=args.lr)))
+    data = token_batches(batch=args.batch, seq_len=args.seq,
+                         vocab=cfg.vocab_size, seed=1)
+    extras = M.make_extras(cfg, args.batch)
+
+    t0 = time.perf_counter()
+    for i in range(start, start + args.steps):
+        params, opt, m = step_fn(params, opt, next(data), extras or None)
+        if i % 10 == 0 or i == start + args.steps - 1:
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  "
+                  f"{(time.perf_counter() - t0) / max(i - start + 1, 1):.2f}s/step")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=start + args.steps)
+        print(f"saved {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

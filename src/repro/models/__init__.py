@@ -1,0 +1,14 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+from repro.models.transformer import (
+    init_params, forward, fragment_forward, run_fragment, n_fragment_units,
+    embed_tokens, unembed,
+)
+from repro.models.decode import init_cache, prefill, decode_step, cache_len_for
+from repro.models.stubs import extras_shapes, make_extras
+
+__all__ = [
+    "init_params", "forward", "fragment_forward", "run_fragment",
+    "n_fragment_units", "embed_tokens", "unembed",
+    "init_cache", "prefill", "decode_step", "cache_len_for",
+    "extras_shapes", "make_extras",
+]

@@ -1,0 +1,192 @@
+"""GQA attention block: projections, qk-norm, RoPE, KV-cache management.
+
+Supports the flavours needed by the assigned archs: GQA (any group size),
+qk_norm (qwen3/olmoe), QKV bias (qwen2), sliding-window attention (hymba,
+long_500k overrides), cross-attention (llama-3.2-vision, whisper), and
+ring-buffer KV caches for windowed decode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, rms_head_norm, apply_rope
+
+Array = jax.Array
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, KV * hd, dt),
+        "wv": dense_init(ks[2], d, KV * hd, dt),
+        "wo": dense_init(ks[3], H * hd, d, dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_q(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim_)
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q)
+    return q
+
+
+def _project_kv(p: dict, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
+    B, S, _ = x.shape
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim_)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim_)
+    if "k_norm" in p:
+        k = rms_head_norm(p["k_norm"], k)
+    return k, v
+
+
+def attn_forward(p: dict, cfg: ModelConfig, x: Array, *,
+                 window: int = 0, causal: bool = True,
+                 positions: Optional[Array] = None,
+                 kv_src: Optional[Array] = None,
+                 return_kv: bool = False):
+    """Full-sequence attention (training / prefill / fragment execution).
+
+    kv_src: source sequence for cross-attention (no RoPE applied on cross).
+    return_kv: also return the (rope'd) k, v — used by prefill to fill caches.
+    """
+    from repro.distributed.actspec import constrain_batch
+    B, S, _ = x.shape
+    q = constrain_batch(_project_q(p, cfg, x))
+    cross = kv_src is not None
+    k, v = _project_kv(p, cfg, kv_src if cross else x)
+    k, v = constrain_batch(k), constrain_batch(v)
+    if not cross and cfg.rope_theta > 0:
+        if positions is None:
+            positions = jnp.arange(S, dtype=jnp.int32)[None]
+        from repro.models.layers import rope_freqs
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = ops.attention(q, k, v, causal=causal and not cross,
+                      window=0 if cross else window)
+    out = o.reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def project_cross_kv(p: dict, cfg: ModelConfig, memory: Array):
+    """Precompute cross-attention k/v from encoder/image memory (prefill)."""
+    return _project_kv(p, cfg, memory)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                  n_layers: Optional[int] = None) -> dict:
+    """Stacked (over layers) KV cache. cache_len should already account for
+    sliding windows (ring buffer of size min(seq, window))."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    return {
+        "k": jnp.zeros((L, batch, cache_len, KV, hd), dt),
+        "v": jnp.zeros((L, batch, cache_len, KV, hd), dt),
+    }
+
+
+# ---- int8 KV-cache quantization (beyond-paper §Perf optimization) ---------
+
+def quantize_kv(x: Array) -> tuple[Array, Array]:
+    """(.., S, KV, hd) bf16 -> (int8 values, fp32 absmax scale (.., S, KV))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _write_slot(cache: Array, new: Array, slot: Array) -> Array:
+    """cache (B,Sc,KV,hd), new (B,1,KV,hd), slot (B,) -> updated cache."""
+    def one(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+    return jax.vmap(one)(cache, new, slot)
+
+
+def attn_decode(p: dict, cfg: ModelConfig, x: Array,
+                cache_k: Array, cache_v: Array,
+                pos: Array, kv_pos: Array, *,
+                window: int = 0,
+                cross_kv: Optional[tuple[Array, Array]] = None,
+                scales: Optional[tuple[Array, Array]] = None,
+                ) -> tuple[Array, Array, Array, Optional[tuple]]:
+    """One-token decode. x (B,1,d); cache_k/v (B,Sc,KV,hd); pos (B,);
+    kv_pos (B,Sc). Returns (out (B,1,d), new_k, new_v, new_scales).
+
+    For cross-attention pass cross_kv=(k,v) precomputed at prefill — the
+    cache args are ignored and returned unchanged. ``scales`` carries the
+    (k_scale, v_scale) pair when the cache is int8-quantized.
+    """
+    B = x.shape[0]
+    q = _project_q(p, cfg, x)
+    if cross_kv is not None:
+        k, v = cross_kv
+        o = ops.attention(q, k, v, causal=False)
+        return o.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v, scales
+
+    k_new, v_new = _project_kv(p, cfg, x)
+    if cfg.rope_theta > 0:
+        from repro.models.layers import rope_freqs
+        cos, sin = rope_freqs(cfg, pos[:, None])
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    Sc = cache_k.shape[1]
+    slot = pos % Sc if window else jnp.minimum(pos, Sc - 1)
+    quant = cache_k.dtype == jnp.int8
+    if quant:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        cache_k = _write_slot(cache_k, kq, slot)
+        cache_v = _write_slot(cache_v, vq, slot)
+        k_sc = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice(
+            c, n, (s, 0)))(scales[0], ks, slot)
+        v_sc = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice(
+            c, n, (s, 0)))(scales[1], vs, slot)
+        k_eff = dequantize_kv(cache_k, k_sc, x.dtype)
+        v_eff = dequantize_kv(cache_v, v_sc, x.dtype)
+        scales = (k_sc, v_sc)
+    else:
+        cache_k = _write_slot(cache_k, k_new, slot)
+        cache_v = _write_slot(cache_v, v_new, slot)
+        k_eff, v_eff = cache_k, cache_v
+    o = ops.attend_cache(q, k_eff, v_eff, pos, kv_pos, window=window)
+    return o.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v, scales
+
+
+def update_kv_pos(kv_pos: Array, pos: Array, cache_len: int,
+                  window: int) -> Array:
+    """Track global positions stored in each cache slot (-1 = unwritten)."""
+    slot = pos % cache_len if window else jnp.minimum(pos, cache_len - 1)
+    return jax.vmap(
+        lambda kp, s, pp: kp.at[s].set(pp))(kv_pos, slot, pos)

@@ -1,0 +1,208 @@
+"""Mixture-of-Experts MLP (OLMoE 64e/top-8, Llama4-Scout 16e/top-1+shared).
+
+Three implementations, checked against each other in tests:
+
+  * ``grouped`` (default) — sort-by-expert + fixed-capacity grouped GEMM:
+    tokens are scattered into an (E, C, d) buffer (C = capacity), each
+    expert runs a dense GEMM over its capacity slice, results are gathered
+    back and gate-combined. Compiled FLOPs = capacity_factor x routed FLOPs,
+    which is what a real TPU MoE (megablox-style) costs — so the roofline
+    numbers are honest. Overflowing tokens are dropped (classic GShard
+    capacity semantics); dropped tokens contribute only via the shared
+    expert / residual.
+  * ``dense`` — every expert runs on every token, gate-masked combine.
+    O(E/top_k) overcompute; used as the correctness oracle at smoke scale.
+  * ``expert_parallel`` — shard_map over the 'model' axis: experts stay
+    resident on their shard (no per-layer weight gathers), one psum
+    combines contributions. Selected via ModelConfig.moe_impl; needs the
+    mesh hook (distributed.actspec.moe_mesh) installed.
+
+The router aux (load-balance) loss is returned for the training path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, init_mlp, apply_mlp
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_ff_expert or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e.n_experts, jnp.dtype(jnp.float32)),
+        "w_gate": (jax.random.truncated_normal(
+            ks[1], -3, 3, (e.n_experts, d, f), jnp.float32) * std).astype(dt),
+        "w_up": (jax.random.truncated_normal(
+            ks[2], -3, 3, (e.n_experts, d, f), jnp.float32) * std).astype(dt),
+        "w_down": (jax.random.truncated_normal(
+            ks[3], -3, 3, (e.n_experts, f, d), jnp.float32)
+            * (1.0 / math.sqrt(f))).astype(dt),
+    }
+    if e.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=f * e.n_shared_experts)
+    return p
+
+
+def _route(p: dict, cfg: ModelConfig, xf: Array):
+    """xf (N,d) -> (gates (N,k), eidx (N,k), router_probs (N,E))."""
+    e = cfg.moe
+    logits = xf.astype(jnp.float32) @ p["router"]          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, e.top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, eidx, probs
+
+
+def _aux_loss(probs: Array, eidx: Array, n_experts: int) -> Array:
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    pe = jnp.mean(probs, axis=0)                           # (E,)
+    hits = jax.nn.one_hot(eidx, n_experts, dtype=jnp.float32)  # (N,k,E)
+    fe = jnp.mean(jnp.sum(hits, axis=1), axis=0)
+    return n_experts * jnp.sum(fe * pe)
+
+
+def _expert_ffn(p: dict, cfg: ModelConfig, xs: Array) -> Array:
+    """xs (E, C, d) -> (E, C, d) applying each expert to its slice."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])
+
+
+def moe_forward(p: dict, cfg: ModelConfig, x: Array, *,
+                impl: str = "") -> tuple[Array, Array]:
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar)."""
+    impl = impl or cfg.moe_impl
+    if impl == "expert_parallel":
+        from repro.distributed.actspec import get_moe_mesh
+        mesh = get_moe_mesh()
+        if mesh is not None and cfg.moe.n_experts % mesh.shape["model"] == 0:
+            return moe_forward_expert_parallel(p, cfg, x, mesh=mesh)
+        impl = "grouped"                 # no mesh installed: CPU fallback
+    e = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    N = xf.shape[0]
+    gates, eidx, probs = _route(p, cfg, xf)
+    aux = _aux_loss(probs, eidx, e.n_experts)
+
+    if impl == "dense":
+        h = jnp.einsum("nd,edf->enf", xf, p["w_gate"])
+        h = jax.nn.silu(h) * jnp.einsum("nd,edf->enf", xf, p["w_up"])
+        ye = jnp.einsum("enf,efd->end", h, p["w_down"])    # (E,N,d)
+        combine = jnp.zeros((N, e.n_experts), xf.dtype)
+        combine = jax.vmap(lambda c, i, g: c.at[i].add(g))(combine, eidx,
+                                                           gates.astype(xf.dtype))
+        y = jnp.einsum("ne,end->nd", combine, ye)
+    elif impl == "grouped":
+        k = e.top_k
+        cap = int(math.ceil(N * k / e.n_experts * e.capacity_factor))
+        cap = max(8, -(-cap // 8) * 8)                     # round up to 8
+        cap = min(cap, N * k)
+        flat_e = eidx.reshape(-1)                          # (N*k,)
+        flat_tok = jnp.repeat(jnp.arange(N), k)            # token of each slot
+        flat_gate = gates.reshape(-1)
+        order = jnp.argsort(flat_e)                        # stable
+        se, stok, sg = flat_e[order], flat_tok[order], flat_gate[order]
+        counts = jnp.sum(jax.nn.one_hot(flat_e, e.n_experts,
+                                        dtype=jnp.int32), axis=0)
+        starts = jnp.cumsum(counts) - counts               # exclusive
+        rank = jnp.arange(N * k) - starts[se]
+        keep = rank < cap
+        slot = jnp.where(keep, se * cap + rank, e.n_experts * cap)  # drop slot
+        buf = jnp.zeros((e.n_experts * cap + 1, d), x.dtype)
+        buf = buf.at[slot].set(xf[stok], mode="drop")
+        ye = _expert_ffn(p, cfg, buf[:-1].reshape(e.n_experts, cap, d))
+        ye = jnp.concatenate([ye.reshape(-1, d),
+                              jnp.zeros((1, d), x.dtype)], axis=0)
+        contrib = ye[slot] * sg[:, None].astype(x.dtype)
+        y = jnp.zeros((N, d), x.dtype).at[stok].add(contrib)
+    else:
+        raise ValueError(impl)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], cfg, xf)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert parallelism (shard_map + explicit all_to_all) — §Perf alternative
+# ---------------------------------------------------------------------------
+
+def moe_forward_expert_parallel(p: dict, cfg: ModelConfig, x: Array, *,
+                                mesh, axis: str = "model"
+                                ) -> tuple[Array, Array]:
+    """Expert-parallel MoE via shard_map: experts sharded over ``axis``,
+    each shard computes ONLY its local experts' contributions, combined
+    with one psum — vs the baseline TP-in-expert einsum where FSDP/GSPMD
+    re-gathers the full (E, d, ff) expert weights every layer.
+
+    Tokens are replicated across the expert axis in this mesh (batch is
+    sharded over 'data'), so the dispatch leg of the classic GShard
+    all-to-all is a local slice here and the combine leg is the psum;
+    comm per layer = one (B,S,d) all-reduce instead of O(E*d*ff) weight
+    gathers. Requires E % n_shards == 0.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    e = cfg.moe
+    B, S, d = x.shape
+    n_shards = mesh.shape[axis]
+    assert e.n_experts % n_shards == 0, (e.n_experts, n_shards)
+    E_loc = e.n_experts // n_shards
+    N = B * S
+    k = e.top_k
+    cap = int(math.ceil(N * k / e.n_experts * e.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)
+    cap = min(cap, N * k)
+
+    def body(xl, router, wg, wu, wd):
+        # xl (B,S,d) replicated over `axis`; wg/wu/wd are (E_loc, ...)
+        shard = jax.lax.axis_index(axis)
+        lo = shard * E_loc
+        xf = xl.reshape(-1, d)
+        gates, eidx, probs = _route({"router": router}, cfg, xf)
+        aux = _aux_loss(probs, eidx, e.n_experts)
+        flat_e = eidx.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(N), k)
+        flat_gate = gates.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, stok, sg = flat_e[order], flat_tok[order], flat_gate[order]
+        counts = jnp.sum(jax.nn.one_hot(flat_e, e.n_experts,
+                                        dtype=jnp.int32), axis=0)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(N * k) - starts[se]
+        local = (se >= lo) & (se < lo + E_loc) & (rank < cap)
+        slot = jnp.where(local, (se - lo) * cap + rank, E_loc * cap)
+        buf = jnp.zeros((E_loc * cap + 1, d), xl.dtype)
+        buf = buf.at[slot].set(xf[stok], mode="drop")
+        ys = _expert_ffn({"w_gate": wg, "w_up": wu, "w_down": wd}, cfg,
+                         buf[:-1].reshape(E_loc, cap, d))
+        ye = jnp.concatenate([ys.reshape(-1, d),
+                              jnp.zeros((1, d), xl.dtype)], axis=0)
+        contrib = ye[slot] * sg[:, None].astype(xl.dtype)
+        contrib = jnp.where(local[:, None], contrib, 0.0)
+        y = jnp.zeros((N, d), xl.dtype).at[stok].add(contrib)
+        y = jax.lax.psum(y, axis)                 # combine across experts
+        return y.reshape(B, S, d), aux
+
+    y, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P()),
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], cfg,
+                          x.reshape(-1, d)).reshape(B, S, d)
+    return y, aux

@@ -1,0 +1,130 @@
+"""RWKV6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+Faithful to arXiv:2404.05892 at block level: token-shift interpolation,
+LoRA-parameterised per-channel decay w_t = exp(-exp(w0 + tanh(x Wa) Wb)),
+bonus u, per-head output group-norm, squared-ReLU receptance-gated
+channel-mix. The WKV recurrence runs through the chunked Pallas kernel
+(prefill) or the O(1) step (decode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, rms_head_norm
+
+Array = jax.Array
+
+
+def rwkv_dims(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init_time_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    r = cfg.rwkv
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    mix = lambda i: jnp.full((d,), 0.5, jnp.float32)
+    return {
+        "mu_r": mix(0), "mu_k": mix(1), "mu_v": mix(2),
+        "mu_w": mix(3), "mu_g": mix(4),
+        "w_r": dense_init(ks[0], d, d, dt),
+        "w_k": dense_init(ks[1], d, d, dt),
+        "w_v": dense_init(ks[2], d, d, dt),
+        "w_g": dense_init(ks[3], d, d, dt),
+        "w_o": dense_init(ks[4], d, d, dt),
+        "w0": jnp.full((d,), -1.0, jnp.float32),           # base decay
+        "wa": dense_init(ks[5], d, r.decay_lora, dt),
+        "wb": (jax.random.normal(ks[6], (r.decay_lora, d), jnp.float32)
+               * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[7], (H, hd), jnp.float32) * 0.1),
+        "ln_x": jnp.ones((hd,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_up": dense_init(ks[0], d, f, dt),
+        "w_down": dense_init(ks[1], f, d, dt),
+        "w_r": dense_init(ks[2], d, d, dt),
+    }
+
+
+def _shift(x: Array, carry: Optional[Array]) -> Array:
+    """Token shift: x_{t-1}; carry (B,1,d) is the last token of the previous
+    segment (zeros at sequence start)."""
+    if carry is None:
+        carry = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([carry, x[:, :-1]], axis=1)
+
+
+def _mix(x: Array, xs: Array, mu: Array) -> Array:
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _time_mix_inputs(p: dict, cfg: ModelConfig, x: Array, xs: Array):
+    B, S, d = x.shape
+    H, hd = rwkv_dims(cfg)
+    r = _mix(x, xs, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, xs, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, xs, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, xs, p["mu_g"]) @ p["w_g"])
+    xw = _mix(x, xs, p["mu_w"])
+    dec = p["w0"] + jnp.tanh(xw @ p["wa"]) @ p["wb"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32)))         # (B,S,d) in (0,1)
+    shp = (B, S, H, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            w.reshape(shp), g)
+
+
+def time_mix_forward(p: dict, cfg: ModelConfig, x: Array,
+                     shift_carry: Optional[Array] = None,
+                     wkv_state: Optional[Array] = None,
+                     ) -> tuple[Array, Array, Array]:
+    """Full-seq time-mix. Returns (y, new_shift_carry, new_wkv_state)."""
+    B, S, d = x.shape
+    H, hd = rwkv_dims(cfg)
+    xs = _shift(x, shift_carry)
+    r, k, v, w, g = _time_mix_inputs(p, cfg, x, xs)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    o, wkv_state = ops.wkv6(r, k, v, w, p["u"], wkv_state)
+    o = rms_head_norm(p["ln_x"], o).reshape(B, S, d)
+    y = (o * g) @ p["w_o"]
+    return y, x[:, -1:], wkv_state
+
+
+def time_mix_decode(p: dict, cfg: ModelConfig, x: Array,
+                    shift_carry: Array, wkv_state: Array
+                    ) -> tuple[Array, Array, Array]:
+    """One-token time-mix. x (B,1,d)."""
+    B, _, d = x.shape
+    r, k, v, w, g = _time_mix_inputs(p, cfg, x, shift_carry)
+    o, wkv_state = ops.wkv6_step(r, k, v, w, p["u"], wkv_state)
+    o = rms_head_norm(p["ln_x"], o).reshape(B, 1, d)
+    y = (o * g) @ p["w_o"]
+    return y, x, wkv_state
+
+
+def channel_mix(p: dict, cfg: ModelConfig, x: Array,
+                shift_carry: Optional[Array] = None
+                ) -> tuple[Array, Array]:
+    """Squared-ReLU channel mix with receptance gate."""
+    xs = _shift(x, shift_carry)
+    k = _mix(x, xs, p["mu_k"]) @ p["w_up"]
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(_mix(x, xs, p["mu_r"]) @ p["w_r"])
+    return r * (k @ p["w_down"]), x[:, -1:]

@@ -1,0 +1,129 @@
+"""Mamba2-style selective-SSM branch used by hymba's hybrid blocks.
+
+x -> in_proj -> [x_inner | z gate]; causal depthwise conv on x_inner;
+per-head scalar-decay selective scan (Pallas kernel / chunked jnp ref);
+gated output projection. Decode keeps a (conv tail, scan state) pair.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(d_inner, n_heads, head_dim) for the SSM branch."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    hd = 64 if d_inner % 64 == 0 else max(
+        8, d_inner // max(1, d_inner // 64))
+    while d_inner % hd:
+        hd //= 2
+    n_heads = s.n_heads or d_inner // hd
+    return d_inner, n_heads, d_inner // n_heads
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, hd = ssm_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * d_in, dt),
+        "conv": (jax.random.normal(ks[1], (s.conv_width, d_in), jnp.float32)
+                 / math.sqrt(s.conv_width)).astype(dt),
+        "w_dt": dense_init(ks[2], d_in, H, dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "w_B": dense_init(ks[3], d_in, s.state_dim, dt),
+        "w_C": dense_init(ks[4], d_in, s.state_dim, dt),
+        "w_out": dense_init(ks[5], d_in, d, dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array, tail: Optional[Array] = None) -> Array:
+    """Depthwise causal conv. x (B,S,C), w (cw,C), tail (B,cw-1,C) or None."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int,
+                   n_layers: Optional[int] = None) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    d_in, H, hd = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm.conv_width - 1, d_in),
+                          jnp.dtype(cfg.dtype)),
+        "scan": jnp.zeros((L, batch, H, hd, cfg.ssm.state_dim), jnp.float32),
+    }
+
+
+def _split_project(p: dict, cfg: ModelConfig, x: Array):
+    d_in, H, hd = ssm_dims(cfg)
+    xz = x @ p["w_in"]
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    return xi, z, (d_in, H, hd)
+
+
+def _post(p: dict, y: Array, z: Array, B: int, S: int) -> Array:
+    y = y.reshape(B, S, -1) * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+def ssm_forward_with_state(p: dict, cfg: ModelConfig, x: Array
+                           ) -> tuple[Array, Array, Array]:
+    """Full-sequence SSM branch returning decode state.
+
+    Returns (y (B,S,d), conv_tail (B,cw-1,d_in), scan_state (B,H,hd,N))."""
+    B, S, _ = x.shape
+    xi, z, (d_in, H, hd) = _split_project(p, cfg, x)
+    xc = jax.nn.silu(_causal_conv(xi, p["conv"]))
+    dt = jax.nn.softplus(xc @ p["w_dt"] + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    Bm = xc @ p["w_B"]
+    Cm = xc @ p["w_C"]
+    xh = xc.reshape(B, S, H, hd)
+    state = jnp.zeros((B, H, hd, cfg.ssm.state_dim), jnp.float32)
+    y, state = ops.ssm(xh, dt, A, Bm, Cm, state)
+    cw = cfg.ssm.conv_width
+    tail = xi[:, S - (cw - 1):] if S >= cw - 1 else jnp.concatenate(
+        [jnp.zeros((B, cw - 1 - S, d_in), xi.dtype), xi], axis=1)
+    return _post(p, y, z, B, S), tail, state
+
+
+def ssm_forward(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    """Full-sequence SSM branch. x (B,S,d) -> (B,S,d)."""
+    return ssm_forward_with_state(p, cfg, x)[0]
+
+
+def ssm_decode(p: dict, cfg: ModelConfig, x: Array,
+               conv_tail: Array, scan_state: Array
+               ) -> tuple[Array, Array, Array]:
+    """One-token SSM step. x (B,1,d); conv_tail (B,cw-1,d_in);
+    scan_state (B,H,hd,N). Returns (y (B,1,d), conv_tail', scan_state')."""
+    B = x.shape[0]
+    xi, z, (d_in, H, hd) = _split_project(p, cfg, x)
+    xc = jax.nn.silu(_causal_conv(xi, p["conv"], tail=conv_tail))
+    new_tail = jnp.concatenate([conv_tail[:, 1:], xi], axis=1)
+    dt = jax.nn.softplus(xc @ p["w_dt"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    Bm = xc @ p["w_B"]
+    Cm = xc @ p["w_C"]
+    xh = xc.reshape(B, 1, H, hd)
+    y, scan_state = ops.ssm_step(xh, dt, A, Bm, Cm, scan_state)
+    return _post(p, y, z, B, 1), new_tail, scan_state

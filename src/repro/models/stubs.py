@@ -1,0 +1,33 @@
+"""Modality-frontend STUBS (the one sanctioned carve-out).
+
+Per the assignment, the vision encoder (ViT/SigLIP) and the audio conv/mel
+frontend are NOT implemented; ``input_specs``-compatible stand-ins deliver
+precomputed patch/frame embeddings of the right shape, and these helpers
+generate random-but-deterministic embeddings for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def extras_shapes(cfg: ModelConfig, batch: int) -> dict:
+    """Shapes of the stub-frontend inputs consumed by forward/prefill."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        return {"images": jax.ShapeDtypeStruct(
+            (batch, cfg.vision.n_image_tokens, cfg.d_model), dt)}
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct(
+            (batch, cfg.audio.n_audio_frames, cfg.d_model), dt)}
+    return {}
+
+
+def make_extras(cfg: ModelConfig, batch: int, key=None) -> dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, sds in extras_shapes(cfg, batch).items():
+        out[name] = jax.random.normal(key, sds.shape, sds.dtype) * 0.02
+    return out

@@ -1,0 +1,11 @@
+"""Serving runtime: clients, partitioning, simulation, real execution."""
+from repro.serving.neurosurgeon import partition, PartitionDecision
+from repro.serving.clients import MobileClient, make_fleet, fleet_fragments
+from repro.serving.simulator import simulate, SimResult
+from repro.serving.executor import GraftExecutor, ServeRequest
+
+__all__ = [
+    "partition", "PartitionDecision", "MobileClient", "make_fleet",
+    "fleet_fragments", "simulate", "SimResult", "GraftExecutor",
+    "ServeRequest",
+]

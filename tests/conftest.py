@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device; only launch/dryrun.py (run as a
+# separate process) forces 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

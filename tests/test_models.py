@@ -1,0 +1,246 @@
+"""Per-arch smoke tests (reduced configs) + model-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro import models as M
+from repro.models import moe as moe_mod
+from repro.training import make_train_step, init_opt_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_smoke_config(arch)
+            cache[arch] = (cfg, M.init_params(KEY, cfg))
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch, built):
+    """Reduced variant: one forward pass, shape + finiteness."""
+    cfg, params = built(arch)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits, aux = M.forward(params, cfg, toks, extras=M.make_extras(cfg, B))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, built):
+    """Reduced variant: one train step on CPU, loss finite, params move."""
+    cfg, params = built(arch)
+    B, S = 2, 16
+    step = make_train_step(cfg, remat=True)
+    opt = init_opt_state(params)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": rng.randint(0, cfg.vocab_size, (B, S)).astype(np.int32),
+             "labels": rng.randint(0, cfg.vocab_size, (B, S)).astype(np.int32)}
+    new_params, new_opt, metrics = step(params, opt, batch,
+                                        extras=M.make_extras(cfg, B))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(new_opt["step"]) == 1
+    # at least one leaf changed
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch, built):
+    """prefill(S-1) + decode(1 token) == forward(S) at every position."""
+    cfg, params = built(arch)
+    B, S = 2, 17
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    extras = M.make_extras(cfg, B)
+    full, _ = M.forward(params, cfg, toks, extras=extras)
+    lp, cache = M.prefill(params, cfg, toks[:, :S - 1], extras=extras,
+                          cache_seq=S)
+    np.testing.assert_allclose(np.asarray(lp, np.float32),
+                               np.asarray(full[:, :S - 1], np.float32),
+                               atol=5e-5, rtol=1e-3)
+    ld, cache = M.decode_step(params, cfg, cache, toks[:, S - 1:S])
+    np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                               np.asarray(full[:, S - 1], np.float32),
+                               atol=5e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_fragment_composition(arch, built):
+    """Running blocks [0,k) then [k,L) == running [0,L) — the invariant
+    DNN re-alignment relies on."""
+    cfg, params = built(arch)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    extras = M.make_extras(cfg, B)
+    if cfg.family == "audio":
+        from repro.models.transformer import encode_audio
+        extras = {"memory": encode_audio(params, cfg, extras["frames"]),
+                  **extras}
+    L = M.n_fragment_units(cfg)
+    whole = M.run_fragment(params, cfg, toks, 0, L, extras=extras)
+    k = L // 2 or 1
+    mid = M.run_fragment(params, cfg, toks, 0, k, extras=extras)
+    comp = M.run_fragment(params, cfg, mid, k, L, extras=extras)
+    np.testing.assert_allclose(np.asarray(comp, np.float32),
+                               np.asarray(whole, np.float32),
+                               atol=5e-5, rtol=1e-3)
+
+
+def test_moe_impls_agree(built):
+    cfg, params = built("olmoe-1b-7b")
+    blk = jax.tree.map(lambda a: a[0], params["blocks"])
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model), jnp.float32) * 0.5
+    y1, a1 = moe_mod.moe_forward(blk["moe"], cfg, x, impl="grouped")
+    y2, a2 = moe_mod.moe_forward(blk["moe"], cfg, x, impl="dense")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    assert abs(float(a1) - float(a2)) < 1e-5
+
+
+def test_moe_capacity_drops():
+    """With a tiny capacity factor, tokens get dropped (shared expert /
+    residual still flows) — GShard semantics, not an error."""
+    import dataclasses
+    cfg = get_smoke_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.1))
+    params = M.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    logits, _ = M.forward(params, cfg, toks)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_sliding_window_limits_context(built):
+    """A windowed model's output at position t must not depend on tokens
+    more than `window` back."""
+    import dataclasses
+    cfg = get_smoke_config("qwen3-1.7b")
+    cfg = dataclasses.replace(cfg, sliding_window=4)
+    params = M.init_params(KEY, cfg)
+    t1 = jax.random.randint(KEY, (1, 12), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 1) % cfg.vocab_size)
+    l1, _ = M.forward(params, cfg, t1)
+    l2, _ = M.forward(params, cfg, t2)
+    # last position attends to [8..11]; shift/channel paths don't exist in
+    # dense archs, so logits at the last position must be identical
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               atol=1e-6)
+
+
+def test_decode_many_steps_matches_forward(built):
+    """Greedy multi-token decode == teacher-forced forward (dense arch)."""
+    cfg, params = built("qwen2-0.5b")
+    B, S, n_new = 1, 8, 4
+    toks = jax.random.randint(KEY, (B, S + n_new), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, toks)
+    _, cache = M.prefill(params, cfg, toks[:, :S], cache_seq=S + n_new)
+    for i in range(n_new):
+        ld, cache = M.decode_step(params, cfg, cache, toks[:, S + i:S + i + 1])
+        np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                                   np.asarray(full[:, S + i], np.float32),
+                                   atol=5e-5, rtol=1e-3)
+
+
+def test_int8_kv_cache_decode(built):
+    """Beyond-paper optimization: int8-quantized KV cache — decode matches
+    the bf16 path within quantization error."""
+    import dataclasses
+    cfg, params = built("qwen2-0.5b")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    B, S = 2, 17
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, toks)
+    _, cache = M.prefill(params, cfg8, toks[:, :S - 1], cache_seq=S)
+    assert cache["k"].dtype == jnp.int8
+    ld, _ = M.decode_step(params, cfg8, cache, toks[:, S - 1:S])
+    ref = np.asarray(full[:, S - 1], np.float32)
+    err = np.abs(np.asarray(ld[:, 0], np.float32) - ref).max()
+    assert err < 0.1 * max(ref.std(), 1e-3), err
+
+
+def test_windowed_ring_buffer_decode(built):
+    """Sliding-window arch: decoding past the window via the ring buffer
+    matches teacher-forced forward."""
+    import dataclasses
+    cfg = get_smoke_config("qwen3-1.7b")
+    cfg = dataclasses.replace(cfg, sliding_window=6)
+    params = M.init_params(KEY, cfg)
+    B, S, n_new = 1, 8, 6                     # decode far past the window
+    toks = jax.random.randint(KEY, (B, S + n_new), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, toks)
+    _, cache = M.prefill(params, cfg, toks[:, :S], cache_seq=S + n_new)
+    assert cache["k"].shape[2] == 6           # ring of window size
+    for i in range(n_new):
+        ld, cache = M.decode_step(params, cfg, cache, toks[:, S + i:S + i + 1])
+        np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                                   np.asarray(full[:, S + i], np.float32),
+                                   atol=5e-5, rtol=1e-3)
+
+
+def test_hybrid_multi_step_decode(built):
+    """hymba: SSM state + windowed KV both advance correctly over steps."""
+    cfg, params = built("hymba-1.5b")
+    B, S, n_new = 1, 8, 4
+    toks = jax.random.randint(KEY, (B, S + n_new), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, toks)
+    _, cache = M.prefill(params, cfg, toks[:, :S], cache_seq=S + n_new)
+    for i in range(n_new):
+        ld, cache = M.decode_step(params, cfg, cache, toks[:, S + i:S + i + 1])
+        np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                                   np.asarray(full[:, S + i], np.float32),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_rwkv_multi_step_decode(built):
+    """rwkv6: O(1) state decode over several steps matches forward."""
+    cfg, params = built("rwkv6-7b")
+    B, S, n_new = 1, 8, 4
+    toks = jax.random.randint(KEY, (B, S + n_new), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, toks)
+    _, cache = M.prefill(params, cfg, toks[:, :S], cache_seq=S + n_new)
+    for i in range(n_new):
+        ld, cache = M.decode_step(params, cfg, cache, toks[:, S + i:S + i + 1])
+        np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                                   np.asarray(full[:, S + i], np.float32),
+                                   atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.slow
+def test_expert_parallel_multi_shard_subprocess():
+    """EP == grouped at 4 expert shards (forced host devices, subprocess)."""
+    import os
+    import subprocess
+    import sys
+    code = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4';\n"
+        "import sys; sys.path.insert(0,'src');\n"
+        "import jax, numpy as np, jax.numpy as jnp\n"
+        "from repro.configs import get_smoke_config\n"
+        "from repro import models as M\n"
+        "from repro.models import moe as moe_mod\n"
+        "cfg = get_smoke_config('olmoe-1b-7b')\n"
+        "params = M.init_params(jax.random.PRNGKey(0), cfg)\n"
+        "blk = jax.tree.map(lambda a: a[0], params['blocks'])\n"
+        "x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)*0.5\n"
+        "mesh = jax.make_mesh((1, 4), ('data', 'model'))\n"
+        "y1, _ = moe_mod.moe_forward(blk['moe'], cfg, x, impl='grouped')\n"
+        "with mesh:\n"
+        "    y2, _ = jax.jit(lambda xx: moe_mod.moe_forward_expert_parallel("
+        "blk['moe'], cfg, xx, mesh=mesh))(x)\n"
+        "assert np.abs(np.asarray(y1)-np.asarray(y2)).max() < 2e-5\n"
+        "print('EP-OK')\n")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0 and "EP-OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,168 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import Fragment, default_book, merge, group_fragments, realign
+from repro.core.profiles import PerfProfile, BATCHES, SHARES
+from repro.core.repartition import GroupPlan
+from repro.core.placement import place
+from repro.core.planner import GraftPlanner
+
+BOOK = default_book()
+MODELS = ["inc", "res", "vgg", "mob", "vit"]
+
+frag_st = st.builds(
+    Fragment,
+    model=st.sampled_from(MODELS),
+    p=st.integers(0, 5),
+    t=st.floats(20.0, 500.0),
+    q=st.floats(0.5, 60.0),
+    client=st.uuids().map(str),
+)
+
+
+def _same_model(frags):
+    m = frags[0].model
+    return [Fragment(m, f.p, f.t, f.q, client=f.client) for f in frags]
+
+
+# ------------------------------------------------------------------ profiles
+
+@given(st.sampled_from(MODELS), st.integers(0, 5), st.integers(1, 32),
+       st.integers(1, 99))
+@settings(max_examples=60, deadline=None)
+def test_latency_monotonicity(model, start, batch, share):
+    """Latency decreases with share, increases (weakly) with batch."""
+    prof = BOOK[model]
+    L = prof.costs.n_layers
+    l1 = float(prof.latency_ms(start, L, batch, share))
+    l2 = float(prof.latency_ms(start, L, batch, share + 1))
+    l3 = float(prof.latency_ms(start, L, batch + 1, share))
+    assert l2 <= l1 + 1e-9
+    assert l3 >= l1 - 1e-9
+    assert l1 > 0
+
+
+@given(st.sampled_from(MODELS), st.integers(0, 5),
+       st.floats(5.0, 500.0), st.floats(0.5, 120.0))
+@settings(max_examples=60, deadline=None)
+def test_alloc_meets_contract(model, start, budget, rate):
+    """Any returned allocation satisfies budget and rate."""
+    prof = BOOK[model]
+    L = prof.costs.n_layers
+    a = prof.alloc(start, L, budget, rate)
+    if a is None:
+        # infeasible: even max resources can't do it
+        lat = float(prof.latency_ms(start, L, 1, 100))
+        assert lat > budget
+        return
+    assert a.latency_ms <= budget + 1e-9
+    assert a.throughput >= rate - 1e-9
+    assert 1 <= a.share <= 100 and a.batch in BATCHES
+
+
+# ------------------------------------------------------------------- merging
+
+@given(st.lists(frag_st, min_size=1, max_size=12),
+       st.sampled_from(["none", "uniform", "uniform+"]))
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_merge_conserves_load(frags, strategy):
+    merged = merge(frags, BOOK, strategy=strategy)
+    assert abs(sum(f.q for f in merged) - sum(f.q for f in frags)) < 1e-6
+    # budgets never increase past any constituent's budget
+    def constituents(f):
+        if f.merged_from:
+            return [c for s in f.merged_from for c in constituents(s)]
+        return [f]
+    for m in merged:
+        cs = constituents(m)
+        assert m.t <= min(c.t for c in cs) + 1e-9
+        assert {c.p for c in cs} == {m.p}
+        assert len({c.model for c in cs}) == 1
+
+
+# ------------------------------------------------------------------ grouping
+
+@given(st.lists(frag_st, min_size=1, max_size=14), st.integers(2, 6))
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_grouping_is_a_partition(frags, gs):
+    frags = _same_model(frags)
+    groups = group_fragments(frags, group_size=gs)
+    flat = [id(f) for g in groups for f in g]
+    assert sorted(flat) == sorted(id(f) for f in frags)
+    assert all(1 <= len(g) <= gs for g in groups)
+
+
+# ---------------------------------------------------------------- realign
+
+@given(st.lists(frag_st, min_size=1, max_size=5))
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_realign_serves_every_fragment_once(frags):
+    frags = _same_model(frags)
+    prof = BOOK[frags[0].model]
+    res, plans = realign(frags, prof)
+    if not np.isfinite(res):
+        return
+    served = sorted(f.client for p in plans for f in p.fragments)
+    assert served == sorted(f.client for f in frags)
+    # shared stages ordered by repartition point never overlap fragments
+    for p in plans:
+        if isinstance(p, GroupPlan):
+            assert all(f.p <= p.repartition_point for f in p.fragments)
+            assert p.resource >= 0
+
+
+@given(st.lists(frag_st, min_size=1, max_size=6))
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_planner_never_worse_than_gslice(frags):
+    """Graft <= GSLICE on identical inputs (it can always fall back solo)."""
+    from repro.core import plan_gslice
+    g = GraftPlanner(BOOK, merge_strategy="none").plan(frags)
+    gs = plan_gslice(frags, BOOK)
+    if np.isfinite(gs.total_resource) and np.isfinite(g.total_resource):
+        assert g.total_resource <= gs.total_resource + 1e-6
+
+
+# ---------------------------------------------------------------- placement
+
+@given(st.lists(frag_st, min_size=1, max_size=10))
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_placement_never_overflows(frags):
+    from repro.core import plan_gslice
+    plan = plan_gslice(frags, BOOK)
+    if not np.isfinite(plan.total_resource):
+        return
+    pl = place(plan)
+    assert all(c.used <= 100 for c in pl.chips)
+    # chips used >= ceil(total_resource / 100): packing can't beat volume
+    assert pl.n_chips >= int(np.ceil(plan.total_resource / 100.0)) - 1
+
+
+# ------------------------------------------------------------- sharding fit
+
+@given(st.lists(st.integers(1, 9), min_size=1, max_size=4), st.integers(0, 3))
+@settings(max_examples=50, deadline=None)
+def test_fit_spec_always_divisible(dims, which):
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import _fit_spec
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+    shape = tuple(d * (1 if i != which else 4) for i, d in enumerate(dims))
+    spec = [None] * len(shape)
+    if which < len(shape):
+        spec[which] = ("data", "model")
+    fitted = _fit_spec(P(*spec), shape, FakeMesh())
+    for dim, entry in zip(shape, tuple(fitted) + (None,) * len(shape)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = int(np.prod([FakeMesh.shape[a] for a in axes]))
+        assert dim % n == 0

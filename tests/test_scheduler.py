@@ -1,0 +1,224 @@
+"""Graft scheduler unit tests: merging, grouping, re-partitioning, planner,
+baselines — the paper's §4 machinery."""
+import numpy as np
+import pytest
+
+from repro.core import (Fragment, GraftPlanner, default_book, merge,
+                        group_fragments, realign, plan_gslice, plan_static,
+                        plan_optimal, place, solo_plan)
+from repro.core.repartition import GroupPlan, SoloPlan
+
+
+@pytest.fixture(scope="module")
+def book():
+    return default_book()
+
+
+def frags_for(model, specs):
+    return [Fragment(model, p, t, q, client=f"c{i}")
+            for i, (p, t, q) in enumerate(specs)]
+
+
+# ------------------------------------------------------------------- merging
+
+def test_merge_uniform_conserves_rate(book):
+    fs = frags_for("inc", [(3, 100, 30), (3, 100, 30), (3, 100, 30),
+                           (5, 80, 30)])
+    merged = merge(fs, book, strategy="uniform")
+    assert sum(f.q for f in merged) == sum(f.q for f in fs)
+    assert len(merged) == 2                                # (3,100) + (5,80)
+    m3 = [f for f in merged if f.p == 3][0]
+    assert m3.q == 90 and m3.t == 100
+
+
+def test_merge_none(book):
+    fs = frags_for("inc", [(3, 100, 30)] * 4)
+    assert len(merge(fs, book, strategy="none")) == 4
+
+
+def test_merge_threshold_bounds(book):
+    """uniform+ yields between uniform (all merged) and none counts."""
+    fs = frags_for("inc", [(3, 100, 30)] * 8)
+    n_plus = len(merge(fs, book, threshold=0.2, strategy="uniform+"))
+    assert 1 <= n_plus <= 8
+    # tighter threshold merges at least as much
+    n_tight = len(merge(fs, book, threshold=0.01, strategy="uniform+"))
+    assert n_tight <= n_plus
+
+
+# ------------------------------------------------------------------ grouping
+
+def test_grouping_partitions_everything(book):
+    fs = frags_for("res", [(i % 6, 80 + i, 30) for i in range(17)])
+    groups = group_fragments(fs, group_size=5)
+    flat = [f for g in groups for f in g]
+    assert sorted(f.client for f in flat) == sorted(f.client for f in fs)
+    assert all(len(g) <= 5 for g in groups)
+    assert len(groups) == -(-17 // 5)
+
+
+def test_grouping_similarity():
+    """Two clearly-separated clusters end up in different groups."""
+    a = [Fragment("inc", 1, 100.0, 30.0, client=f"a{i}") for i in range(3)]
+    b = [Fragment("inc", 12, 20.0, 5.0, client=f"b{i}") for i in range(3)]
+    groups = group_fragments(a + b, group_size=3, seed=1)
+    for g in groups:
+        kinds = {f.client[0] for f in g}
+        assert len(kinds) == 1, f"mixed group {kinds}"
+
+
+# -------------------------------------------------------------- repartition
+
+def test_realign_beats_or_matches_solo(book):
+    prof = book["inc"]
+    fs = frags_for("inc", [(2, 120, 30), (4, 110, 30), (5, 130, 30)])
+    res, plans = realign(fs, prof)
+    solo_total = sum(solo_plan(f, prof).resource for f in fs)
+    assert res <= solo_total + 1e-9
+    served = [f.client for p in plans for f in p.fragments]
+    assert sorted(served) == ["c0", "c1", "c2"]
+
+
+def test_realign_budget_constraint(book):
+    """align budget + shared budget <= min t / 2 (queueing-aware)."""
+    prof = book["inc"]
+    fs = frags_for("inc", [(2, 120, 30), (4, 90, 30)])
+    _, plans = realign(fs, prof)
+    for p in plans:
+        if not isinstance(p, GroupPlan):
+            continue
+        min_t = min(f.t for f in p.fragments)
+        for a in p.aligns:
+            assert a.budget_ms + p.shared.budget_ms <= min_t / 2 + 1e-6
+        # allocations meet their budgets
+        assert p.shared.alloc.latency_ms <= p.shared.budget_ms + 1e-6
+        for a in p.aligns:
+            if a.alloc.n_instances:
+                assert a.alloc.latency_ms <= a.budget_ms + 1e-6
+
+
+def test_realign_respects_rates(book):
+    prof = book["vgg"]
+    fs = frags_for("vgg", [(1, 100, 25), (2, 95, 35)])
+    _, plans = realign(fs, prof)
+    for p in plans:
+        if isinstance(p, GroupPlan):
+            q_total = sum(f.q for f in p.fragments)
+            assert p.shared.alloc.throughput >= q_total - 1e-6
+
+
+def test_realign_infeasible_budget(book):
+    """Absurd budget -> infinite resource, not a crash."""
+    prof = book["inc"]
+    fs = frags_for("inc", [(2, 1e-4, 30)])
+    res, plans = realign(fs, prof)
+    assert res == np.inf or res >= 0
+
+
+# ------------------------------------------------------------------ planner
+
+def test_planner_vs_baselines(book):
+    fs = frags_for("mob", [(1, 60, 30), (1, 65, 30), (2, 55, 30),
+                           (3, 70, 30)])
+    g = GraftPlanner(book).plan(fs)
+    gs = plan_gslice(fs, book)
+    assert g.total_resource <= gs.total_resource + 1e-9
+    opt = plan_optimal(fs, book)
+    assert opt.total_resource <= g.total_resource + 1e-9
+    # paper: Graft is close to Optimal (within 25% on small cases)
+    assert g.total_resource <= opt.total_resource * 1.25 + 1
+
+
+def test_planner_all_clients_served(book):
+    fs = frags_for("vit", [(i % 4, 700 + 10 * i, 1) for i in range(12)])
+    g = GraftPlanner(book).plan(fs)
+    def clients(frag):
+        if frag.merged_from:
+            return [c for s in frag.merged_from for c in clients(s)]
+        return [frag.client]
+    served = sorted(c for p in g.plans for f in p.fragments for c in clients(f))
+    assert served == sorted(f.client for f in fs)
+
+
+def test_static_uses_average_conditions(book):
+    actual = frags_for("inc", [(2, 40, 30)])
+    avg = frags_for("inc", [(4, 120, 30)])
+    pl = plan_static(actual, book, avg_frags=avg)
+    assert isinstance(pl.plans[0], SoloPlan)
+    assert pl.plans[0].stage.fragment.p == 4               # provisioned at avg
+
+
+# ---------------------------------------------------------------- placement
+
+def test_placement_capacity(book):
+    fs = frags_for("inc", [(2, 100, 30)] * 6)
+    plan = plan_gslice(fs, book)
+    placement = place(plan)
+    for chip in placement.chips:
+        assert chip.used <= 100
+    n_inst = sum(a.n_instances for _, _, _, a in plan.instances)
+    assert sum(len(c.instances) for c in placement.chips) == n_inst
+
+
+def test_measured_profile_end_to_end():
+    """The paper's measured-profiler path: time a real reduced model, build
+    LayerCosts, and plan against it."""
+    import jax
+    from repro import models as M
+    from repro.configs import get_smoke_config
+    from repro.core.measured import measure_layer_costs
+    from repro.core.profiles import ProfileBook
+    from repro.core import GraftPlanner, Fragment, plan_gslice
+
+    cfg = get_smoke_config("olmo-1b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    costs = measure_layer_costs(cfg, params, seq_len=8, batches=(1, 2),
+                                reps=1)
+    assert costs.n_layers == cfg.n_layers
+    assert (costs.flops_per_item > 0).all()
+    mbook = ProfileBook()
+    mbook.add(costs)
+    frags = [Fragment(cfg.name, 0, 50.0, 20.0, client="a"),
+             Fragment(cfg.name, 1, 40.0, 20.0, client="b")]
+    g = GraftPlanner(mbook).plan(frags)
+    gs = plan_gslice(frags, mbook)
+    assert g.total_resource <= gs.total_resource + 1e-9
+
+
+def test_consolidation_never_hurts(book):
+    """The beyond-paper shared-stage consolidation only ever lowers cost."""
+    from repro.core import GraftPlanner
+    import numpy as np
+    rng = np.random.RandomState(3)
+    frags = [Fragment("inc", int(rng.choice([1, 2, 3])),
+                      80.0 + 10 * rng.rand(), 30.0, client=f"x{i}")
+             for i in range(30)]
+    on = GraftPlanner(book, consolidate=True).plan(frags)
+    off = GraftPlanner(book, consolidate=False).plan(frags)
+    assert on.total_resource <= off.total_resource + 1e-9
+
+
+def test_incremental_planner_reuse(book):
+    """§6 shadow instances: repeated signatures reuse cached realignments —
+    much faster, all clients served, bounded resource overhead."""
+    from repro.core.reuse import IncrementalPlanner
+    rng = np.random.RandomState(5)
+    def mkfrags(n):
+        return [Fragment("inc", int(rng.choice([1, 2, 3])),
+                         float(rng.choice([90.0, 110.0, 130.0])), 30.0,
+                         client=f"c{i}") for i in range(n)]
+    inc = IncrementalPlanner(book)
+    full = GraftPlanner(book)
+    p1 = inc.plan(mkfrags(10))                 # cold: all novel
+    assert inc.stats["hits"] == 0
+    frags2 = mkfrags(10)
+    p2 = inc.plan(frags2)                      # warm: signatures repeat
+    assert inc.stats["hits"] > 0
+    served = {f.client for pl in p2.plans for f in pl.fragments}
+    def clients(f):
+        return [c for s in f.merged_from for c in clients(s)] \
+            if f.merged_from else [f.client]
+    served = {c for pl in p2.plans for f in pl.fragments for c in clients(f)}
+    assert served == {f.client for f in frags2}
+    pf = full.plan(frags2)
+    assert p2.total_resource <= pf.total_resource * 2.0 + 5

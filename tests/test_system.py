@@ -1,0 +1,72 @@
+"""End-to-end behaviour: the paper's headline claims on our testbed, plus a
+host-mesh dry-run integration test (subprocess with forced device count)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (default_book, GraftPlanner, plan_gslice, plan_static,
+                        plan_optimal)
+from repro.serving import make_fleet, fleet_fragments, simulate
+
+BOOK = default_book()
+
+
+def _fleet_frags(model, n_nano=4, n_tx2=0, rate=30.0, t=42.0, seed=7):
+    fleet = make_fleet(model, BOOK, n_nano=n_nano, n_tx2=n_tx2,
+                       rate=(1.0 if model == "vit" else rate), seed=seed)
+    return fleet, fleet_fragments(fleet, BOOK, t=t)
+
+
+@pytest.mark.parametrize("model", ["inc", "res", "vgg", "mob", "vit"])
+def test_graft_saves_resources_vs_gslice(model):
+    """Paper Table 3: Graft reduces resources vs GSLICE (up to 70%)."""
+    _, frags = _fleet_frags(model)
+    if not frags:
+        pytest.skip("all on-device at this instant")
+    g = GraftPlanner(BOOK).plan(frags)
+    gs = plan_gslice(frags, BOOK)
+    assert g.total_resource <= gs.total_resource + 1e-9
+    saving = 1 - g.total_resource / gs.total_resource
+    assert saving >= 0.0
+
+
+def test_graft_close_to_optimal_small_scale():
+    """Paper §5.2/§5.3: Graft within a few % of Optimal."""
+    _, frags = _fleet_frags("inc")
+    g = GraftPlanner(BOOK).plan(frags)
+    opt = plan_optimal(frags, BOOK)
+    assert g.total_resource <= opt.total_resource * 1.25 + 1.0
+
+
+def test_graft_slo_guarantee_in_simulation():
+    """Paper Fig. 8/10: Graft keeps end-to-end latency within SLO."""
+    fleet, frags = _fleet_frags("inc")
+    plan = GraftPlanner(BOOK).plan(frags)
+    res = simulate(plan, fleet, BOOK, duration_s=8.0, t0=42.0)
+    assert res.violation_rate() <= 0.10
+
+
+def test_heterogeneous_devices():
+    """Paper §5.2 heterogeneous: nano+tx2 fleets still plan feasibly."""
+    fleet, frags = _fleet_frags("res", n_nano=4, n_tx2=2)
+    assert len({f.device for f in frags}) >= 1
+    g = GraftPlanner(BOOK).plan(frags)
+    gs = plan_gslice(frags, BOOK)
+    assert g.total_resource <= gs.total_resource + 1e-9
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_smoke():
+    """One real dry-run combo in a subprocess (own 512-device jax init)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-base", "--shape", "decode_32k", "--multi-pod", "single"],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "1/1 combos compiled" in out.stdout
