@@ -1,0 +1,55 @@
+"""Online serving controller vs replan-from-scratch (tentpole bench).
+
+Both modes run the SAME control loop (sliding-window estimation, the same
+replan triggers) over volatile 30 s traces; the difference is what a
+replan costs: the controller plans incrementally (shadow reuse) and
+applies a plan diff so surviving pools keep warm instances, while the
+scratch baseline runs the full scheduler and redeploys every pool (each
+paying instance startup). Reports SLO attainment, drop rate, and mean
+replan latency."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraftPlanner
+from repro.core.reuse import IncrementalPlanner
+from repro.serving import (ServingController, fleet_fragments, make_fleet,
+                           simulate)
+
+from benchmarks.common import Rows, book, rate_for
+
+VOLATILE = {"sigma": 0.6, "fade_prob": 0.05}
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    b = book()
+    duration = 10.0 if quick else 30.0
+    for model in (("inc",) if quick else ("inc", "mob", "vit")):
+        fleet = make_fleet(model, b, n_nano=8, rate=rate_for(model),
+                           seed=17, trace_kw=VOLATILE)
+        frags0 = fleet_fragments(fleet, b, t=0.0)
+        if not frags0:
+            continue
+        derived = {}
+        for mode in ("controller", "scratch"):
+            diffs = mode == "controller"
+            planner = IncrementalPlanner(b) if diffs else GraftPlanner(b)
+            ctl = ServingController(b, planner=planner, apply_diffs=diffs)
+            plan0 = ctl.bootstrap(frags0)
+            res = simulate(plan0, fleet, b, duration_s=duration, t0=0.0,
+                           controller=ctl, seed=3)
+            derived[mode] = (res.attainment(), res.drop_rate(),
+                             ctl.mean_replan_ms(), ctl.stats)
+            rows.add(f"controller/{model}/{mode}",
+                     ctl.mean_replan_ms() * 1e3,
+                     f"slo_attainment={res.attainment():.3f};"
+                     f"drop_rate={res.drop_rate():.3f};"
+                     f"replans={ctl.stats['replans']};"
+                     f"pools_kept={ctl.stats['pools_kept']};"
+                     f"pools_added={ctl.stats['pools_added']}")
+        (a_c, d_c, l_c, _), (a_s, d_s, l_s, _) = (derived["controller"],
+                                                  derived["scratch"])
+        rows.add(f"controller/{model}/delta", 0.0,
+                 f"attainment_gain={a_c - a_s:+.3f};"
+                 f"drop_gain={d_s - d_c:+.3f};"
+                 f"replan_speedup={l_s / max(l_c, 1e-9):.1f}x")

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Per-PR gate: tier-1 tests (minus slow subprocess compiles) plus a quick
+# pass of the planner-latency-sensitive benches, so scheduler/controller
+# regressions surface before merge.
+#
+#   ./scripts/ci.sh            # full gate
+#   ./scripts/ci.sh --tests    # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q -m "not slow"
+
+if [[ "${1:-}" != "--tests" ]]; then
+    python -m benchmarks.run --quick --only incremental,controller
+fi

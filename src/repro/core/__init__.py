@@ -4,8 +4,11 @@ from repro.core.fragment import Fragment, merge_fragments
 from repro.core.profiles import PerfProfile, ProfileBook, Allocation, default_book
 from repro.core.merging import merge
 from repro.core.grouping import group_fragments
-from repro.core.repartition import realign, GroupPlan, SoloPlan, solo_plan
+from repro.core.repartition import (realign, GroupPlan, SoloPlan, solo_plan,
+                                    pool_key)
 from repro.core.planner import GraftPlanner, ExecutionPlan
+from repro.core.plandiff import (PoolSpec, PoolAction, PlanDiff, plan_pools,
+                                 diff_plans, apply_diff)
 from repro.core.baselines import plan_gslice, plan_static, plan_optimal
 from repro.core.placement import place, Placement
 
@@ -13,6 +16,8 @@ __all__ = [
     "LayerCosts", "arch_layer_costs", "Fragment", "merge_fragments",
     "PerfProfile", "ProfileBook", "Allocation", "default_book",
     "merge", "group_fragments", "realign", "GroupPlan", "SoloPlan",
-    "solo_plan", "GraftPlanner", "ExecutionPlan",
+    "solo_plan", "pool_key", "GraftPlanner", "ExecutionPlan",
+    "PoolSpec", "PoolAction", "PlanDiff", "plan_pools", "diff_plans",
+    "apply_diff",
     "plan_gslice", "plan_static", "plan_optimal", "place", "Placement",
 ]

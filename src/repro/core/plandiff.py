@@ -1,0 +1,149 @@
+"""Plan diffing — the delta between two ExecutionPlans, as pool actions.
+
+Online serving (``serving.controller``) replans continuously; tearing the
+whole deployment down on every replan would lose warm state (jitted
+fragment programs, queued requests, instance start-up) exactly when the
+system is under churn. This module computes the *minimal* set of pool
+mutations between two plans so unchanged pools survive a replan intact.
+
+Identity: an instance pool is keyed by ``(model, start, end)`` — the
+fragment block range it serves. Two stage plans with the same key are the
+same pool for diffing purposes (their instance counts aggregate; see
+:func:`plan_pools`). Between an old and a new plan, each key yields one
+action:
+
+  * ``keep``    — identical (share, batch, n_instances): no-op.
+  * ``resize``  — only the instance count changed: scale the live pool.
+  * ``rebatch`` — batch size and/or resource share changed: re-configure
+                  the pool in place (block range — hence any compiled
+                  program — is unchanged).
+  * ``add`` / ``remove`` — pool exists on only one side.
+
+``apply_diff(pools(old), diff) == pools(new)`` exactly — the diff is a
+complete, invertible description of the transition (tested in
+tests/test_controller.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+PoolKey = tuple  # (model: str, start: int, end: int)
+
+KEEP = "keep"
+ADD = "add"
+REMOVE = "remove"
+RESIZE = "resize"
+REBATCH = "rebatch"
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    """The deployable shape of one instance pool."""
+    key: PoolKey
+    share: int
+    batch: int
+    n_instances: int
+
+    @property
+    def model(self) -> str:
+        return self.key[0]
+
+    @property
+    def start(self) -> int:
+        return self.key[1]
+
+    @property
+    def end(self) -> int:
+        return self.key[2]
+
+    @property
+    def resource(self) -> float:
+        return self.share * self.n_instances
+
+
+@dataclass(frozen=True)
+class PoolAction:
+    kind: str                             # keep|add|remove|resize|rebatch
+    key: PoolKey
+    old: Optional[PoolSpec] = None
+    new: Optional[PoolSpec] = None
+
+
+@dataclass
+class PlanDiff:
+    actions: list = field(default_factory=list)
+
+    def by_kind(self, kind: str) -> list:
+        return [a for a in self.actions if a.kind == kind]
+
+    @property
+    def is_identity(self) -> bool:
+        return all(a.kind == KEEP for a in self.actions)
+
+    @property
+    def n_kept(self) -> int:
+        """Pools surviving the transition (keep/resize/rebatch)."""
+        return sum(a.kind in (KEEP, RESIZE, REBATCH) for a in self.actions)
+
+    def summary(self) -> dict:
+        out = {k: 0 for k in (KEEP, ADD, REMOVE, RESIZE, REBATCH)}
+        for a in self.actions:
+            out[a.kind] += 1
+        return out
+
+
+def plan_pools(plan) -> dict:
+    """``ExecutionPlan`` (or an iterable of GroupPlan|SoloPlan) ->
+    {PoolKey: PoolSpec}.
+
+    Stage plans sharing a key aggregate into one pool: instance counts
+    sum, and (share, batch) come from the largest-resource member — the
+    runtime serves the merged queue with one homogeneous configuration
+    (a deliberate approximation; distinct-key pools are exact).
+    """
+    plans = getattr(plan, "plans", plan)
+    members: dict[PoolKey, list] = {}
+    for pl in plans:
+        for key, sp in pl.pools():
+            members.setdefault(key, []).append(sp)
+    out = {}
+    for key, sps in members.items():
+        lead = max(sps, key=lambda s: (s.alloc.resource, s.alloc.share,
+                                       s.alloc.batch))
+        out[key] = PoolSpec(key=key, share=lead.alloc.share,
+                            batch=lead.alloc.batch,
+                            n_instances=sum(s.alloc.n_instances for s in sps))
+    return out
+
+
+def diff_plans(old, new) -> PlanDiff:
+    """Diff two plans (or pool tables from :func:`plan_pools`)."""
+    old_pools = old if isinstance(old, dict) else plan_pools(old)
+    new_pools = new if isinstance(new, dict) else plan_pools(new)
+    actions = []
+    for key in sorted(set(old_pools) | set(new_pools)):
+        o, n = old_pools.get(key), new_pools.get(key)
+        if o is None:
+            actions.append(PoolAction(ADD, key, new=n))
+        elif n is None:
+            actions.append(PoolAction(REMOVE, key, old=o))
+        elif o == n:
+            actions.append(PoolAction(KEEP, key, old=o, new=n))
+        elif (o.share, o.batch) == (n.share, n.batch):
+            actions.append(PoolAction(RESIZE, key, old=o, new=n))
+        else:
+            actions.append(PoolAction(REBATCH, key, old=o, new=n))
+    return PlanDiff(actions=actions)
+
+
+def apply_diff(old_pools: dict, diff: PlanDiff) -> dict:
+    """Apply ``diff`` to a pool table; reproduces the new plan's pools."""
+    out = dict(old_pools)
+    for a in diff.actions:
+        if a.kind == REMOVE:
+            out.pop(a.key, None)
+        elif a.kind in (ADD, RESIZE, REBATCH):
+            out[a.key] = a.new
+        # KEEP: nothing
+    return out

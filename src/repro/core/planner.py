@@ -46,6 +46,17 @@ class ExecutionPlan:
                             pl.stage.alloc))
         return out
 
+    def stage_pools(self):
+        """Every deployable (PoolKey, StagePlan) pair — the identity keys
+        ``core.plandiff`` matches across replans."""
+        for pl in self.plans:
+            yield from pl.pools()
+
+    def pool_index(self) -> dict:
+        """PoolKey -> aggregated PoolSpec (see ``plandiff.plan_pools``)."""
+        from repro.core.plandiff import plan_pools
+        return plan_pools(self)
+
 
 class GraftPlanner:
     def __init__(self, book: ProfileBook, *,

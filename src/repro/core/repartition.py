@@ -33,6 +33,12 @@ class StagePlan:
     alloc: Allocation
 
 
+def pool_key(model: str, sp: StagePlan) -> tuple:
+    """Identity of the instance pool a stage plan deploys to — the unit
+    plan diffing (``core.plandiff``) matches across replans."""
+    return (model, sp.start, sp.end)
+
+
 @dataclass(frozen=True)
 class GroupPlan:
     """One shared-stage instance pool + per-fragment alignment stages."""
@@ -50,6 +56,17 @@ class GroupPlan:
     def fragments(self) -> tuple[Fragment, ...]:
         return tuple(a.fragment for a in self.aligns)
 
+    def pools(self):
+        """Deployable (PoolKey, StagePlan) pairs — zero-width alignment
+        stages (f.p == repartition point) are not pools. Zero-instance
+        stages with a real block range ARE included: routing
+        (``simulator._routing``) sends clients through them, so they must
+        have a pool identity even when the allocation is empty."""
+        yield pool_key(self.model, self.shared), self.shared
+        for a in self.aligns:
+            if a.end > a.start:
+                yield pool_key(self.model, a), a
+
 
 @dataclass(frozen=True)
 class SoloPlan:
@@ -64,6 +81,10 @@ class SoloPlan:
     @property
     def fragments(self) -> tuple[Fragment, ...]:
         return (self.stage.fragment,)
+
+    def pools(self):
+        if self.stage.end > self.stage.start:
+            yield pool_key(self.model, self.stage), self.stage
 
 
 # shared-stage budget fractions; 1.0 = no alignment budget, which is the

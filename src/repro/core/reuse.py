@@ -31,8 +31,15 @@ from repro.core.planner import ExecutionPlan, GraftPlanner
 from repro.core.repartition import GroupPlan, SoloPlan, StagePlan
 
 
-def _signature(f: Fragment, budget_quantum_ms: float):
+def fragment_signature(f: Fragment, budget_quantum_ms: float):
+    """Reuse identity of a fragment: (model, partition point, budget
+    bucket). Two fragments with equal signatures hit the same shadow
+    cache entry and therefore land in pools with the same
+    ``core.plandiff`` identity across replans."""
     return (f.model, f.p, int(f.t // budget_quantum_ms))
+
+
+_signature = fragment_signature                      # backward-compat alias
 
 
 @dataclasses.dataclass

@@ -1,11 +1,13 @@
-"""Serving runtime: clients, partitioning, simulation, real execution."""
+"""Serving runtime: clients, partitioning, simulation, real execution,
+online control."""
 from repro.serving.neurosurgeon import partition, PartitionDecision
 from repro.serving.clients import MobileClient, make_fleet, fleet_fragments
 from repro.serving.simulator import simulate, SimResult
 from repro.serving.executor import GraftExecutor, ServeRequest
+from repro.serving.controller import ServingController, Estimate
 
 __all__ = [
     "partition", "PartitionDecision", "MobileClient", "make_fleet",
     "fleet_fragments", "simulate", "SimResult", "GraftExecutor",
-    "ServeRequest",
+    "ServeRequest", "ServingController", "Estimate",
 ]

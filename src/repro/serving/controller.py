@@ -1,0 +1,251 @@
+"""Online SLO-aware serving controller — closes the monitor -> plan ->
+apply loop the paper's deployment story needs (§6 discussion; DynO and
+Autodidactic Neurosurgeon show the runtime-adaptation wins).
+
+The controller never reads ground truth: everything it knows comes from
+the server-visible event stream — request arrivals (which carry the
+client's partition point, the activation bytes that crossed the uplink,
+and the residual time budget) and completions. From sliding windows over
+those events it estimates per-client arrival rate, uplink bandwidth, and
+SLO risk, and decides *when* to replan:
+
+  * fragment arrival / departure — a client appears, vanishes from the
+    window, or shifts its partition point (Neurosurgeon churn);
+  * rate drift beyond a hysteresis band — small blips don't thrash the
+    scheduler;
+  * SLO-violation risk — the server-side latency percentile drifting
+    toward the budget (queueing building up before violations happen).
+
+A replan calls the configured planner (``IncrementalPlanner`` for shadow
+reuse; any ``.plan(frags)`` works) and the *difference* to the running
+deployment is applied via ``core.plandiff`` — unchanged pools keep their
+queues, warm instances, and compiled programs. ``apply_diffs=False``
+degrades to the replan-from-scratch baseline (every pool torn down and
+restarted) that ``benchmarks/bench_controller.py`` compares against.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.fragment import Fragment
+from repro.core.planner import ExecutionPlan
+from repro.core.plandiff import diff_plans, plan_pools, PlanDiff
+
+
+@dataclass
+class ClientWindow:
+    """Sliding-window observations for one client, all in sim-ms."""
+    model: str
+    arrivals: deque = field(default_factory=deque)    # t_ms
+    bw: deque = field(default_factory=deque)          # (t_ms, bytes/s)
+    budgets: deque = field(default_factory=deque)     # (t_ms, budget_ms)
+    lat: deque = field(default_factory=deque)         # (t_ms, lat/budget)
+    p: int = 0                                        # latest partition point
+
+    def prune(self, horizon_ms: float) -> None:
+        for dq in (self.arrivals, self.bw, self.budgets, self.lat):
+            while dq and (dq[0] if dq is self.arrivals
+                          else dq[0][0]) < horizon_ms:
+                dq.popleft()
+
+
+@dataclass
+class Estimate:
+    """What the controller believes about one client right now."""
+    model: str
+    p: int
+    rate: float                                       # RPS
+    budget_ms: float
+    bw: float                                         # bytes/s uplink
+    risk: float                                       # lat/budget percentile
+
+
+class ServingController:
+    """Event-driven control loop between monitoring and planning."""
+
+    def __init__(self, book, planner=None, *,
+                 window_ms: float = 4000.0,
+                 control_period_ms: float = 500.0,
+                 rate_hysteresis: float = 0.3,
+                 risk_pct: float = 95.0,
+                 risk_threshold: float = 0.85,
+                 risk_boost: float = 1.25,
+                 min_replan_interval_ms: float = 1000.0,
+                 apply_diffs: bool = True):
+        from repro.core.reuse import IncrementalPlanner
+        self.book = book
+        self.planner = planner or IncrementalPlanner(book)
+        self.window_ms = window_ms
+        self.control_period_ms = control_period_ms
+        self.rate_hysteresis = rate_hysteresis
+        self.risk_pct = risk_pct
+        self.risk_threshold = risk_threshold
+        self.risk_boost = risk_boost
+        self.min_replan_interval_ms = min_replan_interval_ms
+        self.apply_diffs = apply_diffs
+
+        self._clients: dict[str, ClientWindow] = {}
+        self._planned_q: dict[str, float] = {}           # client -> planned RPS
+        self._planned_p: dict[str, int] = {}
+        self._plan: Optional[ExecutionPlan] = None
+        self._last_replan_ms = -np.inf
+        self.stats = {"replans": 0, "replan_ms": [], "triggers": {},
+                      "pools_kept": 0, "pools_added": 0, "pools_removed": 0}
+        self.last_diff: Optional[PlanDiff] = None        # diff of last replan
+        self.log: list = []                              # (t_ms, triggers, diff summary)
+
+    # ------------------------------------------------------------ observe
+    def observe_arrival(self, now_ms: float, client: str, model: str,
+                        p: int, budget_ms: float, xfer_bytes: float = 0.0,
+                        xfer_ms: float = 0.0) -> None:
+        w = self._clients.get(client)
+        if w is None:
+            w = self._clients[client] = ClientWindow(model=model, p=p)
+        w.arrivals.append(now_ms)
+        w.budgets.append((now_ms, budget_ms))
+        if xfer_ms > 0 and xfer_bytes > 0:
+            w.bw.append((now_ms, xfer_bytes / (xfer_ms / 1e3)))
+        w.p = p
+
+    def observe_done(self, now_ms: float, client: str,
+                     server_latency_ms: float,
+                     budget_ms: Optional[float] = None) -> None:
+        """``budget_ms`` is the completed request's own server-side budget
+        (callers that track requests pass it; pairing a completion with
+        the latest arrival's budget would skew risk on volatile traces)."""
+        w = self._clients.get(client)
+        if w is None:
+            return
+        if budget_ms is None:
+            if not w.budgets:
+                return
+            budget_ms = w.budgets[-1][1]
+        if budget_ms > 0:
+            w.lat.append((now_ms, server_latency_ms / budget_ms))
+
+    # ---------------------------------------------------------- estimates
+    def estimates(self, now_ms: float) -> dict[str, Estimate]:
+        out = {}
+        horizon = now_ms - self.window_ms
+        for name, w in list(self._clients.items()):
+            w.prune(horizon)
+            if not w.arrivals:
+                if not (w.bw or w.budgets or w.lat):
+                    del self._clients[name]     # departed: evict, don't leak
+                continue
+            if len(w.arrivals) >= 2:        # inter-arrival estimate: robust
+                span_s = (w.arrivals[-1] - w.arrivals[0]) / 1e3
+                rate = (len(w.arrivals) - 1) / max(span_s, 1e-9)
+            else:
+                rate = 1e3 / self.window_ms  # one sample: ~1 per window
+            budget = min(b for _, b in w.budgets) if w.budgets else 0.0
+            bw = float(np.mean([v for _, v in w.bw])) if w.bw else 0.0
+            risk = float(np.percentile([r for _, r in w.lat],
+                                       self.risk_pct)) if w.lat else 0.0
+            out[name] = Estimate(model=w.model, p=w.p, rate=rate,
+                                 budget_ms=budget, bw=bw, risk=risk)
+        return out
+
+    # ------------------------------------------------------------ triggers
+    def _triggers(self, est: dict[str, Estimate]) -> list[str]:
+        trig = []
+        for name, e in est.items():
+            if name not in self._planned_q:
+                trig.append("fragment_arrival")
+            elif e.p != self._planned_p.get(name):
+                trig.append("partition_shift")
+            else:
+                planned = self._planned_q[name]
+                if planned > 0 and \
+                        abs(e.rate - planned) / planned > self.rate_hysteresis:
+                    trig.append("rate_drift")
+            if e.risk > self.risk_threshold:
+                trig.append("slo_risk")
+        for name in self._planned_q:
+            if name not in est:
+                trig.append("fragment_departure")
+        return trig
+
+    # -------------------------------------------------------------- plan
+    def adopt(self, plan: ExecutionPlan, frags: list[Fragment],
+              now_ms: float = 0.0) -> ExecutionPlan:
+        """Seed the controller with an externally-built initial plan."""
+        self._plan = plan
+        self._planned_q = {f.client: f.q for f in frags}
+        self._planned_p = {f.client: f.p for f in frags}
+        self._last_replan_ms = now_ms
+        return plan
+
+    def bootstrap(self, frags: list[Fragment],
+                  now_ms: float = 0.0) -> ExecutionPlan:
+        """Plan from scratch for an initial fragment set and adopt it."""
+        return self.adopt(self.planner.plan(frags), frags, now_ms)
+
+    def _fragments(self, est: dict[str, Estimate]) -> list[Fragment]:
+        frags = []
+        for name, e in est.items():
+            q = e.rate * (self.risk_boost if e.risk > self.risk_threshold
+                          else 1.0)
+            frags.append(Fragment(model=e.model, p=e.p,
+                                  t=max(e.budget_ms, 1e-3), q=q,
+                                  client=name))
+        return frags
+
+    def control(self, now_ms: float, *, force: bool = False
+                ) -> Optional[ExecutionPlan]:
+        """One control tick: check triggers, maybe replan. Returns the new
+        plan (caller applies it — e.g. the simulator mutates its pools via
+        the diff) or None when no action is needed."""
+        if not force and \
+                now_ms - self._last_replan_ms < self.min_replan_interval_ms:
+            return None
+        est = self.estimates(now_ms)
+        if not est:
+            return None
+        trig = self._triggers(est)
+        if not trig and not force:
+            return None
+        frags = self._fragments(est)
+        t0 = time.perf_counter()
+        plan = self.planner.plan(frags)
+        replan_ms = (time.perf_counter() - t0) * 1e3
+        diff = self.last_diff = self.plan_diff(plan)
+        self.stats["replans"] += 1
+        self.stats["replan_ms"].append(replan_ms)
+        for t in set(trig) or {"forced"}:
+            self.stats["triggers"][t] = self.stats["triggers"].get(t, 0) + 1
+        s = diff.summary()
+        self.stats["pools_kept"] += diff.n_kept
+        self.stats["pools_added"] += s["add"]
+        self.stats["pools_removed"] += s["remove"]
+        self.log.append((now_ms, sorted(set(trig)) or ["forced"], s))
+        self._plan = plan
+        self._planned_q = {f.client: f.q for f in frags}
+        self._planned_p = {f.client: f.p for f in frags}
+        # a replan resets the risk windows: the new allocation gets a fresh
+        # look instead of being re-triggered by stale queueing samples
+        for w in self._clients.values():
+            w.lat.clear()
+        self._last_replan_ms = now_ms
+        return plan
+
+    def plan_diff(self, new_plan: ExecutionPlan) -> PlanDiff:
+        """Diff the running plan against ``new_plan``. With
+        ``apply_diffs=False`` every pool is reported add/remove (scratch
+        redeploy) — warm state is deliberately not carried over."""
+        old = plan_pools(self._plan) if (self._plan is not None
+                                         and self.apply_diffs) else {}
+        return diff_plans(old, plan_pools(new_plan))
+
+    @property
+    def current_plan(self) -> Optional[ExecutionPlan]:
+        return self._plan
+
+    def mean_replan_ms(self) -> float:
+        r = self.stats["replan_ms"]
+        return float(np.mean(r)) if r else 0.0

@@ -5,8 +5,16 @@ a jitted ``run_fragment`` for its block range; requests carry real tensors
 through mobile-part execution -> alignment stage -> batched shared stage,
 exactly the paper's data path (minus sockets — in-process hand-off).
 
+Pools are keyed by their ``core.plandiff`` identity ``(model, start,
+end)``, so :meth:`GraftExecutor.apply_plan` can transition a *live*
+deployment to a new plan: pools whose block range survives the replan keep
+their compiled fragment program (and any queued work) instead of paying a
+fresh trace+compile — the executor-level half of the serving controller's
+plan diffing.
+
 Used by tests/examples to prove the re-aligned execution is numerically
-identical to running each client's fragment monolithically.
+identical to running each client's fragment monolithically — including
+across mid-run plan transitions.
 """
 from __future__ import annotations
 
@@ -21,7 +29,8 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core.planner import ExecutionPlan
-from repro.core.repartition import GroupPlan, SoloPlan, StagePlan
+from repro.core.plandiff import diff_plans, plan_pools, PlanDiff, PoolSpec
+from repro.core.repartition import GroupPlan, SoloPlan, StagePlan, pool_key
 from repro.models import run_fragment, n_fragment_units
 from repro.serving.simulator import _routing
 
@@ -37,15 +46,22 @@ class ServeRequest:
 class FragmentInstance:
     """One stage pool: jitted fragment program + a batching queue."""
 
-    def __init__(self, params, cfg: ModelConfig, sp: StagePlan):
+    def __init__(self, params, cfg: ModelConfig, spec: PoolSpec):
         self.cfg = cfg
-        self.start, self.end = sp.start, sp.end
-        self.batch = max(sp.alloc.batch, 1)
+        self.key = spec.key
+        self.start, self.end = spec.start, spec.end
+        self.batch = max(spec.batch, 1)
         self._fn = jax.jit(functools.partial(
-            run_fragment, cfg=cfg, start=sp.start, end=sp.end))
+            run_fragment, cfg=cfg, start=spec.start, end=spec.end))
         self._params = params
         self.queue: list = []
         self.n_batches = 0
+
+    def retarget(self, spec: PoolSpec) -> None:
+        """Adopt a new pool shape; the block range — hence the compiled
+        program — is unchanged by construction (same PoolKey)."""
+        assert spec.key == self.key
+        self.batch = max(spec.batch, 1)
 
     def submit(self, req: ServeRequest, payload):
         self.queue.append((req, payload))
@@ -71,16 +87,46 @@ class GraftExecutor:
     def __init__(self, plan: ExecutionPlan, params, cfg: ModelConfig):
         self.cfg = cfg
         self.params = params
+        self._instances: dict[tuple, FragmentInstance] = {}
+        self.stats = {"pools_created": 0, "pools_reused": 0,
+                      "pools_removed": 0, "plan_applies": 0}
+        self._deploy(plan)
+
+    def _deploy(self, plan: ExecutionPlan) -> None:
+        self.plan = plan
+        self._pools = plan_pools(plan)
+        for key, spec in self._pools.items():
+            if key in self._instances:
+                self._instances[key].retarget(spec)
+            else:
+                self._instances[key] = FragmentInstance(self.params,
+                                                        self.cfg, spec)
+                self.stats["pools_created"] += 1
         self.routes = _routing(plan)
-        self._instances: dict[int, FragmentInstance] = {}
-        self._chains: dict[str, list[FragmentInstance]] = {}
-        for client, chain in self.routes.items():
-            insts = []
-            for sp in chain:
-                if id(sp) not in self._instances:
-                    self._instances[id(sp)] = FragmentInstance(params, cfg, sp)
-                insts.append(self._instances[id(sp)])
-            self._chains[client] = insts
+        self._chains = {
+            client: [self._instances[pool_key(sp.fragment.model, sp)]
+                     for sp in chain]
+            for client, chain in self.routes.items()}
+
+    def apply_plan(self, new_plan: ExecutionPlan) -> PlanDiff:
+        """Transition the live deployment to ``new_plan``. Pools whose
+        (model, start, end) identity survives keep their jitted fragment
+        program and queue; only genuinely new block ranges compile."""
+        diff = diff_plans(self._pools, plan_pools(new_plan))
+        removed = diff.by_kind("remove")
+        for a in removed:                      # validate before mutating
+            q = len(self._instances[a.key].queue)
+            if q:
+                raise RuntimeError(
+                    f"cannot remove pool {a.key}: {q} queued requests — "
+                    f"drain with serve() before apply_plan()")
+        for a in removed:
+            self._instances.pop(a.key)
+            self.stats["pools_removed"] += 1
+        self.stats["pools_reused"] += diff.n_kept
+        self.stats["plan_applies"] += 1
+        self._deploy(new_plan)
+        return diff
 
     def mobile_part(self, req: ServeRequest, p: int):
         """Execute the device-side fragment [0, p) locally (simulated device).

@@ -1,0 +1,208 @@
+"""Online serving controller + plan diffing: diff round-trips exactly,
+hysteresis suppresses blips, and the executor stays numerically exact
+across a mid-run plan transition."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Fragment, GraftPlanner, apply_diff, default_book,
+                        diff_plans, plan_pools)
+from repro.core.plandiff import PoolSpec
+from repro.core.reuse import IncrementalPlanner
+from repro.serving import (ServingController, fleet_fragments, make_fleet,
+                           simulate)
+
+
+@pytest.fixture(scope="module")
+def book():
+    return default_book()
+
+
+def frags_for(model, specs):
+    return [Fragment(model, p, t, q, client=f"c{i}")
+            for i, (p, t, q) in enumerate(specs)]
+
+
+# ---------------------------------------------------------------- plan diff
+
+def test_identity_diff_is_empty(book):
+    fs = frags_for("inc", [(1, 100, 30), (2, 90, 30), (3, 110, 30)])
+    plan = GraftPlanner(book).plan(fs)
+    d = diff_plans(plan, plan)
+    assert d.is_identity
+    assert d.summary()["add"] == 0 and d.summary()["remove"] == 0
+
+
+def test_diff_round_trip_reproduces_new_pools(book):
+    """apply(diff(old, new), pools(old)) == pools(new), exactly."""
+    rng = np.random.RandomState(7)
+    planner = GraftPlanner(book)
+    for model in ("inc", "mob", "vgg"):
+        L = book[model].costs.n_layers
+        for trial in range(4):
+            old = planner.plan(frags_for(model, [
+                (int(rng.randint(0, L - 1)), 60 + 60 * rng.rand(), 30)
+                for _ in range(6)]))
+            new = planner.plan(frags_for(model, [
+                (int(rng.randint(0, L - 1)), 60 + 60 * rng.rand(), 30)
+                for _ in range(4)]))
+            d = diff_plans(old, new)
+            assert apply_diff(plan_pools(old), d) == plan_pools(new)
+
+
+def test_diff_classifies_resize_and_rebatch():
+    key = ("m", 2, 6)
+    old = {key: PoolSpec(key, share=10, batch=4, n_instances=3)}
+    resized = {key: PoolSpec(key, share=10, batch=4, n_instances=5)}
+    rebatched = {key: PoolSpec(key, share=20, batch=8, n_instances=3)}
+    assert diff_plans(old, resized).actions[0].kind == "resize"
+    assert diff_plans(old, rebatched).actions[0].kind == "rebatch"
+    gone = diff_plans(old, {})
+    assert [a.kind for a in gone.actions] == ["remove"]
+    assert apply_diff(old, gone) == {}
+
+
+def test_pool_keys_cover_every_deployable_stage(book):
+    fs = frags_for("res", [(1, 120, 30), (2, 100, 30), (4, 90, 30)])
+    plan = GraftPlanner(book).plan(fs)
+    keys = {k for k, _ in plan.stage_pools()}
+    flat = {(m, s, e) for m, s, e, a in plan.instances if a.n_instances > 0}
+    # every instance-backed stage has a pool identity (pools() may add
+    # zero-instance routed stages on top — those still need identities)
+    assert flat <= keys
+    assert plan.pool_index().keys() == keys
+
+
+# --------------------------------------------------------------- controller
+
+def _feed(ctl, client, rate_rps, t0_ms, t1_ms, p=2, budget=80.0):
+    period = 1e3 / rate_rps
+    t = t0_ms
+    while t < t1_ms:
+        ctl.observe_arrival(t, client, "inc", p, budget)
+        t += period
+
+
+def test_hysteresis_suppresses_rate_blip(book):
+    """A rate change inside the band triggers no replan; beyond it, one."""
+    ctl = ServingController(book, planner=GraftPlanner(book),
+                            rate_hysteresis=0.3, window_ms=4000.0)
+    frags = frags_for("inc", [(2, 80, 30)])
+    frags = [dataclasses.replace(frags[0], client="a")]
+    ctl.bootstrap(frags, now_ms=0.0)
+    _feed(ctl, "a", 33.0, 0.0, 5000.0)                 # +10%: inside band
+    assert ctl.control(5000.0) is None
+    assert ctl.stats["replans"] == 0
+    ctl2 = ServingController(book, planner=GraftPlanner(book),
+                             rate_hysteresis=0.3, window_ms=4000.0)
+    ctl2.bootstrap(frags, now_ms=0.0)
+    _feed(ctl2, "a", 60.0, 0.0, 5000.0)                # +100%: replan
+    assert ctl2.control(5000.0) is not None
+    assert ctl2.stats["triggers"].get("rate_drift", 0) == 1
+
+
+def test_partition_shift_and_arrival_trigger(book):
+    ctl = ServingController(book, planner=GraftPlanner(book))
+    frags = [Fragment("inc", 2, 80.0, 30.0, client="a")]
+    ctl.bootstrap(frags, now_ms=0.0)
+    _feed(ctl, "a", 30.0, 0.0, 5000.0, p=4)            # p moved 2 -> 4
+    assert ctl.control(5000.0) is not None
+    assert ctl.stats["triggers"].get("partition_shift", 0) == 1
+    # a brand-new client triggers fragment_arrival
+    _feed(ctl, "b", 30.0, 5000.0, 9000.0, p=1)
+    assert ctl.control(9000.0) is not None
+    assert ctl.stats["triggers"].get("fragment_arrival", 0) >= 1
+
+
+def test_replan_cooldown(book):
+    ctl = ServingController(book, planner=GraftPlanner(book),
+                            min_replan_interval_ms=1000.0)
+    _feed(ctl, "a", 30.0, 0.0, 4000.0)
+    assert ctl.control(4000.0) is not None             # fragment_arrival
+    _feed(ctl, "b", 30.0, 4000.0, 4400.0)
+    assert ctl.control(4400.0) is None                 # inside cooldown
+    assert ctl.control(5200.0) is not None             # cooldown expired
+
+
+def test_online_simulation_end_to_end(book):
+    """Controller-driven simulation serves the fleet and records replans;
+    every request is accounted for (done or dropped)."""
+    fleet = make_fleet("inc", book, n_nano=6, rate=30.0, seed=17,
+                       trace_kw={"sigma": 0.6, "fade_prob": 0.05})
+    frags = fleet_fragments(fleet, book, t=0.0)
+    ctl = ServingController(book, planner=IncrementalPlanner(book))
+    plan0 = ctl.bootstrap(frags)
+    res = simulate(plan0, fleet, book, duration_s=8.0, t0=0.0,
+                   controller=ctl, seed=3)
+    done = sum(len(v) for v in res.latencies_ms.values())
+    assert done + sum(res.drops.values()) == res.meta["n_requests"]
+    assert res.meta["controller"]["replans"] >= 1
+    assert res.attainment() > 0.5
+
+
+# ----------------------------------------------------- executor transitions
+
+def test_executor_diff_transition_stays_numerically_exact():
+    """Apply a mid-run plan diff to a live executor: outputs must still
+    match monolithic execution, and surviving pools keep their compiled
+    programs (no re-jit for unchanged block ranges)."""
+    import jax
+    from repro import models as M
+    from repro.configs import get_smoke_config
+    from repro.core.costmodel import arch_layer_costs
+    from repro.core.profiles import ProfileBook
+    from repro.serving import GraftExecutor, ServeRequest
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    costs = dataclasses.replace(arch_layer_costs(cfg, seq_len=16),
+                                name=cfg.name)
+    book = ProfileBook()
+    book.add(costs)
+    planner = GraftPlanner(book)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+
+    def check(ex, frags):
+        reqs = [(ServeRequest(client=f.client,
+                              tokens=rng.randint(0, cfg.vocab_size, 16)
+                              .astype(np.int32)), f.p) for f in frags]
+        ex.serve(reqs)
+        for req, p in reqs:
+            want, _ = M.forward(params, cfg, np.asarray(req.tokens)[None])
+            np.testing.assert_allclose(req.result, np.asarray(want[0]),
+                                       atol=5e-5, rtol=1e-3)
+
+    frags1 = [Fragment(cfg.name, 0, 60.0, 30.0, client="c0"),
+              Fragment(cfg.name, 1, 45.0, 30.0, client="c1"),
+              Fragment(cfg.name, 1, 70.0, 30.0, client="c2")]
+    ex = GraftExecutor(planner.plan(frags1), params, cfg)
+    check(ex, frags1)
+    created_before = ex.stats["pools_created"]
+
+    # conditions shift: c1 moves shallower, c2 rate doubles, c3 arrives
+    frags2 = [Fragment(cfg.name, 0, 60.0, 30.0, client="c0"),
+              Fragment(cfg.name, 0, 55.0, 30.0, client="c1"),
+              Fragment(cfg.name, 1, 70.0, 60.0, client="c2"),
+              Fragment(cfg.name, 1, 50.0, 30.0, client="c3")]
+    diff = ex.apply_plan(planner.plan(frags2))
+    check(ex, frags2)
+    assert diff.n_kept >= 1, "no pool survived a mild replan"
+    assert ex.stats["pools_reused"] >= 1
+    # surviving block ranges did not recompile
+    assert ex.stats["pools_created"] - created_before == \
+        len(diff.by_kind("add"))
+
+    # identity transition: nothing created, nothing removed
+    before = dict(ex.stats)
+    d2 = ex.apply_plan(planner.plan(frags2))
+    assert d2.is_identity
+    assert ex.stats["pools_created"] == before["pools_created"]
+    assert ex.stats["pools_removed"] == before["pools_removed"]
+    check(ex, frags2)
+
+    # zero-rate fragments still deploy (empty allocations get a pool
+    # identity too — the seed's id-keyed executor accepted these)
+    frags3 = frags2 + [Fragment(cfg.name, 1, 50.0, 0.0, client="c4")]
+    ex.apply_plan(planner.plan(frags3))
+    check(ex, frags3)

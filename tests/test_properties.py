@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis; minimal "
+                           "environments skip instead of failing collection")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import Fragment, default_book, merge, group_fragments, realign

@@ -57,6 +57,61 @@ def test_grouping_partitions_everything(book):
     assert len(groups) == -(-17 // 5)
 
 
+def test_grouping_deterministic_under_fixed_seed():
+    """The controller replans continuously: identical fragment sets must
+    group identically or pool identities churn for no reason."""
+    fs = [Fragment("inc", i % 5, 60.0 + 7 * i, 20.0 + (i % 3) * 10,
+                   client=f"c{i}") for i in range(13)]
+    a = group_fragments(fs, group_size=4, seed=2)
+    b = group_fragments(list(fs), group_size=4, seed=2)
+    assert [[f.client for f in g] for g in a] == \
+        [[f.client for f in g] for g in b]
+    # a different seed is allowed to differ, but must still partition
+    c = group_fragments(fs, group_size=4, seed=3)
+    assert sorted(f.client for g in c for f in g) == \
+        sorted(f.client for f in fs)
+
+
+def test_grouping_balance_bounds():
+    """Exactly ceil(n/size) groups, every group within [1, size]."""
+    rng = np.random.RandomState(0)
+    for n, gs in [(7, 3), (15, 5), (23, 4), (5, 5), (6, 5)]:
+        fs = [Fragment("res", int(rng.randint(0, 6)),
+                       float(50 + 100 * rng.rand()),
+                       float(5 + 40 * rng.rand()), client=f"c{i}")
+              for i in range(n)]
+        groups = group_fragments(fs, group_size=gs, seed=1)
+        sizes = [len(g) for g in groups]
+        assert len(groups) == -(-n // gs)
+        assert all(1 <= s <= gs for s in sizes)
+        assert sum(sizes) == n
+
+
+def test_consolidate_never_increases_resource(book):
+    """Direct unit check on GraftPlanner._consolidate: for any plan list
+    it returns, total resource is <= the input's."""
+    from repro.core.grouping import group_fragments as gf
+    from repro.core.repartition import realign as ra
+    rng = np.random.RandomState(11)
+    prof = book["inc"]
+    planner = GraftPlanner(book)
+    for trial in range(3):
+        fs = [Fragment("inc", int(rng.choice([1, 2, 3])),
+                       80.0 + 20 * rng.rand(), 30.0, client=f"t{trial}c{i}")
+              for i in range(12)]
+        plans = []
+        for g in gf(fs, group_size=4, seed=trial):
+            _, ps = ra(g, prof)
+            plans += ps
+        before = sum(p.resource for p in plans)
+        after_plans = planner._consolidate(plans, prof)
+        after = sum(p.resource for p in after_plans)
+        assert after <= before + 1e-9
+        # consolidation must not lose fragments
+        assert sorted(f.client for p in after_plans for f in p.fragments) \
+            == sorted(f.client for p in plans for f in p.fragments)
+
+
 def test_grouping_similarity():
     """Two clearly-separated clusters end up in different groups."""
     a = [Fragment("inc", 1, 100.0, 30.0, client=f"a{i}") for i in range(3)]
