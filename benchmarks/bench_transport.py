@@ -1,0 +1,122 @@
+"""Transport data-path costs: serialization, per-hop latency, and the
+warm-vs-cold replan wall time the ROADMAP asks for.
+
+Three sections:
+
+  * ``serialize/*`` — encode+decode round trip of activation-sized
+    frames (the cost every hop pays, socket or not).
+  * ``hop/*`` — request/reply round trip through InProcessTransport
+    (framing only) vs SocketTransport (framing + localhost TCP), same
+    payload, persistent connection.
+  * ``replan/*`` — a live executor transitions to a plan with one new
+    pool (``warm``: surviving pools keep their jitted programs / worker
+    processes) vs tearing the deployment down and redeploying from
+    scratch (``cold``: every pool recompiles). Both flavours run even in
+    quick mode — the subprocess one is the only honest cold number
+    (in-process recompiles hit jax's shared compilation cache) and the
+    CI gate's baseline carries its metrics — so cold pays worker spawn +
+    jax import per pool.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows, timed
+
+
+def _bench_serialize(rows: Rows, quick: bool) -> None:
+    from repro.serving.transport import decode_frame, encode_frame
+    shapes = [(16, 256)] if quick else [(16, 256), (64, 1024), (256, 1024)]
+    rng = np.random.RandomState(0)
+    for shape in shapes:
+        payload = rng.randn(*shape).astype(np.float32)
+        msg = {"op": "submit", "req_id": 1, "client": "c0",
+               "payload": payload, "extras": None}
+        reps = 50 if quick else 200
+        encode_frame(msg)                                   # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = decode_frame(encode_frame(msg))
+        us = (time.perf_counter() - t0) / reps * 1e6
+        assert np.array_equal(out["payload"], payload)
+        nbytes = payload.nbytes
+        rows.add(f"transport/serialize/{shape[0]}x{shape[1]}", us,
+                 f"payload_bytes={nbytes};"
+                 f"mbytes_per_s={nbytes / (us / 1e6) / 1e6:.0f}")
+
+
+def _bench_hop(rows: Rows, quick: bool) -> None:
+    from repro.serving.transport import InProcessTransport, SocketTransport
+    rng = np.random.RandomState(1)
+    payload = rng.randn(16, 256).astype(np.float32)
+    reps = 100 if quick else 500
+    for name, tp in (("inprocess", InProcessTransport()),
+                     ("socket", SocketTransport())):
+        with tp:
+            tp.serve("echo", lambda m: {"ok": True, "payload": m["payload"]})
+            ch = tp.connect("echo")
+            ch.request({"op": "echo", "payload": payload})   # warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                ch.request({"op": "echo", "payload": payload})
+            us = (time.perf_counter() - t0) / reps * 1e6
+            ch.close()
+        rows.add(f"transport/hop/{name}", us,
+                 f"payload_bytes={payload.nbytes};"
+                 f"round_trips={reps}")
+
+
+def _bench_replan(rows: Rows, quick: bool) -> None:
+    from repro.core import GraftPlanner
+    from repro.core.fragment import Fragment
+    from repro.serving import GraftExecutor, InProcessTransport
+    from repro.serving.smoke import smoke_requests, smoke_setup
+
+    cfg, book, params = smoke_setup()
+    planner = GraftPlanner(book)
+    frags1 = [Fragment(cfg.name, 0, 60.0, 30.0, client="c0"),
+              Fragment(cfg.name, 0, 55.0, 30.0, client="c1")]
+    frags2 = frags1 + [Fragment(cfg.name, 1, 70.0, 30.0, client="c2")]
+    plan1, plan2 = planner.plan(frags1), planner.plan(frags2)
+
+    def flavours():
+        # in-process: measures the framing/data-path half only — repeat
+        # compiles of an identical fragment hit jax's in-process
+        # compilation cache, so warm ~= cold here by construction
+        yield "inprocess", GraftExecutor, InProcessTransport
+        # subprocess workers: the honest cold number (process spawn + jax
+        # import + fragment compile per pool) vs warm pools kept alive —
+        # the wall-time version of the ROADMAP's "keep warm instances"
+        from repro.serving import SocketTransport
+        from repro.serving.remote import RemoteExecutor
+        yield "socket", RemoteExecutor, SocketTransport
+
+    for name, cls, make_tp in flavours():
+        # live deployment on plan1, fully compiled
+        ex = cls(plan1, params, cfg, transport=make_tp())
+        ex.serve(smoke_requests(cfg, frags1, seed=2))
+        with timed() as warm:
+            ex.apply_plan(plan2)                 # only the new pool compiles
+            ex.serve(smoke_requests(cfg, frags2, seed=3))
+        kept = ex.stats["pools_reused"]
+        ex.close()
+        # scratch: a fresh deployment of plan2 compiles every pool
+        with timed() as cold:
+            ex2 = cls(plan2, params, cfg, transport=make_tp())
+            ex2.serve(smoke_requests(cfg, frags2, seed=3))
+        ex2.close()
+        warm_ms, cold_ms = warm["us"] / 1e3, cold["us"] / 1e3
+        rows.add(f"transport/replan/{name}/warm", warm["us"],
+                 f"warm_ms={warm_ms:.1f};pools_kept={kept}")
+        rows.add(f"transport/replan/{name}/cold", cold["us"],
+                 f"cold_ms={cold_ms:.1f}")
+        rows.add(f"transport/replan/{name}/delta", 0.0,
+                 f"cold_vs_warm={cold_ms / max(warm_ms, 1e-9):.1f}x")
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    _bench_serialize(rows, quick)
+    _bench_hop(rows, quick)
+    _bench_replan(rows, quick)

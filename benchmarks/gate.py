@@ -1,0 +1,176 @@
+"""CI bench gate: run the quick benches, snapshot to BENCH_ci.json, and
+fail on regressions against a checked-in baseline.
+
+  python -m benchmarks.gate --baseline benchmarks/baseline.json --out BENCH_ci.json
+  python -m benchmarks.gate --write-baseline     # refresh the baseline
+
+Gated metrics (relative, 20% band by default — wall-clock benches on
+shared runners are noisy, so only the two the ISSUE calls load-bearing
+are *blocking*):
+
+  * ``planner_latency_us``   — incremental planner time per replan
+                               (``incremental/<model>`` us_per_call);
+                               fails when slower than baseline * (1+tol).
+  * ``slo_attainment``       — controller-mode attainment from the
+                               online-serving bench; fails when below
+                               baseline * (1-tol).
+
+Everything else (controller replan latency, transport hop/serialize,
+warm-vs-cold replan wall times) is recorded in BENCH_ci.json for trend
+inspection but not gated.
+
+Refreshing the baseline: rerun ``--write-baseline`` on a quiet machine
+at the commit you want to bless, eyeball the diff of
+``benchmarks/baseline.json``, and check it in alongside the change that
+legitimately moved the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import io
+import json
+import sys
+
+DEFAULT_ONLY = "incremental,controller,transport"
+DEFAULT_TOL = 0.20
+
+
+def parse_derived(derived: str) -> dict:
+    """'a=1;b=x2' -> {'a': 1.0, 'b': 'x2'} (floats where possible)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v.rstrip("x%"))
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def run_benches(only: str, quick: bool = True) -> list:
+    """Run benchmarks.run in-process; -> [(name, us, derived_str), ...]."""
+    from benchmarks import run as bench_run
+    buf = io.StringIO()
+    argv = ["--only", only] + (["--quick"] if quick else [])
+    with contextlib.redirect_stdout(buf):
+        bench_run.main(argv)
+    rows = []
+    for line in buf.getvalue().splitlines():
+        if not line or line.startswith("name,"):
+            continue
+        name, us, derived = line.split(",", 2)
+        rows.append((name, float(us), derived))
+    return rows
+
+
+def extract_metrics(rows: list) -> dict:
+    """The gated + headline numbers, keyed stably for baseline diffs."""
+    metrics = {}
+    for name, us, derived in rows:
+        d = parse_derived(derived)
+        if name.startswith("incremental/"):
+            model = name.split("/", 1)[1]
+            metrics[f"planner_latency_us/{model}"] = us
+        elif name.endswith("/controller") and "slo_attainment" in d:
+            model = name.split("/")[1]
+            metrics[f"slo_attainment/{model}"] = d["slo_attainment"]
+            metrics[f"controller_replan_us/{model}"] = us
+        elif name.startswith("transport/replan/") and name.endswith("/warm"):
+            metrics[f"replan_warm_ms/{name.split('/')[2]}"] = d["warm_ms"]
+        elif name.startswith("transport/replan/") and name.endswith("/cold"):
+            metrics[f"replan_cold_ms/{name.split('/')[2]}"] = d["cold_ms"]
+        elif name.startswith("transport/hop/"):
+            metrics[f"hop_us/{name.split('/')[2]}"] = us
+    return metrics
+
+
+def compare(metrics: dict, baseline: dict, tol: float) -> list:
+    """-> list of failure strings; empty means the gate passes."""
+    failures = []
+    for key, base in baseline.get("metrics", {}).items():
+        cur = metrics.get(key)
+        if cur is None:
+            failures.append(f"{key}: missing from current run "
+                            f"(baseline {base:.4g})")
+            continue
+        if key.startswith("planner_latency_us/"):
+            if cur > base * (1 + tol):
+                failures.append(
+                    f"{key}: {cur:.0f} us vs baseline {base:.0f} us "
+                    f"(>{tol:.0%} slower)")
+        elif key.startswith("slo_attainment/"):
+            if cur < base * (1 - tol):
+                failures.append(
+                    f"{key}: {cur:.3f} vs baseline {base:.3f} "
+                    f"(>{tol:.0%} worse)")
+        # other metrics: recorded, not gated
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.gate")
+    ap.add_argument("--only", default=DEFAULT_ONLY)
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--out", default="BENCH_ci.json")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOL)
+    ap.add_argument("--full", action="store_true",
+                    help="run the full (non --quick) benches")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the baseline file instead of gating")
+    args = ap.parse_args(argv)
+
+    rows = run_benches(args.only, quick=not args.full)
+    metrics = extract_metrics(rows)
+    snapshot = {
+        "only": args.only,
+        "quick": not args.full,
+        "metrics": metrics,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+
+    if args.write_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump({"only": args.only, "quick": not args.full,
+                       "metrics": metrics}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written to {args.baseline} "
+              f"({len(metrics)} metrics)")
+        return 0
+
+    with open(args.out, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench snapshot written to {args.out} ({len(rows)} rows)")
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"no baseline at {args.baseline}; gate skipped "
+              f"(run --write-baseline to create one)", file=sys.stderr)
+        return 0
+
+    failures = compare(metrics, baseline, args.tolerance)
+    for key in ("planner_latency_us", "slo_attainment",
+                "replan_warm_ms", "replan_cold_ms"):
+        vals = {k.split("/", 1)[1]: v for k, v in metrics.items()
+                if k.startswith(key + "/")}
+        if vals:
+            print(f"  {key}: " + "  ".join(
+                f"{m}={v:.4g}" for m, v in sorted(vals.items())))
+    if failures:
+        print("BENCH GATE FAILED:", file=sys.stderr)
+        for fmsg in failures:
+            print(f"  - {fmsg}", file=sys.stderr)
+        return 1
+    print(f"bench gate passed ({len(baseline.get('metrics', {}))} baseline "
+          f"metrics, tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,7 +22,8 @@ def main(argv=None) -> None:
                             bench_merging, bench_grouping, bench_throughput,
                             bench_massive, bench_overhead, bench_slo,
                             bench_energy, bench_kernels, bench_incremental,
-                            bench_calibration, bench_controller)
+                            bench_calibration, bench_controller,
+                            bench_transport)
     suites = {
         "calibration": bench_calibration.run, # Table 2 anchors
         "resource": bench_resource.run,       # Table 3 / Fig 7
@@ -38,6 +39,7 @@ def main(argv=None) -> None:
         "kernels": bench_kernels.run,         # micro
         "incremental": bench_incremental.run, # paper §6 extension
         "controller": bench_controller.run,   # online control loop (beyond paper)
+        "transport": bench_transport.run,     # cross-process data path
     }
     only = set(args.only.split(",")) if args.only else None
     rows = Rows()

@@ -1,16 +1,31 @@
 #!/usr/bin/env bash
-# Per-PR gate: tier-1 tests (minus slow subprocess compiles) plus a quick
-# pass of the planner-latency-sensitive benches, so scheduler/controller
-# regressions surface before merge.
+# Per-PR gate: tier-1 tests (minus slow subprocess compiles), a smoke of
+# the real-transport demo path, and a quick pass of the planner-latency
+# benches, so scheduler/controller/transport regressions surface before
+# merge.
 #
-#   ./scripts/ci.sh            # full gate
-#   ./scripts/ci.sh --tests    # tests only
+#   ./scripts/ci.sh               # full gate (tests + demo smoke + quick benches)
+#   ./scripts/ci.sh --tests       # tests only
+#   ./scripts/ci.sh --bench-gate  # quick benches -> BENCH_ci.json, fail on
+#                                 # >20% planner-latency / SLO-attainment
+#                                 # regression vs benchmarks/baseline.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [[ "${1:-}" == "--bench-gate" ]]; then
+    python -m benchmarks.gate \
+        --only incremental,controller,transport \
+        --baseline benchmarks/baseline.json --out BENCH_ci.json
+    exit $?
+fi
 
 python -m pytest -q -m "not slow"
 
 if [[ "${1:-}" != "--tests" ]]; then
+    # the demo path must not silently rot: tiny in-process transport run
+    python examples/online_serving.py --transport inprocess --waves 2 \
+        --clients 2
     python -m benchmarks.run --quick --only incremental,controller
 fi

@@ -2,6 +2,12 @@
 place instances on the pod, and report resource/SLO outcomes.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --clients 20
+
+``--execute`` additionally drives the *real* data path at smoke scale:
+the plan is deployed on an executor constructed against a Transport
+(in-process loopback or worker subprocesses behind localhost sockets),
+a few request waves are served with numerics checked against the
+monolithic forward pass, and the measured uplink is reported per hop.
 """
 from __future__ import annotations
 
@@ -14,6 +20,36 @@ from repro.core import (GraftPlanner, plan_gslice, plan_static, place,
 from repro.serving import make_fleet, fleet_fragments, simulate
 
 
+def run_execute(arch: str, mode: str, n_clients: int, seed: int) -> int:
+    """Smoke-scale real execution behind the chosen transport."""
+    from repro.serving import (GraftExecutor, InProcessTransport,
+                               RemoteExecutor, SocketTransport)
+    from repro.serving.smoke import (check_against_monolithic,
+                                     smoke_fragments, smoke_requests,
+                                     smoke_setup)
+    cfg, book, params = smoke_setup(arch, seed=seed)
+    planner = GraftPlanner(book)
+    frags = smoke_fragments(cfg, n_clients, seed=seed)
+    plan = planner.plan(frags)
+    if mode == "socket":
+        ex = RemoteExecutor(plan, params, cfg, transport=SocketTransport())
+    else:
+        ex = GraftExecutor(plan, params, cfg, transport=InProcessTransport())
+    with ex:
+        print(f"[execute:{mode}] {len(frags)} clients -> "
+              f"{ex.n_stage_pools} stage pools, pids "
+              f"{sorted(set(ex.worker_pids().values()))}")
+        reqs = smoke_requests(cfg, frags, seed=seed)
+        ex.serve(reqs)
+        check_against_monolithic(cfg, params, reqs)
+        for client, nbytes, ms in ex.drain_uplink():
+            print(f"[execute:{mode}]   uplink {client}: {nbytes} B "
+                  f"in {ms:.2f} ms")
+        print(f"[execute:{mode}] numerics match monolithic forward "
+              f"for all {len(reqs)} requests")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -24,6 +60,10 @@ def main(argv=None):
                     help="trace timestamp to plan at")
     ap.add_argument("--duration", type=float, default=10.0)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--execute", choices=("off", "inprocess", "socket"),
+                    default="off",
+                    help="also run the real smoke-scale data path behind "
+                         "this transport")
     args = ap.parse_args(argv)
 
     book = default_book()
@@ -53,6 +93,9 @@ def main(argv=None):
               f"{np.percentile(lat, 95):.0f}/{np.percentile(lat, 99):.0f} ms; "
               f"SLO violations {res.violation_rate():.1%}; "
               f"drops {sum(res.drops.values())}")
+    if args.execute != "off":
+        return run_execute(args.arch, args.execute, min(args.clients, 4),
+                           args.seed)
     return 0
 
 

@@ -1,13 +1,22 @@
 """Serving runtime: clients, partitioning, simulation, real execution,
-online control."""
+cross-process transport, online control."""
 from repro.serving.neurosurgeon import partition, PartitionDecision
 from repro.serving.clients import MobileClient, make_fleet, fleet_fragments
 from repro.serving.simulator import simulate, SimResult
-from repro.serving.executor import GraftExecutor, ServeRequest
+from repro.serving.transport import (Transport, InProcessTransport,
+                                     SocketTransport, ShapedTransport,
+                                     LinkShape, TransferStats, FrameError,
+                                     TruncatedFrameError)
+from repro.serving.executor import (GraftExecutor, ServeRequest,
+                                    PoolDrainingError)
+from repro.serving.remote import RemoteExecutor
 from repro.serving.controller import ServingController, Estimate
 
 __all__ = [
     "partition", "PartitionDecision", "MobileClient", "make_fleet",
     "fleet_fragments", "simulate", "SimResult", "GraftExecutor",
-    "ServeRequest", "ServingController", "Estimate",
+    "ServeRequest", "PoolDrainingError", "RemoteExecutor",
+    "ServingController", "Estimate",
+    "Transport", "InProcessTransport", "SocketTransport", "ShapedTransport",
+    "LinkShape", "TransferStats", "FrameError", "TruncatedFrameError",
 ]

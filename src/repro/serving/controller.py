@@ -112,6 +112,23 @@ class ServingController:
             w.bw.append((now_ms, xfer_bytes / (xfer_ms / 1e3)))
         w.p = p
 
+    def observe_uplink(self, now_ms: float, client: str, nbytes: float,
+                       xfer_ms: float) -> None:
+        """Feed one transport-measured uplink transfer into the bandwidth
+        window — the real-socket counterpart of the ``xfer_bytes`` /
+        ``xfer_ms`` pair ``observe_arrival`` takes from the simulator.
+        Unknown clients are ignored (a transfer is not an arrival; the
+        arrival event itself introduces the client)."""
+        w = self._clients.get(client)
+        if w is not None and nbytes > 0 and xfer_ms > 0:
+            w.bw.append((now_ms, nbytes / (xfer_ms / 1e3)))
+
+    def ingest_uplink(self, now_ms: float, samples) -> None:
+        """Bulk-feed ``(client, nbytes, ms)`` samples — the shape
+        ``GraftExecutor.drain_uplink()`` produces."""
+        for client, nbytes, ms in samples:
+            self.observe_uplink(now_ms, client, nbytes, ms)
+
     def observe_done(self, now_ms: float, client: str,
                      server_latency_ms: float,
                      budget_ms: Optional[float] = None) -> None:

@@ -3,7 +3,14 @@
 Materialises an ExecutionPlan as actual JAX programs: each stage pool gets
 a jitted ``run_fragment`` for its block range; requests carry real tensors
 through mobile-part execution -> alignment stage -> batched shared stage,
-exactly the paper's data path (minus sockets — in-process hand-off).
+exactly the paper's data path.
+
+Every pool hop crosses a :class:`repro.serving.transport.Transport`
+channel — tensors are framed (length-prefixed msgpack/numpy) on the way
+in and out even for the default :class:`InProcessTransport`, so the
+serialization the paper's transmission budget pays for is always on the
+measured path. ``RemoteExecutor`` (``serving.remote``) reuses this exact
+executor with worker subprocesses behind ``SocketTransport`` channels.
 
 Pools are keyed by their ``core.plandiff`` identity ``(model, start,
 end)``, so :meth:`GraftExecutor.apply_plan` can transition a *live*
@@ -14,13 +21,15 @@ plan diffing.
 
 Used by tests/examples to prove the re-aligned execution is numerically
 identical to running each client's fragment monolithically — including
-across mid-run plan transitions.
+across mid-run plan transitions and across process boundaries.
 """
 from __future__ import annotations
 
 import functools
-from collections import defaultdict
-from dataclasses import dataclass, field
+import itertools
+import os
+from collections import deque
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -30,9 +39,11 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.planner import ExecutionPlan
 from repro.core.plandiff import diff_plans, plan_pools, PlanDiff, PoolSpec
-from repro.core.repartition import GroupPlan, SoloPlan, StagePlan, pool_key
-from repro.models import run_fragment, n_fragment_units
+from repro.core.repartition import pool_key
+from repro.models import run_fragment
 from repro.serving.simulator import _routing
+from repro.serving.transport import (Channel, InProcessTransport, Transport,
+                                     error_reply)
 
 
 @dataclass
@@ -43,37 +54,71 @@ class ServeRequest:
     result: Optional[np.ndarray] = None
 
 
+class PoolDrainingError(RuntimeError):
+    """Enqueue refused: the pool was retargeted to batch 0 (draining)."""
+
+
+def pool_endpoint(key: tuple) -> str:
+    """Transport endpoint name for a pool identity."""
+    model, start, end = key
+    return f"pool/{model}/{start}-{end}"
+
+
 class FragmentInstance:
-    """One stage pool: jitted fragment program + a batching queue."""
+    """One stage pool: jitted fragment program + a batching queue.
+
+    A ``retarget`` to batch 0 puts the pool in *draining* mode: queued
+    work still flushes (at batch 1) but new submissions are refused with
+    :class:`PoolDrainingError` — remote workers drain this way before
+    shutdown instead of hanging a zero-width batching loop.
+    """
 
     def __init__(self, params, cfg: ModelConfig, spec: PoolSpec):
         self.cfg = cfg
         self.key = spec.key
         self.start, self.end = spec.start, spec.end
-        self.batch = max(spec.batch, 1)
+        self.batch = spec.batch
+        # batch 0 means draining from birth too (the planner never emits
+        # it: zero-rate pools carry EMPTY_ALLOC's batch of 1), so the
+        # contract is uniform: batch 0 <=> intake refused
+        self.draining = spec.batch == 0
         self._fn = jax.jit(functools.partial(
             run_fragment, cfg=cfg, start=spec.start, end=spec.end))
         self._params = params
         self.queue: list = []
         self.n_batches = 0
+        self.n_compiles = 0
+        self._shapes_seen: set = set()
 
     def retarget(self, spec: PoolSpec) -> None:
         """Adopt a new pool shape; the block range — hence the compiled
-        program — is unchanged by construction (same PoolKey)."""
+        program — is unchanged by construction (same PoolKey). Batch 0 is
+        the drain signal: stop intake, let ``flush`` empty the queue."""
         assert spec.key == self.key
-        self.batch = max(spec.batch, 1)
+        self.batch = spec.batch
+        self.draining = spec.batch == 0
 
     def submit(self, req: ServeRequest, payload):
+        if self.draining:
+            raise PoolDrainingError(
+                f"pool {self.key} is draining (batch=0): enqueue refused")
         self.queue.append((req, payload))
 
     def flush(self):
-        """Process queued requests in batches; returns [(req, output), ...]."""
+        """Process queued requests in batches; returns [(req, output), ...].
+        Batch is clamped to >= 1 here so a zero/negative batch can never
+        spin the dequeue loop without making progress."""
         out = []
+        step = max(self.batch, 1)
         while self.queue:
-            chunk = self.queue[:self.batch]
-            del self.queue[:self.batch]
+            chunk = self.queue[:step]
+            del self.queue[:step]
             payloads = jnp.stack([p for _, p in chunk])
             extras = chunk[0][0].extras
+            shape = (payloads.shape, tuple(sorted(extras)) if extras else ())
+            if shape not in self._shapes_seen:
+                self._shapes_seen.add(shape)
+                self.n_compiles += 1          # new trace for this shape
             y = self._fn(self._params, inputs=payloads, extras=extras)
             self.n_batches += 1
             for i, (req, _) in enumerate(chunk):
@@ -81,91 +126,268 @@ class FragmentInstance:
         return out
 
 
-class GraftExecutor:
-    """Deploys an ExecutionPlan for ONE model at reduced scale."""
+class PoolService:
+    """Server-side adapter: transport messages -> FragmentInstance ops.
 
-    def __init__(self, plan: ExecutionPlan, params, cfg: ModelConfig):
+    The message vocabulary is the whole executor<->pool protocol; worker
+    subprocesses (``serving.remote``) speak exactly this, so local and
+    remote pools are interchangeable behind a channel.
+    """
+
+    def __init__(self, inst: FragmentInstance):
+        self.inst = inst
+
+    def handle(self, msg: dict) -> dict:
+        try:
+            return self._dispatch(msg)
+        except Exception as e:                       # error crosses the wire
+            return error_reply(e)
+
+    def _dispatch(self, msg: dict) -> dict:
+        op = msg.get("op")
+        inst = self.inst
+        if op == "submit":
+            extras = msg.get("extras") or None
+            req = ServeRequest(client=msg["client"], tokens=None,
+                               extras=extras)
+            req._rid = msg["req_id"]
+            inst.submit(req, jnp.asarray(msg["payload"]))
+            return {"ok": True, "queued": len(inst.queue)}
+        if op == "flush":
+            results = [{"req_id": req._rid, "payload": np.asarray(y)}
+                       for req, y in inst.flush()]
+            return {"ok": True, "results": results}
+        if op == "retarget":
+            inst.retarget(PoolSpec(key=tuple(msg["key"]),
+                                   share=msg["share"], batch=msg["batch"],
+                                   n_instances=msg["n_instances"]))
+            return {"ok": True}
+        if op == "stats":
+            return {"ok": True, "pid": os.getpid(),
+                    "queue_len": len(inst.queue),
+                    "n_batches": inst.n_batches,
+                    "n_compiles": inst.n_compiles,
+                    "draining": inst.draining}
+        raise ValueError(f"unknown pool op {op!r}")
+
+
+class PoolHandle:
+    """Client-side proxy for one stage pool behind a transport channel."""
+
+    def __init__(self, key: tuple, channel: Channel):
+        self.key = key
+        self.channel = channel
+        self.pid: Optional[int] = None        # set for subprocess pools
+
+    def _call(self, msg: dict) -> dict:
+        reply = self.channel.request(msg)
+        if not reply.get("ok"):
+            err = reply.get("error", "unknown transport error")
+            if reply.get("etype") == PoolDrainingError.__name__:
+                raise PoolDrainingError(err)
+            raise RuntimeError(f"pool {self.key}: {err}")
+        return reply
+
+    def submit(self, req_id: int, client: str, payload,
+               extras: Optional[dict] = None) -> tuple:
+        """Enqueue one payload; returns the measured (nbytes, ms) hop."""
+        self._call({"op": "submit", "req_id": req_id, "client": client,
+                    "payload": np.asarray(payload), "extras": extras})
+        _, nbytes, ms = self.channel.stats.samples[-1]
+        return nbytes, ms
+
+    def flush(self) -> list:
+        reply = self._call({"op": "flush"})
+        return [(r["req_id"], np.asarray(r["payload"]))
+                for r in reply["results"]]
+
+    def retarget(self, spec: PoolSpec) -> None:
+        self._call({"op": "retarget", "key": list(spec.key),
+                    "share": spec.share, "batch": spec.batch,
+                    "n_instances": spec.n_instances})
+
+    def stats(self) -> dict:
+        return self._call({"op": "stats"})
+
+    def queue_len(self) -> int:
+        return int(self.stats()["queue_len"])
+
+    def close(self) -> None:
+        self.channel.close()
+
+
+class GraftExecutor:
+    """Deploys an ExecutionPlan for ONE model at reduced scale, routing
+    every pool hop through ``transport`` (default: in-process loopback
+    with full wire framing)."""
+
+    def __init__(self, plan: ExecutionPlan, params, cfg: ModelConfig,
+                 transport: Optional[Transport] = None):
         self.cfg = cfg
         self.params = params
-        self._instances: dict[tuple, FragmentInstance] = {}
+        self.transport = transport if transport is not None \
+            else InProcessTransport()
+        self._handles: dict[tuple, PoolHandle] = {}
+        self._rid = itertools.count()
+        self._by_rid: dict[int, ServeRequest] = {}
+        # (client, nbytes, ms) first-hop log; bounded so callers that
+        # never drain_uplink() don't grow a tuple per request forever
+        self.uplink: deque = deque(maxlen=65_536)
         self.stats = {"pools_created": 0, "pools_reused": 0,
                       "pools_removed": 0, "plan_applies": 0}
         self._deploy(plan)
+
+    # ------------------------------------------------------------- pools
+    def _spawn_pool(self, spec: PoolSpec) -> PoolHandle:
+        """Create a pool and return its handle. RemoteExecutor overrides
+        this to spawn a worker subprocess instead."""
+        svc = PoolService(FragmentInstance(self.params, self.cfg, spec))
+        name = pool_endpoint(spec.key)
+        self.transport.serve(name, svc.handle)
+        return PoolHandle(spec.key, self.transport.connect(name))
+
+    def _retire_pool(self, handle: PoolHandle) -> None:
+        handle.close()
+        self.transport.stop(pool_endpoint(handle.key))
 
     def _deploy(self, plan: ExecutionPlan) -> None:
         self.plan = plan
         self._pools = plan_pools(plan)
         for key, spec in self._pools.items():
-            if key in self._instances:
-                self._instances[key].retarget(spec)
+            if key in self._handles:
+                self._handles[key].retarget(spec)
             else:
-                self._instances[key] = FragmentInstance(self.params,
-                                                        self.cfg, spec)
+                self._handles[key] = self._spawn_pool(spec)
                 self.stats["pools_created"] += 1
         self.routes = _routing(plan)
         self._chains = {
-            client: [self._instances[pool_key(sp.fragment.model, sp)]
+            client: [self._handles[pool_key(sp.fragment.model, sp)]
                      for sp in chain]
             for client, chain in self.routes.items()}
 
     def apply_plan(self, new_plan: ExecutionPlan) -> PlanDiff:
         """Transition the live deployment to ``new_plan``. Pools whose
         (model, start, end) identity survives keep their jitted fragment
-        program and queue; only genuinely new block ranges compile."""
+        program, queue — and, for remote pools, their worker process —
+        instead of paying a fresh trace+compile."""
         diff = diff_plans(self._pools, plan_pools(new_plan))
         removed = diff.by_kind("remove")
         for a in removed:                      # validate before mutating
-            q = len(self._instances[a.key].queue)
+            q = self._handles[a.key].queue_len()
             if q:
                 raise RuntimeError(
                     f"cannot remove pool {a.key}: {q} queued requests — "
                     f"drain with serve() before apply_plan()")
         for a in removed:
-            self._instances.pop(a.key)
+            self._retire_pool(self._handles.pop(a.key))
             self.stats["pools_removed"] += 1
         self.stats["pools_reused"] += diff.n_kept
         self.stats["plan_applies"] += 1
         self._deploy(new_plan)
         return diff
 
+    # -------------------------------------------------------------- serve
     def mobile_part(self, req: ServeRequest, p: int):
         """Execute the device-side fragment [0, p) locally (simulated device).
         Returns the per-request payload: token ids (S,) when p == 0, else
         the intermediate hidden states (S, d) that cross the network."""
         toks = jnp.asarray(req.tokens)[None]                # (1, S)
         if p == 0:
-            return toks[0]
+            return np.asarray(toks[0])
         h = run_fragment(self.params, self.cfg, toks, 0, p, extras=req.extras)
-        return h[0]
+        return np.asarray(h[0])
+
+    def _wire_extras(self, req: ServeRequest) -> Optional[dict]:
+        if req.extras is None:
+            return None
+        return {k: np.asarray(v) for k, v in req.extras.items()}
 
     def serve(self, requests: list[tuple[ServeRequest, int]]
               ) -> list[ServeRequest]:
         """requests: [(req, client_partition_point)]. Batched execution of
-        every stage pool; returns requests with ``result`` filled."""
-        # stage 0 submit
-        inflight = defaultdict(list)
+        every stage pool; returns requests with ``result`` filled.
+
+        If a hop fails mid-wave (worker death, draining pool), requests
+        already queued in healthy pools stay queued and tracked — call
+        :meth:`drain` to discard them and reclaim the bookkeeping before
+        the next ``apply_plan``."""
+        # stage 0 submit — this is the uplink hop the paper budgets for
+        stage_of: dict[int, int] = {}        # rid -> index in ITS OWN chain
         for req, p in requests:
             payload = self.mobile_part(req, p)
+            rid = next(self._rid)
+            self._by_rid[rid] = req
+            stage_of[rid] = 0
             chain = self._chains[req.client]
-            chain[0].submit(req, payload)
-            inflight[req.client] = chain
-        # run chains to completion (stages are a DAG of depth <= 2)
-        max_depth = max(len(c) for c in self._chains.values())
+            nbytes, ms = chain[0].submit(rid, req.client, payload,
+                                         extras=self._wire_extras(req))
+            self.uplink.append((req.client, nbytes, ms))
+        # run chains to completion (stages are a DAG of depth <= 2). A
+        # flush can return requests from OTHER chains whose earlier stage
+        # fed this pool (a shared pool is depth 0 for anchor clients but
+        # depth 1 for aligned ones) — route each result by the request's
+        # own recorded stage, never by the flushing depth.
+        max_depth = max((len(c) for c in self._chains.values()), default=0)
         for depth in range(max_depth):
             seen = set()
             for chain in self._chains.values():
                 if depth >= len(chain) or id(chain[depth]) in seen:
                     continue
                 seen.add(id(chain[depth]))
-                for req, y in chain[depth].flush():
-                    nxt = depth + 1
+                for rid, y in chain[depth].flush():
+                    req = self._by_rid[rid]
+                    nxt = stage_of[rid] + 1
                     rchain = self._chains[req.client]
                     if nxt < len(rchain):
-                        rchain[nxt].submit(req, y)
+                        stage_of[rid] = nxt
+                        rchain[nxt].submit(rid, req.client, y,
+                                           extras=self._wire_extras(req))
                     else:
                         req.result = np.asarray(y)
+                        del self._by_rid[rid]
+                        del stage_of[rid]
         return [r for r, _ in requests]
+
+    # ------------------------------------------------------------- stats
+    def drain_uplink(self) -> list:
+        """Return and clear the (client, nbytes, ms) first-hop samples —
+        what ``ServingController.observe_uplink`` consumes."""
+        out = list(self.uplink)
+        self.uplink.clear()
+        return out
+
+    def drain(self) -> int:
+        """Flush every pool to empty, DISCARDING results — the recovery
+        path when a serve() aborted mid-wave (e.g. a worker died or a
+        pool refused intake) and left requests queued. Clears the
+        in-flight bookkeeping for the discarded requests so a later
+        ``apply_plan`` can remove their pools. Returns how many queued
+        requests were discarded."""
+        n = 0
+        for handle in self._handles.values():
+            for rid, _y in handle.flush():
+                if self._by_rid.pop(rid, None) is not None:
+                    n += 1
+        return n
+
+    def pool_stats(self) -> dict:
+        """PoolKey -> live pool stats (pid, queue_len, n_compiles, ...)."""
+        return {key: h.stats() for key, h in self._handles.items()}
+
+    def worker_pids(self) -> dict:
+        """PoolKey -> pid of the process executing that pool."""
+        return {key: s["pid"] for key, s in self.pool_stats().items()}
 
     @property
     def n_stage_pools(self) -> int:
-        return len(self._instances)
+        return len(self._handles)
+
+    def close(self) -> None:
+        for key in list(self._handles):
+            self._retire_pool(self._handles.pop(key))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,237 @@
+"""Worker subprocesses for the serving data path: RemoteExecutor.
+
+``GraftExecutor`` already routes every pool hop through a transport
+channel; this module puts the *other end* of those channels in worker
+subprocesses, so the serving data path genuinely crosses process (and
+socket) boundaries, like the paper's testbed where fragments run behind
+a network hop from the clients.
+
+Topology: one worker process per stage pool. The parent listens on an
+ephemeral localhost port per worker, spawns ``python -m
+repro.serving.remote --connect host:port``, and uses the accepted
+connection as a persistent framed request/reply channel (the same
+``PoolService`` message vocabulary local pools speak). The worker builds
+its jitted fragment program from an ``init`` message carrying the model
+config + numpy parameters, then serves submit/flush/retarget/stats until
+``shutdown``.
+
+Because workers are keyed by pool identity ``(model, start, end)``,
+:meth:`RemoteExecutor.apply_plan` (inherited) keeps surviving workers —
+their pid, their compiled XLA program, their queue — alive across a
+replan; only genuinely new block ranges pay a process spawn + jax import
++ trace/compile. That is the warm-instance story the plan-differ tells,
+now measurable in wall time (``benchmarks/bench_transport.py``).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import socket
+import subprocess
+import sys
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.plandiff import PoolSpec
+from repro.serving.executor import (FragmentInstance, GraftExecutor,
+                                    PoolHandle, PoolService)
+from repro.serving.transport import (
+    DEFAULT_MAX_FRAME, ShapedTransport, SocketChannel, SocketTransport,
+    Transport, TruncatedFrameError, _ShapedChannel, error_reply,
+    read_frame, write_frame)
+
+WORKER_SPAWN_TIMEOUT_S = 120.0          # jax import on a cold worker is slow
+
+
+# ---------------------------------------------------------------------------
+# worker side
+# ---------------------------------------------------------------------------
+
+def _worker_loop(conn: socket.socket,
+                 max_frame_bytes: int = DEFAULT_MAX_FRAME) -> int:
+    """Serve one pool over ``conn`` until shutdown."""
+    write_frame(conn, {"ok": True, "hello": True, "pid": os.getpid()},
+                max_frame_bytes=max_frame_bytes)
+    service = None
+    while True:
+        try:
+            msg = read_frame(conn, max_frame_bytes=max_frame_bytes)
+        except (TruncatedFrameError, OSError):
+            return 0                        # parent went away: exit quietly
+        except Exception:                   # anything else must be LOUD
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+            return 1
+        op = msg.get("op")
+        if op == "shutdown":
+            write_frame(conn, {"ok": True, "pid": os.getpid()},
+                        max_frame_bytes=max_frame_bytes)
+            return 0
+        if op == "ping":
+            reply = {"ok": True, "pid": os.getpid()}
+        elif op == "init":
+            try:
+                cfg = pickle.loads(msg["cfg"])
+                spec = PoolSpec(key=tuple(msg["key"]), share=msg["share"],
+                                batch=msg["batch"],
+                                n_instances=msg["n_instances"])
+                service = PoolService(
+                    FragmentInstance(msg["params"], cfg, spec))
+                reply = {"ok": True, "pid": os.getpid()}
+            except Exception as e:
+                reply = error_reply(e)
+        elif service is None:
+            reply = {"ok": False, "error": "worker not initialised"}
+        else:
+            reply = service.handle(msg)
+        write_frame(conn, reply, max_frame_bytes=max_frame_bytes)
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.serving.remote")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="parent's per-worker listener to dial back to")
+    ap.add_argument("--max-frame", type=int, default=DEFAULT_MAX_FRAME,
+                    help="frame size cap; must match the parent transport")
+    args = ap.parse_args(argv)
+    host, port = args.connect.rsplit(":", 1)
+    conn = socket.create_connection((host, int(port)), timeout=30.0)
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return _worker_loop(conn, max_frame_bytes=args.max_frame)
+
+
+# ---------------------------------------------------------------------------
+# parent side
+# ---------------------------------------------------------------------------
+
+def _np_tree(params):
+    """Jax param pytree -> nested numpy (msgpack-framable)."""
+    import jax
+    return jax.tree.map(lambda a: np.asarray(a), params)
+
+
+class WorkerProc:
+    """One spawned pool worker + its connected channel."""
+
+    def __init__(self, key: tuple, max_frame_bytes: int = DEFAULT_MAX_FRAME):
+        self.key = key
+        lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lsock.bind(("127.0.0.1", 0))
+        lsock.listen(1)
+        lsock.settimeout(WORKER_SPAWN_TIMEOUT_S)
+        host, port = lsock.getsockname()
+        env = dict(os.environ)
+        src = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        # -c instead of -m: runpy would re-execute this module on top of
+        # the copy the package __init__ already imported in the worker
+        self.proc = subprocess.Popen(
+            [sys.executable, "-c",
+             "import sys; from repro.serving.remote import main; "
+             "sys.exit(main(sys.argv[1:]))",
+             "--connect", f"{host}:{port}",
+             "--max-frame", str(max_frame_bytes)], env=env)
+        try:
+            conn, _ = lsock.accept()
+        except socket.timeout:
+            self.proc.kill()
+            rc = self.proc.wait(timeout=10)
+            raise RuntimeError(
+                f"worker for pool {key} never dialed back within "
+                f"{WORKER_SPAWN_TIMEOUT_S:.0f}s (exit status {rc}); see the "
+                f"worker's stderr above for the crash") from None
+        finally:
+            lsock.close()
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        hello = read_frame(conn, max_frame_bytes=max_frame_bytes)
+        if not hello.get("hello"):
+            raise RuntimeError(f"worker for {key} sent bad hello: {hello}")
+        self.pid = int(hello["pid"])
+        self.channel = SocketChannel(f"worker/{key}", None, max_frame_bytes,
+                                     sock=conn)
+
+    def init(self, cfg_bytes: bytes, params_np, spec: PoolSpec) -> None:
+        reply = self.channel.request({
+            "op": "init", "cfg": cfg_bytes, "params": params_np,
+            "key": list(spec.key), "share": spec.share, "batch": spec.batch,
+            "n_instances": spec.n_instances})
+        if not reply.get("ok"):
+            raise RuntimeError(f"worker init for {spec.key} failed: "
+                               f"{reply.get('error')}")
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        try:
+            self.channel.request({"op": "shutdown"})
+        except Exception:
+            pass
+        self.channel.close()
+        try:
+            self.proc.wait(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            self.proc.kill()
+            self.proc.wait(timeout=timeout)
+
+
+class RemoteExecutor(GraftExecutor):
+    """GraftExecutor whose stage pools live in worker subprocesses.
+
+    Only pool creation/retirement differ from the in-process executor —
+    serve()/apply_plan()/stats logic is inherited verbatim, so the same
+    code path is proven against real process boundaries.
+
+    ``transport`` may be a :class:`SocketTransport` (default) or a
+    :class:`ShapedTransport` wrapping one — shaped links apply the
+    per-client bandwidth/latency model to every submit hop.
+    """
+
+    def __init__(self, plan, params, cfg,
+                 transport: Optional[Transport] = None):
+        self._workers: dict[tuple, WorkerProc] = {}
+        self._cfg_bytes = pickle.dumps(cfg)
+        self._params_np = _np_tree(params)
+        self.spawn_log: list = []               # (key, spawn_wall_s)
+        tp = transport if transport is not None else SocketTransport()
+        base = tp.inner if isinstance(tp, ShapedTransport) else tp
+        if not isinstance(base, SocketTransport):
+            raise TypeError(
+                "RemoteExecutor needs a SocketTransport (optionally "
+                f"wrapped in ShapedTransport), got {type(base).__name__}")
+        self._shaper = tp if isinstance(tp, ShapedTransport) else None
+        self._max_frame = base.max_frame_bytes
+        super().__init__(plan, params, cfg, transport=tp)
+
+    def _spawn_pool(self, spec: PoolSpec) -> PoolHandle:
+        t0 = time.perf_counter()
+        w = WorkerProc(spec.key, self._max_frame)
+        w.init(self._cfg_bytes, self._params_np, spec)
+        self._workers[spec.key] = w
+        self.spawn_log.append((spec.key, time.perf_counter() - t0))
+        channel = w.channel
+        if self._shaper is not None:
+            channel = _ShapedChannel(channel, self._shaper)
+        h = PoolHandle(spec.key, channel)
+        h.pid = w.pid
+        return h
+
+    def _retire_pool(self, handle: PoolHandle) -> None:
+        w = self._workers.pop(handle.key, None)
+        if w is not None:
+            w.shutdown()
+        else:
+            handle.close()
+
+    def close(self) -> None:
+        super().close()
+        for key in list(self._workers):         # safety net
+            self._workers.pop(key).shutdown()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,71 @@
+"""Shared scaffolding for real-execution (smoke-scale) serving runs.
+
+The executor tests, ``launch/serve.py --execute``, the online-serving
+example, and ``benchmarks/bench_transport.py`` all need the same setup:
+a reduced model config, a profile book built from its analytic layer
+costs, initialised parameters, and a fleet of smoke fragments whose
+partition points are valid for the reduced layer count. Centralised here
+so the pieces can't drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.costmodel import arch_layer_costs
+from repro.core.fragment import Fragment
+from repro.core.profiles import ProfileBook
+
+DEFAULT_ARCH = "qwen3-1.7b"
+DEFAULT_SEQ = 16
+
+
+def smoke_setup(arch: str = DEFAULT_ARCH, *, seq_len: int = DEFAULT_SEQ,
+                seed: int = 0):
+    """-> (cfg, book, params): everything an executor needs, smoke scale."""
+    import jax
+    from repro import models as M
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config(arch)
+    costs = dataclasses.replace(arch_layer_costs(cfg, seq_len=seq_len),
+                                name=cfg.name)
+    book = ProfileBook()
+    book.add(costs)
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, book, params
+
+
+def smoke_fragments(cfg, n_clients: int = 3, *, rate: float = 30.0,
+                    seed: int = 0) -> list[Fragment]:
+    """A small fleet with partition points spread over the reduced model."""
+    from repro.models import n_fragment_units
+    rng = np.random.RandomState(seed)
+    L = n_fragment_units(cfg)
+    return [Fragment(cfg.name, p=int(rng.randint(0, L)),
+                     t=float(40.0 + 40.0 * rng.rand()), q=rate,
+                     client=f"c{i}")
+            for i in range(n_clients)]
+
+
+def smoke_requests(cfg, frags, *, seq_len: int = DEFAULT_SEQ,
+                   seed: Optional[int] = None, rng=None) -> list:
+    """[(ServeRequest, p), ...] with random token payloads per fragment."""
+    from repro.serving.executor import ServeRequest
+    if rng is None:
+        rng = np.random.RandomState(seed or 0)
+    return [(ServeRequest(
+        client=f.client,
+        tokens=rng.randint(0, cfg.vocab_size, seq_len).astype(np.int32)),
+        f.p) for f in frags]
+
+
+def check_against_monolithic(cfg, params, reqs, *, atol=5e-5, rtol=1e-3):
+    """Assert each served result equals the un-fragmented forward pass."""
+    from repro import models as M
+    for req, _p in reqs:
+        want, _ = M.forward(params, cfg, np.asarray(req.tokens)[None])
+        np.testing.assert_allclose(req.result, np.asarray(want[0]),
+                                   atol=atol, rtol=rtol)

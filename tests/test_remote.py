@@ -1,0 +1,101 @@
+"""RemoteExecutor: the full cross-process data path. A request served via
+SocketTransport + worker subprocesses must be numerically identical to
+the monolithic fragment run — including across a mid-run apply_plan()
+where surviving workers keep their process (pid) and compiled program
+(compile count)."""
+import numpy as np
+import pytest
+
+from repro.core import Fragment, GraftPlanner
+from repro.serving import SocketTransport
+from repro.serving.remote import RemoteExecutor
+from repro.serving.smoke import (check_against_monolithic, smoke_requests,
+                                 smoke_setup)
+
+pytestmark = pytest.mark.slow          # worker spawn + jax import + compile
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return smoke_setup("qwen3-1.7b")
+
+
+def test_remote_executor_equivalence_across_replan(setup):
+    cfg, book, params = setup
+    planner = GraftPlanner(book)
+    frags1 = [Fragment(cfg.name, 0, 60.0, 30.0, client="c0"),
+              Fragment(cfg.name, 0, 55.0, 30.0, client="c1"),
+              Fragment(cfg.name, 1, 70.0, 30.0, client="c2")]
+    with RemoteExecutor(planner.plan(frags1), params, cfg,
+                        transport=SocketTransport()) as ex:
+        # every pool runs in its own worker process, none in the parent
+        import os
+        pids1 = ex.worker_pids()
+        assert len(pids1) == ex.n_stage_pools
+        assert os.getpid() not in pids1.values()
+
+        reqs = smoke_requests(cfg, frags1, seed=11)
+        ex.serve(reqs)
+        check_against_monolithic(cfg, params, reqs)
+        compiles1 = {k: s["n_compiles"] for k, s in ex.pool_stats().items()}
+        created1 = ex.stats["pools_created"]
+
+        # conditions shift: c3 arrives on the deeper split point
+        frags2 = frags1 + [Fragment(cfg.name, 1, 50.0, 30.0, client="c3")]
+        diff = ex.apply_plan(planner.plan(frags2))
+        assert diff.n_kept >= 1, "no pool survived a mild replan"
+        assert ex.stats["pools_created"] - created1 == \
+            len(diff.by_kind("add"))
+
+        # surviving workers were NOT restarted: same pid as before
+        pids2 = ex.worker_pids()
+        survivors = set(pids1) & set(pids2)
+        assert survivors
+        for key in survivors:
+            assert pids2[key] == pids1[key], f"worker for {key} restarted"
+
+        # serving the SAME request shapes after the replan recompiles
+        # nothing on strictly-kept pools (their batch spec is unchanged)
+        reqs2 = smoke_requests(cfg, frags1, seed=11)
+        ex.serve(reqs2)
+        check_against_monolithic(cfg, params, reqs2)
+        compiles2 = {k: s["n_compiles"] for k, s in ex.pool_stats().items()}
+        kept_keys = {a.key for a in diff.by_kind("keep")} & set(compiles1)
+        assert kept_keys, "replan produced no strictly-kept pool"
+        for key in kept_keys:
+            assert compiles2[key] == compiles1[key], \
+                f"kept pool {key} recompiled across apply_plan"
+
+        # the full new fleet (including the arrival) is exact too
+        reqs3 = smoke_requests(cfg, frags2, seed=13)
+        ex.serve(reqs3)
+        check_against_monolithic(cfg, params, reqs3)
+
+        # identity transition: nothing spawned, nothing killed
+        before = dict(ex.stats)
+        d2 = ex.apply_plan(planner.plan(frags2))
+        assert d2.is_identity
+        assert ex.stats["pools_created"] == before["pools_created"]
+        assert ex.worker_pids() == pids2
+
+
+def test_remote_worker_shutdown_on_pool_removal(setup):
+    cfg, book, params = setup
+    planner = GraftPlanner(book)
+    frags = [Fragment(cfg.name, 0, 60.0, 30.0, client="c0"),
+             Fragment(cfg.name, 1, 45.0, 30.0, client="c1")]
+    ex = RemoteExecutor(planner.plan(frags), params, cfg)
+    procs = {k: w.proc for k, w in ex._workers.items()}
+    assert len(procs) == ex.n_stage_pools
+    # shrink to one client: the departed pool's worker must exit
+    diff = ex.apply_plan(planner.plan(frags[:1]))
+    removed = {a.key for a in diff.by_kind("remove")}
+    assert removed
+    for key in removed:
+        assert procs[key].wait(timeout=15) == 0
+    reqs = smoke_requests(cfg, frags[:1], seed=5)
+    ex.serve(reqs)
+    check_against_monolithic(cfg, params, reqs)
+    ex.close()
+    for proc in procs.values():
+        assert proc.poll() is not None       # every worker is gone
