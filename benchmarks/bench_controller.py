@@ -53,3 +53,37 @@ def run(rows: Rows, *, quick=False) -> None:
                  f"attainment_gain={a_c - a_s:+.3f};"
                  f"drop_gain={d_s - d_c:+.3f};"
                  f"replan_speedup={l_s / max(l_c, 1e-9):.1f}x")
+
+    # ---- instance_startup_ms sweep: where does diffing stop mattering? --
+    # Plan diffing's edge is warm instances surviving a replan; on
+    # hardware with near-instant instance (re)starts the scratch redeploy
+    # catches up. Chart attainment gain vs startup cost to find the
+    # crossover (ROADMAP item: "fast-restart hardware").
+    sweep = (0.0, 200.0, 1600.0) if quick \
+        else (0.0, 50.0, 200.0, 800.0, 3200.0)
+    model = "inc"
+    fleet = make_fleet(model, b, n_nano=8, rate=rate_for(model),
+                       seed=17, trace_kw=VOLATILE)
+    frags0 = fleet_fragments(fleet, b, t=0.0)
+    crossover = None
+    for startup in sweep:
+        att = {}
+        for mode in ("controller", "scratch"):
+            diffs = mode == "controller"
+            planner = IncrementalPlanner(b) if diffs else GraftPlanner(b)
+            ctl = ServingController(b, planner=planner, apply_diffs=diffs)
+            plan0 = ctl.bootstrap(frags0)
+            res = simulate(plan0, fleet, b, duration_s=duration, t0=0.0,
+                           controller=ctl, seed=3,
+                           instance_startup_ms=startup)
+            att[mode] = res.attainment()
+        gain = att["controller"] - att["scratch"]
+        if crossover is None and gain > 0.02:
+            crossover = startup
+        rows.add(f"controller/startup_sweep/{int(startup)}", 0.0,
+                 f"attainment_controller={att['controller']:.3f};"
+                 f"attainment_scratch={att['scratch']:.3f};"
+                 f"attainment_gain={gain:+.3f}")
+    rows.add("controller/startup_sweep/crossover", 0.0,
+             f"first_startup_ms_with_gain="
+             f"{crossover if crossover is not None else 'none'}")

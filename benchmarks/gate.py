@@ -15,9 +15,15 @@ are *blocking*):
                                online-serving bench; fails when below
                                baseline * (1-tol).
 
+  * ``server_p99_ms``        — event-driven serving-runtime tail latency
+                               from ``benchmarks/bench_server.py``'s
+                               paced phase; gated only once a baseline
+                               containing the key is written (it is
+                               recorded-but-non-blocking until then).
+
 Everything else (controller replan latency, transport hop/serialize,
-warm-vs-cold replan wall times) is recorded in BENCH_ci.json for trend
-inspection but not gated.
+warm-vs-cold replan wall times, server makespan ratio) is recorded in
+BENCH_ci.json for trend inspection but not gated.
 
 Refreshing the baseline: rerun ``--write-baseline`` on a quiet machine
 at the commit you want to bless, eyeball the diff of
@@ -32,7 +38,7 @@ import io
 import json
 import sys
 
-DEFAULT_ONLY = "incremental,controller,transport"
+DEFAULT_ONLY = "incremental,controller,transport,server"
 DEFAULT_TOL = 0.20
 
 
@@ -84,6 +90,11 @@ def extract_metrics(rows: list) -> dict:
             metrics[f"replan_cold_ms/{name.split('/')[2]}"] = d["cold_ms"]
         elif name.startswith("transport/hop/"):
             metrics[f"hop_us/{name.split('/')[2]}"] = us
+        elif name == "server/latency":
+            metrics["server_p99_ms"] = d["p99_ms"]
+            metrics["server_p50_ms"] = d["p50_ms"]
+        elif name == "server/makespan/pipelined":
+            metrics["server_makespan_ratio"] = d["ratio"]
     return metrics
 
 
@@ -106,6 +117,14 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
                 failures.append(
                     f"{key}: {cur:.3f} vs baseline {base:.3f} "
                     f"(>{tol:.0%} worse)")
+        elif key == "server_p99_ms":
+            # serving-runtime tail latency: gated once a baseline holds
+            # the key (compare() only sees baseline keys, so this stays
+            # non-blocking until someone --write-baseline's it in)
+            if cur > base * (1 + tol):
+                failures.append(
+                    f"{key}: {cur:.2f} ms vs baseline {base:.2f} ms "
+                    f"(>{tol:.0%} slower)")
         # other metrics: recorded, not gated
     return failures
 
@@ -162,6 +181,10 @@ def main(argv=None) -> int:
         if vals:
             print(f"  {key}: " + "  ".join(
                 f"{m}={v:.4g}" for m, v in sorted(vals.items())))
+    srv = {k: v for k, v in metrics.items() if k.startswith("server_")}
+    if srv:
+        print("  server: " + "  ".join(
+            f"{k[7:]}={v:.4g}" for k, v in sorted(srv.items())))
     if failures:
         print("BENCH GATE FAILED:", file=sys.stderr)
         for fmsg in failures:

@@ -16,7 +16,7 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 if [[ "${1:-}" == "--bench-gate" ]]; then
     python -m benchmarks.gate \
-        --only incremental,controller,transport \
+        --only incremental,controller,transport,server \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
     exit $?
 fi
@@ -27,5 +27,9 @@ if [[ "${1:-}" != "--tests" ]]; then
     # the demo path must not silently rot: tiny in-process transport run
     python examples/online_serving.py --transport inprocess --waves 2 \
         --clients 2
+    # the event-driven runtime, wall-clock: ~2 s in-process serve loop with
+    # a mid-traffic partition shift driving a timer replan
+    python -m repro.launch.serve --serve-loop --execute inprocess \
+        --serve-seconds 2 --clients 2
     python -m benchmarks.run --quick --only incremental,controller
 fi

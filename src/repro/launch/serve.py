@@ -8,6 +8,13 @@ the plan is deployed on an executor constructed against a Transport
 (in-process loopback or worker subprocesses behind localhost sockets),
 a few request waves are served with numerics checked against the
 monolithic forward pass, and the measured uplink is reported per hop.
+
+``--serve-loop`` goes further: the full event-driven runtime
+(``serving.server.GraftServer``) runs WALL-CLOCK for ``--serve-seconds``
+— trace-driven client threads, deadline-aware micro-batching per stage
+pool, pipelined pool drivers, and the controller replanning on a timer
+against live transport-measured uplinks — then reports per-client SLO
+attainment, p50/p99 latency, and the replan count.
 """
 from __future__ import annotations
 
@@ -50,6 +57,39 @@ def run_execute(arch: str, mode: str, n_clients: int, seed: int) -> int:
     return 0
 
 
+def run_serve_loop_cli(args) -> int:
+    """Wall-clock event-driven runtime; per-client SLO report."""
+    from repro.serving import run_serve_loop
+    mode = args.execute if args.execute != "off" else "inprocess"
+    rep = run_serve_loop(
+        arch=args.arch, mode=mode, n_clients=min(args.clients, 4),
+        seconds=args.serve_seconds, rate=args.serve_rate, seed=args.seed,
+        shift_frac=0.5, shaped=args.shaped, log=print)
+    print(f"[serve-loop] served {rep['served']} requests in "
+          f"{rep['wall_s']:.1f}s wall "
+          f"(mean batch {rep['mean_batch']:.2f}, "
+          f"{rep['n_stage_pools']} stage pools)")
+    print(f"[serve-loop] replans applied: {rep['replans']} "
+          f"({rep['timer_replans']} timer-driven); triggers "
+          f"{rep['controller_triggers']}; "
+          f"rerouted {rep['rerouted']}, waited {rep['waited']}")
+    print("[serve-loop] client     n   attainment   p50 ms   p99 ms"
+          "   budget ms")
+    for c, s in rep["clients"].items():
+        print(f"[serve-loop] {c:8s} {s['n']:3d}   {s['attainment']:9.1%}"
+              f" {s['p50_ms']:8.1f} {s['p99_ms']:8.1f}"
+              f" {s['budget_ms']:9.1f}")
+    print(f"[serve-loop] overall attainment {rep['attainment']:.1%}, "
+          f"p50/p99 = {rep['p50_ms']:.1f}/{rep['p99_ms']:.1f} ms")
+    if rep["numerics_ok"]:
+        print(f"[serve-loop] numerics matched monolithic forward for "
+              f"{rep['numerics_checked']} served requests")
+    else:
+        print(f"[serve-loop] NUMERICS MISMATCH: "
+              f"{rep.get('numerics_error', '?')}")
+    return 0 if rep["drained"] and rep["numerics_ok"] else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -64,7 +104,21 @@ def main(argv=None):
                     default="off",
                     help="also run the real smoke-scale data path behind "
                          "this transport")
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="run the event-driven GraftServer wall-clock "
+                         "(with --execute inprocess|socket; default "
+                         "inprocess) and report SLO attainment")
+    ap.add_argument("--serve-seconds", type=float, default=8.0,
+                    help="serve-loop wall-clock duration")
+    ap.add_argument("--serve-rate", type=float, default=6.0,
+                    help="serve-loop per-client request rate (RPS)")
+    ap.add_argument("--shaped", action="store_true",
+                    help="serve-loop: shape uplinks with synthetic 5G "
+                         "traces")
     args = ap.parse_args(argv)
+
+    if args.serve_loop:
+        return run_serve_loop_cli(args)
 
     book = default_book()
     fleet = make_fleet(args.arch, book, n_nano=args.clients - args.tx2,

@@ -11,12 +11,15 @@ from repro.serving.executor import (GraftExecutor, ServeRequest,
                                     PoolDrainingError)
 from repro.serving.remote import RemoteExecutor
 from repro.serving.controller import ServingController, Estimate
+from repro.serving.batcher import BatchItem, MicroBatcher
+from repro.serving.server import GraftServer, run_serve_loop
 
 __all__ = [
     "partition", "PartitionDecision", "MobileClient", "make_fleet",
     "fleet_fragments", "simulate", "SimResult", "GraftExecutor",
     "ServeRequest", "PoolDrainingError", "RemoteExecutor",
     "ServingController", "Estimate",
+    "BatchItem", "MicroBatcher", "GraftServer", "run_serve_loop",
     "Transport", "InProcessTransport", "SocketTransport", "ShapedTransport",
     "LinkShape", "TransferStats", "FrameError", "TruncatedFrameError",
 ]

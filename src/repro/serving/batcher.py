@@ -1,0 +1,209 @@
+"""Deadline-aware micro-batching for the serving runtime.
+
+Each stage pool in a :class:`repro.serving.server.GraftServer` owns one
+:class:`MicroBatcher`. Requests wait here — server-side, payload in hand
+— until their batch *closes*, which happens on whichever comes first:
+
+  * the pool's planned batch size is reached (``max_batch``), or
+  * the earliest **flush deadline** in the queue expires.
+
+A request's flush deadline is its absolute SLO deadline minus the
+estimated cost of everything still ahead of it (remaining stage
+execution from the cost model / measured EWMAs, plus a measured uplink
+hop allowance) — the latest instant a batch containing it can close and
+still meet the SLO. Batches therefore fill up when there is slack and
+fire immediately when there is none, instead of flushing on wave or
+depth boundaries like the lock-step ``GraftExecutor.serve`` loop.
+
+The batcher is intentionally executor-agnostic: it holds opaque
+:class:`BatchItem` payloads and deals only in deadlines, so it is unit
+testable without jax and reusable for any staged pipeline.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+MAX_BATCH_SIZE_SAMPLES = 4096     # long-running servers must not grow
+                                  # a float per batch forever
+
+
+@dataclass
+class BatchItem:
+    """One queued request at one stage of its chain."""
+    rid: int
+    client: str
+    payload: object                  # activation at this stage's boundary
+    flush_ms: float                  # latest batch-close time (server clock)
+    deadline_ms: float               # absolute server-side SLO deadline
+    extras: Optional[dict] = None
+    boundary: int = 0                # block boundary the payload sits at
+    enqueued_ms: float = 0.0
+
+
+@dataclass
+class BatcherStats:
+    n_batches: int = 0
+    n_items: int = 0
+    closed_full: int = 0             # batches closed by max_batch
+    closed_deadline: int = 0         # batches closed by flush-deadline expiry
+    batch_sizes: deque = field(     # recent sizes only; totals above
+        default_factory=lambda: deque(maxlen=MAX_BATCH_SIZE_SAMPLES))
+
+    def mean_batch(self) -> float:
+        return self.n_items / self.n_batches if self.n_batches else 0.0
+
+
+class MicroBatcher:
+    """Thread-safe earliest-deadline-first batching queue.
+
+    Producers :meth:`put` items; ONE consumer (the pool's driver thread)
+    alternates :meth:`pop_ready` / :meth:`wait_for_work`. ``stop()``
+    wakes the consumer permanently; ``drain()`` removes and returns
+    everything queued (the reroute path when a pool is removed while
+    requests are waiting on it).
+    """
+
+    def __init__(self, max_batch: int = 1):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._heap: list = []                    # (flush_ms, seq, item)
+        self._seq = itertools.count()
+        self._max_batch = max(int(max_batch), 1)
+        self._stopped = False
+        self._paused = False                     # test hook: hold batches
+        self.stats = BatcherStats()
+
+    # ------------------------------------------------------------ intake
+    def put(self, item: BatchItem) -> None:
+        with self._cond:
+            heapq.heappush(self._heap, (item.flush_ms, next(self._seq), item))
+            self._cond.notify_all()
+
+    def put_many(self, items) -> None:
+        with self._cond:
+            for item in items:
+                heapq.heappush(self._heap,
+                               (item.flush_ms, next(self._seq), item))
+            self._cond.notify_all()
+
+    # ---------------------------------------------------------- consumer
+    def _ready_locked(self, now_ms: float) -> bool:
+        if self._paused or not self._heap:
+            return False
+        return (len(self._heap) >= self._max_batch
+                or self._heap[0][0] <= now_ms)
+
+    def pop_ready(self, now_ms: float) -> list:
+        """Close and return one batch if the policy says so, else [].
+
+        A batch closes when ``max_batch`` items are queued OR the
+        earliest flush deadline has passed; items leave in EDF order.
+        """
+        with self._cond:
+            if not self._ready_locked(now_ms):
+                return []
+            by_full = len(self._heap) >= self._max_batch
+            batch = [heapq.heappop(self._heap)[2]
+                     for _ in range(min(self._max_batch, len(self._heap)))]
+            self.stats.n_batches += 1
+            self.stats.n_items += len(batch)
+            self.stats.batch_sizes.append(len(batch))
+            if by_full:
+                self.stats.closed_full += 1
+            else:
+                self.stats.closed_deadline += 1
+            return batch
+
+    def wait_for_work(self, now_ms: float, *,
+                      max_wait_ms: float = 100.0) -> None:
+        """Block until a batch could be ready (or stop/timeout).
+
+        Sleeps until the earliest flush deadline, a new item arrival, or
+        ``max_wait_ms`` — whichever is first. The caller re-checks with
+        :meth:`pop_ready`, so spurious wakeups are harmless.
+        """
+        with self._cond:
+            if self._stopped or self._ready_locked(now_ms):
+                return
+            wait_ms = max_wait_ms
+            if self._heap and not self._paused:
+                wait_ms = min(wait_ms, max(self._heap[0][0] - now_ms, 0.0))
+            self._cond.wait(timeout=wait_ms / 1e3)
+
+    # ------------------------------------------------------------ control
+    def set_max_batch(self, n: int) -> None:
+        with self._cond:
+            self._max_batch = max(int(n), 1)
+            self._cond.notify_all()
+
+    @property
+    def max_batch(self) -> int:
+        return self._max_batch
+
+    def pause(self) -> None:
+        """Test hook: hold every queued item until :meth:`resume` (lets a
+        test pin requests on a pool while a replan removes it)."""
+        with self._cond:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cond:
+            self._paused = False
+            self._cond.notify_all()
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stopped = True
+            self._cond.notify_all()
+
+    @property
+    def stopped(self) -> bool:
+        return self._stopped
+
+    def drain(self) -> list:
+        """Remove and return every queued item (EDF order)."""
+        with self._cond:
+            out = [heapq.heappop(self._heap)[2] for _ in range(len(self._heap))]
+            return out
+
+    def next_flush_ms(self) -> Optional[float]:
+        with self._cond:
+            return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._heap)
+
+
+INTER_HOP_MS = 0.5       # server-internal execute-frame hop allowance
+
+
+def remaining_cost_ms(stage_costs: list, stage_idx: int, *,
+                      hop_ms: float = 0.0) -> float:
+    """Estimated time still ahead of a request sitting at ``stage_idx``:
+    execution of stages [stage_idx, end), plus THIS stage's own submit
+    hop (``hop_ms`` — the measured uplink for stage 0; deeper stages are
+    reached by cheap server-internal execute frames, so the caller
+    passes a small allowance, not the uplink), plus one internal hop per
+    later stage. Charging the uplink once matters: on a slow link a
+    per-stage charge would pull every flush deadline to 'now' and
+    collapse batching exactly in the network-bound regime."""
+    n_later = max(len(stage_costs) - stage_idx - 1, 0)
+    return float(sum(stage_costs[stage_idx:])) + hop_ms \
+        + INTER_HOP_MS * n_later
+
+
+def flush_deadline_ms(deadline_ms: float, stage_costs: list,
+                      stage_idx: int, now_ms: float, *,
+                      hop_ms: float = 0.0) -> float:
+    """The latest batch-close time that still meets ``deadline_ms`` given
+    the estimated remaining work; never earlier than ``now_ms`` (a late
+    request fires immediately rather than scheduling in the past)."""
+    t = deadline_ms - remaining_cost_ms(stage_costs, stage_idx,
+                                        hop_ms=hop_ms)
+    return max(t, now_ms)

@@ -25,6 +25,7 @@ restarted) that ``benchmarks/bench_controller.py`` compares against.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -63,6 +64,20 @@ class Estimate:
     budget_ms: float
     bw: float                                         # bytes/s uplink
     risk: float                                       # lat/budget percentile
+    bw_slope: float = 0.0                             # bytes/s per ms (trend)
+    from_prior: bool = False                          # cold-start seeded
+
+
+@dataclass(frozen=True)
+class _Prior:
+    """Declared-rate prior for one client (controller cold start): what
+    the fleet *said* it would do, trusted until the sliding window has
+    enough real samples to speak for itself."""
+    model: str
+    p: int
+    q: float
+    t: float
+    until_ms: float
 
 
 class ServingController:
@@ -76,7 +91,11 @@ class ServingController:
                  risk_threshold: float = 0.85,
                  risk_boost: float = 1.25,
                  min_replan_interval_ms: float = 1000.0,
-                 apply_diffs: bool = True):
+                 apply_diffs: bool = True,
+                 cold_start_samples: int = 8,
+                 bw_trend_lookahead_ms: float = 1500.0,
+                 bw_trend_threshold: float = 0.25,
+                 bw_trend_min_samples: int = 4):
         from repro.core.reuse import IncrementalPlanner
         self.book = book
         self.planner = planner or IncrementalPlanner(book)
@@ -88,10 +107,16 @@ class ServingController:
         self.risk_boost = risk_boost
         self.min_replan_interval_ms = min_replan_interval_ms
         self.apply_diffs = apply_diffs
+        self.cold_start_samples = cold_start_samples
+        self.bw_trend_lookahead_ms = bw_trend_lookahead_ms
+        self.bw_trend_threshold = bw_trend_threshold
+        self.bw_trend_min_samples = bw_trend_min_samples
 
         self._clients: dict[str, ClientWindow] = {}
         self._planned_q: dict[str, float] = {}           # client -> planned RPS
         self._planned_p: dict[str, int] = {}
+        self._planned_bw: dict[str, float] = {}          # bw at last replan
+        self._priors: dict[str, _Prior] = {}             # cold-start seeds
         self._plan: Optional[ExecutionPlan] = None
         self._last_replan_ms = -np.inf
         self.stats = {"replans": 0, "replan_ms": [], "triggers": {},
@@ -146,6 +171,18 @@ class ServingController:
             w.lat.append((now_ms, server_latency_ms / budget_ms))
 
     # ---------------------------------------------------------- estimates
+    def _bw_slope(self, w: ClientWindow) -> float:
+        """Linear bandwidth trend over the window (bytes/s per ms); 0
+        when there aren't enough samples to fit a line."""
+        if len(w.bw) < self.bw_trend_min_samples:
+            return 0.0
+        ts = np.array([t for t, _ in w.bw], np.float64)
+        vs = np.array([v for _, v in w.bw], np.float64)
+        span = ts[-1] - ts[0]
+        if span <= 1e-6:
+            return 0.0
+        return float(np.polyfit(ts - ts[0], vs, 1)[0])
+
     def estimates(self, now_ms: float) -> dict[str, Estimate]:
         out = {}
         horizon = now_ms - self.window_ms
@@ -165,10 +202,42 @@ class ServingController:
             risk = float(np.percentile([r for _, r in w.lat],
                                        self.risk_pct)) if w.lat else 0.0
             out[name] = Estimate(model=w.model, p=w.p, rate=rate,
-                                 budget_ms=budget, bw=bw, risk=risk)
+                                 budget_ms=budget, bw=bw, risk=risk,
+                                 bw_slope=self._bw_slope(w))
+        # cold-start overlay: while a client's window is near-empty, the
+        # fleet's DECLARED rate/budget speak for it (bounding the first
+        # ticks' estimation error) — the window takes over once it holds
+        # >= cold_start_samples real arrivals, or the prior expires.
+        graduated = []
+        for name, pr in self._priors.items():
+            w = self._clients.get(name)
+            n = len(w.arrivals) if w is not None else 0
+            if n >= self.cold_start_samples or now_ms >= pr.until_ms:
+                graduated.append(name)
+                continue
+            e = out.get(name)
+            if e is None:
+                out[name] = Estimate(model=pr.model, p=pr.p, rate=pr.q,
+                                     budget_ms=pr.t, bw=0.0, risk=0.0,
+                                     from_prior=True)
+            else:
+                budget = min(e.budget_ms, pr.t) if e.budget_ms > 0 else pr.t
+                out[name] = dataclasses.replace(e, rate=pr.q,
+                                                budget_ms=budget,
+                                                from_prior=True)
+        for name in graduated:
+            del self._priors[name]
         return out
 
     # ------------------------------------------------------------ triggers
+    def _bw_anchor(self, e: Estimate) -> float:
+        """The bandwidth a replan effectively plans for: the projected
+        value when the trend is down, the current mean otherwise.
+        Floored at a sliver of the current mean so a to-zero projection
+        can't park the anchor at 0 and disarm the trigger."""
+        proj = e.bw + min(e.bw_slope, 0.0) * self.bw_trend_lookahead_ms
+        return max(min(e.bw, proj), 0.05 * e.bw)
+
     def _triggers(self, est: dict[str, Estimate]) -> list[str]:
         trig = []
         for name, e in est.items():
@@ -183,6 +252,15 @@ class ServingController:
                     trig.append("rate_drift")
             if e.risk > self.risk_threshold:
                 trig.append("slo_risk")
+            # predictive: a steadily DEGRADING uplink means this client is
+            # about to shift its partition point (Neurosurgeon picks a
+            # deeper split on a slow link) — replan on the projected drop
+            # instead of waiting for mis-routed requests to arrive.
+            if e.bw > 0 and e.bw_slope < 0:
+                proj = e.bw + e.bw_slope * self.bw_trend_lookahead_ms
+                base = self._planned_bw.get(name, e.bw)
+                if base > 0 and (base - proj) / base > self.bw_trend_threshold:
+                    trig.append("bw_trend")
         for name in self._planned_q:
             if name not in est:
                 trig.append("fragment_departure")
@@ -191,10 +269,17 @@ class ServingController:
     # -------------------------------------------------------------- plan
     def adopt(self, plan: ExecutionPlan, frags: list[Fragment],
               now_ms: float = 0.0) -> ExecutionPlan:
-        """Seed the controller with an externally-built initial plan."""
+        """Seed the controller with an externally-built initial plan.
+        The fragments' declared (rate, budget) become cold-start priors:
+        until a client's window holds real data, estimates speak with the
+        fleet's declared numbers instead of overshooting on noise."""
         self._plan = plan
         self._planned_q = {f.client: f.q for f in frags}
         self._planned_p = {f.client: f.p for f in frags}
+        self._priors = {f.client: _Prior(model=f.model, p=f.p, q=f.q,
+                                         t=f.t,
+                                         until_ms=now_ms + self.window_ms)
+                        for f in frags}
         self._last_replan_ms = now_ms
         return plan
 
@@ -244,6 +329,13 @@ class ServingController:
         self._plan = plan
         self._planned_q = {f.client: f.q for f in frags}
         self._planned_p = {f.client: f.p for f in frags}
+        # anchor the trend trigger at the bw this replan ALREADY planned
+        # for (the projected value, when the trend is down): bw_trend
+        # re-fires only on a further projected drop below this. Clients
+        # with no bw signal yet (cold start) get NO anchor — a 0.0 entry
+        # would permanently pass the base>0 guard and kill the trigger
+        self._planned_bw = {name: self._bw_anchor(e)
+                            for name, e in est.items() if e.bw > 0}
         # a replan resets the risk windows: the new allocation gets a fresh
         # look instead of being re-triggered by stale queueing samples
         for w in self._clients.values():

@@ -28,6 +28,7 @@ from __future__ import annotations
 import functools
 import itertools
 import os
+import threading
 from collections import deque
 from dataclasses import dataclass
 from typing import Optional
@@ -143,20 +144,34 @@ class PoolService:
         except Exception as e:                       # error crosses the wire
             return error_reply(e)
 
+    def _enqueue(self, item: dict) -> None:
+        req = ServeRequest(client=item["client"], tokens=None,
+                           extras=item.get("extras") or None)
+        req._rid = item["req_id"]
+        self.inst.submit(req, jnp.asarray(item["payload"]))
+
+    def _flush_reply(self) -> dict:
+        return {"ok": True,
+                "results": [{"req_id": req._rid, "payload": np.asarray(y)}
+                            for req, y in self.inst.flush()]}
+
     def _dispatch(self, msg: dict) -> dict:
         op = msg.get("op")
         inst = self.inst
         if op == "submit":
-            extras = msg.get("extras") or None
-            req = ServeRequest(client=msg["client"], tokens=None,
-                               extras=extras)
-            req._rid = msg["req_id"]
-            inst.submit(req, jnp.asarray(msg["payload"]))
+            self._enqueue(msg)
             return {"ok": True, "queued": len(inst.queue)}
         if op == "flush":
-            results = [{"req_id": req._rid, "payload": np.asarray(y)}
-                       for req, y in inst.flush()]
-            return {"ok": True, "results": results}
+            return self._flush_reply()
+        if op == "execute":
+            # batched submit + flush in ONE round trip: the micro-batcher's
+            # op of choice for inter-stage hops (per-item submits stay the
+            # uplink path so each client's transfer is measured/shaped
+            # individually). All-or-nothing on intake: a draining pool
+            # refuses the whole batch before anything is queued.
+            for it in msg["items"]:
+                self._enqueue(it)
+            return self._flush_reply()
         if op == "retarget":
             inst.retarget(PoolSpec(key=tuple(msg["key"]),
                                    share=msg["share"], batch=msg["batch"],
@@ -172,15 +187,20 @@ class PoolService:
 
 
 class PoolHandle:
-    """Client-side proxy for one stage pool behind a transport channel."""
+    """Client-side proxy for one stage pool behind a transport channel.
+
+    A per-handle lock serializes channel use so the handle is safe to
+    share between threads (the server's pool drivers + a stats poller);
+    the wire hop measurement in :meth:`submit` reads the channel's last
+    sample inside the same critical section."""
 
     def __init__(self, key: tuple, channel: Channel):
         self.key = key
         self.channel = channel
         self.pid: Optional[int] = None        # set for subprocess pools
+        self._lock = threading.Lock()
 
-    def _call(self, msg: dict) -> dict:
-        reply = self.channel.request(msg)
+    def _check(self, reply: dict) -> dict:
         if not reply.get("ok"):
             err = reply.get("error", "unknown transport error")
             if reply.get("etype") == PoolDrainingError.__name__:
@@ -188,16 +208,40 @@ class PoolHandle:
             raise RuntimeError(f"pool {self.key}: {err}")
         return reply
 
+    def _call(self, msg: dict) -> dict:
+        with self._lock:
+            reply = self.channel.request(msg)
+        return self._check(reply)
+
     def submit(self, req_id: int, client: str, payload,
                extras: Optional[dict] = None) -> tuple:
         """Enqueue one payload; returns the measured (nbytes, ms) hop."""
-        self._call({"op": "submit", "req_id": req_id, "client": client,
-                    "payload": np.asarray(payload), "extras": extras})
-        _, nbytes, ms = self.channel.stats.samples[-1]
+        msg = {"op": "submit", "req_id": req_id, "client": client,
+               "payload": np.asarray(payload), "extras": extras}
+        with self._lock:
+            reply = self.channel.request(msg)
+            sample = self.channel.stats.samples[-1] \
+                if self.channel.stats.samples else (0.0, 0, 0.0)
+        self._check(reply)
+        _, nbytes, ms = sample
         return nbytes, ms
 
     def flush(self) -> list:
         reply = self._call({"op": "flush"})
+        return [(r["req_id"], np.asarray(r["payload"]))
+                for r in reply["results"]]
+
+    def execute(self, items: list) -> list:
+        """Submit a whole batch and flush it in one round trip.
+
+        ``items``: [(req_id, client, payload, extras), ...]. Returns
+        [(req_id, payload), ...] for EVERYTHING the flush produced —
+        which can include previously-queued requests beyond this batch.
+        """
+        reply = self._call({"op": "execute", "items": [
+            {"req_id": rid, "client": client,
+             "payload": np.asarray(payload), "extras": extras}
+            for rid, client, payload, extras in items]})
         return [(r["req_id"], np.asarray(r["payload"]))
                 for r in reply["results"]]
 
@@ -228,6 +272,7 @@ class GraftExecutor:
         self.transport = transport if transport is not None \
             else InProcessTransport()
         self._handles: dict[tuple, PoolHandle] = {}
+        self._fragment_fns: dict[tuple, object] = {}   # (start, end) -> jit
         self._rid = itertools.count()
         self._by_rid: dict[int, ServeRequest] = {}
         # (client, nbytes, ms) first-hop log; bounded so callers that
@@ -246,6 +291,25 @@ class GraftExecutor:
         self.transport.serve(name, svc.handle)
         return PoolHandle(spec.key, self.transport.connect(name))
 
+    def _spawn_pools(self, specs: list) -> dict:
+        """Create several pools; returns {key: handle}. Sequential here;
+        RemoteExecutor overrides to spawn worker subprocesses in parallel
+        so a replan's stall is the SLOWEST spawn, not the sum. All-or-
+        nothing: a failed spawn retires the pools already created so no
+        endpoint (or worker subprocess) leaks unregistered."""
+        created = {}
+        try:
+            for spec in specs:
+                created[spec.key] = self._spawn_pool(spec)
+        except Exception:
+            for h in created.values():
+                try:
+                    self._retire_pool(h)
+                except Exception:
+                    pass
+            raise
+        return created
+
     def _retire_pool(self, handle: PoolHandle) -> None:
         handle.close()
         self.transport.stop(pool_endpoint(handle.key))
@@ -253,12 +317,15 @@ class GraftExecutor:
     def _deploy(self, plan: ExecutionPlan) -> None:
         self.plan = plan
         self._pools = plan_pools(plan)
+        new_specs = []
         for key, spec in self._pools.items():
             if key in self._handles:
                 self._handles[key].retarget(spec)
             else:
-                self._handles[key] = self._spawn_pool(spec)
-                self.stats["pools_created"] += 1
+                new_specs.append(spec)
+        created = self._spawn_pools(new_specs)
+        self._handles.update(created)
+        self.stats["pools_created"] += len(created)
         self.routes = _routing(plan)
         self._chains = {
             client: [self._handles[pool_key(sp.fragment.model, sp)]
@@ -287,14 +354,28 @@ class GraftExecutor:
         return diff
 
     # -------------------------------------------------------------- serve
+    def fragment_fn(self, start: int, end: int):
+        """Jitted ``run_fragment`` for blocks [start, end), cached — the
+        ONE place fragment programs outside pools get compiled (mobile
+        parts here, local-finish fallbacks in ``serving.server``)."""
+        fn = self._fragment_fns.get((start, end))
+        if fn is None:
+            fn = self._fragment_fns[(start, end)] = jax.jit(
+                functools.partial(run_fragment, cfg=self.cfg,
+                                  start=start, end=end))
+        return fn
+
     def mobile_part(self, req: ServeRequest, p: int):
         """Execute the device-side fragment [0, p) locally (simulated device).
         Returns the per-request payload: token ids (S,) when p == 0, else
-        the intermediate hidden states (S, d) that cross the network."""
+        the intermediate hidden states (S, d) that cross the network.
+        Jitted per partition point — the eager path used to re-dispatch
+        op-by-op on every request."""
         toks = jnp.asarray(req.tokens)[None]                # (1, S)
         if p == 0:
             return np.asarray(toks[0])
-        h = run_fragment(self.params, self.cfg, toks, 0, p, extras=req.extras)
+        h = self.fragment_fn(0, p)(self.params, inputs=toks,
+                                   extras=req.extras)
         return np.asarray(h[0])
 
     def _wire_extras(self, req: ServeRequest) -> Optional[dict]:
@@ -348,13 +429,49 @@ class GraftExecutor:
                         del stage_of[rid]
         return [r for r, _ in requests]
 
+    # --------------------------------------------------- server plumbing
+    def next_rid(self) -> int:
+        """Allocate a fresh request id (shared with the serve() path so
+        ids stay unique when a GraftServer drives this executor)."""
+        return next(self._rid)
+
+    def client_chain(self, client: str) -> list:
+        """The client's stage chain as live PoolHandles (deploy order)."""
+        return list(self._chains[client])
+
+    def chain_keys(self, client: str) -> list:
+        """The client's stage chain as PoolKeys."""
+        return [h.key for h in self._chains[client]]
+
+    def route_table(self) -> dict:
+        """client -> [PoolKey, ...] for every routed client."""
+        return {c: [h.key for h in chain]
+                for c, chain in self._chains.items()}
+
+    def pool_specs(self) -> dict:
+        """PoolKey -> PoolSpec of the currently deployed plan."""
+        return dict(self._pools)
+
+    def handle(self, key: tuple) -> PoolHandle:
+        return self._handles[key]
+
+    def record_uplink(self, client: str, nbytes: float, ms: float) -> None:
+        """Log one measured first-hop transfer (the server's batch-close
+        submit path records here; serve() does it inline)."""
+        self.uplink.append((client, nbytes, ms))
+
     # ------------------------------------------------------------- stats
     def drain_uplink(self) -> list:
         """Return and clear the (client, nbytes, ms) first-hop samples —
-        what ``ServingController.observe_uplink`` consumes."""
-        out = list(self.uplink)
-        self.uplink.clear()
-        return out
+        what ``ServingController.observe_uplink`` consumes. Safe against
+        concurrent ``record_uplink`` from driver threads: samples are
+        popped one by one, never dropped by a clear() race."""
+        out = []
+        while True:
+            try:
+                out.append(self.uplink.popleft())
+            except IndexError:
+                return out
 
     def drain(self) -> int:
         """Flush every pool to empty, DISCARDING results — the recovery

@@ -150,9 +150,16 @@ class WorkerProc:
         finally:
             lsock.close()
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        hello = read_frame(conn, max_frame_bytes=max_frame_bytes)
-        if not hello.get("hello"):
-            raise RuntimeError(f"worker for {key} sent bad hello: {hello}")
+        try:
+            hello = read_frame(conn, max_frame_bytes=max_frame_bytes)
+            if not hello.get("hello"):
+                raise RuntimeError(
+                    f"worker for {key} sent bad hello: {hello}")
+        except Exception:
+            conn.close()                 # don't orphan the subprocess
+            self.proc.kill()
+            self.proc.wait(timeout=10)
+            raise
         self.pid = int(hello["pid"])
         self.channel = SocketChannel(f"worker/{key}", None, max_frame_bytes,
                                      sock=conn)
@@ -210,7 +217,11 @@ class RemoteExecutor(GraftExecutor):
     def _spawn_pool(self, spec: PoolSpec) -> PoolHandle:
         t0 = time.perf_counter()
         w = WorkerProc(spec.key, self._max_frame)
-        w.init(self._cfg_bytes, self._params_np, spec)
+        try:
+            w.init(self._cfg_bytes, self._params_np, spec)
+        except Exception:
+            w.shutdown()                 # the spawned proc must not leak
+            raise
         self._workers[spec.key] = w
         self.spawn_log.append((spec.key, time.perf_counter() - t0))
         channel = w.channel
@@ -219,6 +230,36 @@ class RemoteExecutor(GraftExecutor):
         h = PoolHandle(spec.key, channel)
         h.pid = w.pid
         return h
+
+    def _spawn_pools(self, specs: list) -> dict:
+        """Spawn added workers CONCURRENTLY: each pays its own process
+        start + jax import + trace/compile, so a replan that adds k pools
+        stalls for the slowest spawn instead of the sum — what keeps a
+        live ``GraftServer.apply`` pause bounded while traffic is in
+        flight. Each thread touches only its own WorkerProc/listener;
+        the shared dicts are appended under the GIL. All-or-nothing like
+        the base class: if any spawn fails, workers that did come up are
+        shut down instead of leaking as orphan subprocesses."""
+        if len(specs) <= 1:
+            return super()._spawn_pools(specs)
+        from concurrent.futures import ThreadPoolExecutor, as_completed
+        handles, first_err = {}, None
+        with ThreadPoolExecutor(max_workers=min(len(specs), 8)) as pool:
+            futs = [pool.submit(self._spawn_pool, s) for s in specs]
+            for f in as_completed(futs):
+                try:
+                    h = f.result()
+                    handles[h.key] = h
+                except Exception as e:
+                    first_err = first_err or e
+        if first_err is not None:
+            for h in handles.values():
+                try:
+                    self._retire_pool(h)
+                except Exception:
+                    pass
+            raise first_err
+        return handles
 
     def _retire_pool(self, handle: PoolHandle) -> None:
         w = self._workers.pop(handle.key, None)

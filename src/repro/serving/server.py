@@ -1,0 +1,825 @@
+"""GraftServer — a long-running, event-driven serving runtime.
+
+Closes the gap between the scripted request waves of
+``examples/online_serving.py`` and the paper's deployment story: a
+server that *runs*, wall-clock, with traffic in flight while the control
+loop adapts the deployment under it.
+
+Data path::
+
+    client threads ──submit()──> ingest queue (non-blocking)
+        ingest thread: mobile fragment [0,p) -> payload, route lookup
+            └─> per-pool MicroBatcher (deadline-aware, EDF)
+                  pool driver thread (one per stage pool):
+                      batch closes on max_batch OR flush-deadline
+                      -> uplink submit (per client, measured/shaped)
+                      -> batched execute over the transport channel
+                      -> results feed the NEXT stage's batcher
+                         or complete the request
+    timer thread: every control_period_ms
+        drain_uplink() -> controller.ingest_uplink -> controller.control()
+        -> apply_plan diff on the LIVE executor (write-locked instant)
+
+Because every stage pool has its own driver, a depth-1 hop for one
+client overlaps depth-0 batching for another — nothing lock-steps per
+depth the way :meth:`GraftExecutor.serve` does. Requests are held
+*server-side* (payload in the batcher) until their batch closes, so pool
+queues on the wire side are empty between batches; a replan that removes
+a pool can always proceed, and anything still waiting in the removed
+pool's batcher is **rerouted**: re-enqueued at the same block boundary
+in the client's new chain when one exists, or finished locally by
+running the remaining blocks ``[boundary, L)`` in-process — never
+dropped, always numerically exact.
+
+Locking: a readers/writer lock around the deployment. Drivers and the
+ingest thread are readers (fully concurrent — this is the pipelining);
+``apply`` is the writer, so a plan transition waits for in-flight
+batches, mutates pools/routes atomically, and releases. The controller
+has its own leaf lock (its sliding windows are not thread-safe).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from collections import deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.batcher import (BatchItem, MicroBatcher,
+                                   flush_deadline_ms)
+from repro.serving.executor import (GraftExecutor, PoolDrainingError,
+                                    ServeRequest)
+
+__all__ = ["GraftServer", "PoolDriver", "run_serve_loop"]
+
+MAX_RECORDS = 65_536      # completion-log cap; oldest roll off the front
+
+
+class _RWLock:
+    """Readers/writer lock, writer-priority (pending writers block new
+    readers so a replan can't be starved by a busy pipeline)."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    @contextmanager
+    def read(self):
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._readers -= 1
+                if not self._readers:
+                    self._cond.notify_all()
+
+    @contextmanager
+    def write(self):
+        with self._cond:
+            self._writers_waiting += 1
+            while self._writer or self._readers:
+                self._cond.wait()
+            self._writers_waiting -= 1
+            self._writer = True
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._writer = False
+                self._cond.notify_all()
+
+
+@dataclass
+class _InFlight:
+    """Server-side state of one accepted request."""
+    req: ServeRequest
+    p: int
+    budget_ms: float
+    t_submit_ms: float               # when the client handed it over
+    t_arrive_ms: float               # mobile part done, payload ready
+    deadline_ms: float               # t_arrive + budget
+    chain: list = field(default_factory=list)   # [PoolKey, ...]
+    stage: int = 0
+    rerouted: int = 0
+    local: bool = False              # finished by the in-process fallback
+
+
+class PoolDriver(threading.Thread):
+    """One stage pool's independent flush loop."""
+
+    def __init__(self, server: "GraftServer", key: tuple, spec):
+        super().__init__(daemon=True,
+                         name=f"pool-driver-{key[0]}-{key[1]}-{key[2]}")
+        self.server = server
+        self.key = key
+        self.batcher = MicroBatcher(max_batch=max(spec.batch, 1))
+        self.model_est_ms = server._model_stage_cost(spec)
+        self.exec_ewma_ms: Optional[float] = None   # measured batch wall
+        self.stop_flag = False
+        self.n_batches = 0
+
+    def est_cost_ms(self) -> float:
+        """Per-batch cost estimate: measured EWMA once the pool has run,
+        the cost-model prediction before that."""
+        return self.exec_ewma_ms if self.exec_ewma_ms is not None \
+            else self.model_est_ms
+
+    def note_exec(self, wall_ms: float) -> None:
+        e = self.exec_ewma_ms
+        self.exec_ewma_ms = wall_ms if e is None else 0.8 * e + 0.2 * wall_ms
+        self.n_batches += 1
+
+    def run(self):
+        srv = self.server
+        while True:
+            if self.stop_flag or self.batcher.stopped:
+                return
+            batch = None
+            with srv._rw.read():
+                if self.stop_flag:
+                    return
+                batch = self.batcher.pop_ready(srv.now_ms())
+                if batch:
+                    try:
+                        srv._run_batch(self, batch)
+                    except Exception:
+                        # the driver thread must NEVER die with work
+                        # outstanding: salvage the popped batch so
+                        # join() can't strand, then keep serving
+                        traceback.print_exc()
+                        srv._salvage(batch)
+            if not batch:
+                self.batcher.wait_for_work(srv.now_ms())
+
+
+class GraftServer:
+    """Event-driven serving runtime over a (local or remote) executor.
+
+    ``executor`` is owned by the caller; the server adds driver/ingest/
+    control threads on top and tears only those down on :meth:`stop`.
+    """
+
+    def __init__(self, executor: GraftExecutor, *, controller=None,
+                 book=None, hop_default_ms: float = 1.0,
+                 waiting_grace_ms: Optional[float] = None):
+        self.executor = executor
+        self.controller = controller
+        self.book = book
+        self.cfg = executor.cfg
+        self.hop_default_ms = hop_default_ms
+        self._period_ms = getattr(controller, "control_period_ms", 250.0)
+        self.waiting_grace_ms = waiting_grace_ms \
+            if waiting_grace_ms is not None else 4.0 * self._period_ms
+
+        self._rw = _RWLock()
+        self._ctl_lock = threading.Lock()
+        self._drivers: dict[tuple, PoolDriver] = {}
+        self._routes: dict[str, list] = {}
+        self._inflight: dict[int, _InFlight] = {}
+
+        self._ingest_q: deque = deque()
+        self._ingest_cond = threading.Condition()
+        self._stop_ingest = False
+
+        self._wait_lock = threading.Lock()
+        self._waiting: list = []                 # (rid, payload, t_ms)
+
+        self._done_cond = threading.Condition()
+        self._records: list = []
+        self._records_base = 0           # completions trimmed off the front
+        self._n_submitted = 0
+        self._n_done = 0
+
+        self._uplink_ewma: dict[str, float] = {}
+
+        self._stop_evt = threading.Event()
+        self._kick = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._started = False
+        self._closed = False
+
+        self.stats = {"replans_applied": 0, "timer_replans": 0,
+                      "rerouted": 0, "local_finishes": 0,
+                      "waited": 0, "batches": 0}
+        self._t0 = time.monotonic()
+
+    # -------------------------------------------------------------- clock
+    def now_ms(self) -> float:
+        return (time.monotonic() - self._t0) * 1e3
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> "GraftServer":
+        assert not self._started, "server already started"
+        self._started = True
+        with self._rw.write():
+            for key, spec in self.executor.pool_specs().items():
+                drv = PoolDriver(self, key, spec)
+                self._drivers[key] = drv
+                drv.start()
+            self._routes = self.executor.route_table()
+        t = threading.Thread(target=self._ingest_loop, daemon=True,
+                             name="graft-ingest")
+        t.start()
+        self._threads.append(t)
+        # the timer thread always runs: with no controller it still
+        # routes/grace-expires parked requests so join() can't strand
+        t = threading.Thread(target=self._control_loop, daemon=True,
+                             name="graft-control")
+        t.start()
+        self._threads.append(t)
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float = 60.0) -> bool:
+        """Stop ingest, optionally wait for in-flight work, then halt the
+        control loop and drivers. Returns True when fully drained."""
+        with self._ingest_cond:
+            self._stop_ingest = True
+            self._ingest_cond.notify_all()
+        ok = self.join(timeout=timeout) if drain else True
+        self._stop_evt.set()
+        self._kick.set()
+        with self._rw.write():
+            for drv in self._drivers.values():
+                drv.stop_flag = True
+                drv.batcher.stop()
+        self._closed = True
+        return ok
+
+    def __enter__(self):
+        return self.start() if not self._started else self
+
+    def __exit__(self, *exc):
+        self.stop(drain=False, timeout=5.0)
+
+    # -------------------------------------------------------------- ingest
+    def submit(self, req: ServeRequest, p: int, budget_ms: float) -> int:
+        """Accept one request (non-blocking; returns its rid). The ingest
+        thread runs the mobile fragment and routes the payload."""
+        if self._closed or self._stop_ingest:
+            raise RuntimeError("server is stopped")
+        rid = self.executor.next_rid()
+        with self._ingest_cond:
+            self._ingest_q.append((rid, req, p, budget_ms, self.now_ms()))
+            self._n_submitted += 1
+            self._ingest_cond.notify_all()
+        return rid
+
+    def _ingest_loop(self):
+        while True:
+            with self._ingest_cond:
+                while not self._ingest_q and not self._stop_ingest:
+                    self._ingest_cond.wait(timeout=0.1)
+                if self._ingest_q:
+                    job = self._ingest_q.popleft()
+                elif self._stop_ingest:
+                    return
+                else:
+                    continue
+            try:
+                self._ingest_one(*job)
+            except Exception:
+                traceback.print_exc()
+                with self._done_cond:        # never strand join()
+                    self._n_done += 1
+                    self._done_cond.notify_all()
+
+    def _ingest_one(self, rid, req, p, budget_ms, t_submit):
+        t_mob0 = self.now_ms()
+        payload = self.executor.mobile_part(req, p)   # jitted per p
+        now = self.now_ms()
+        # the server-side clock starts when the payload LEAVES the
+        # device: submit time plus the device compute itself — NOT `now`,
+        # which would silently exclude time spent queued behind other
+        # clients' mobile parts in the single ingest thread. Queue wait
+        # counts against the budget; simulated device compute does not.
+        t_arrive = t_submit + (now - t_mob0)
+        if self.controller is not None:
+            with self._ctl_lock:
+                self.controller.observe_arrival(now, req.client,
+                                                self.cfg.name, p, budget_ms)
+        st = _InFlight(req=req, p=p, budget_ms=budget_ms,
+                       t_submit_ms=t_submit, t_arrive_ms=t_arrive,
+                       deadline_ms=t_arrive + budget_ms)
+        self._inflight[rid] = st
+        with self._rw.read():
+            chain = self._routes.get(req.client)
+            if chain and chain[0][1] == p:
+                st.chain = list(chain)
+                self._enqueue_stage(rid, st, payload)
+                return
+        # no chain for this (client, p) yet — a shifted/unknown client
+        # arrived before the plan covers it. Park it and kick the control
+        # loop so the replan happens NOW, not at the next timer edge.
+        with self._wait_lock:
+            self._waiting.append((rid, payload, now))
+        self.stats["waited"] += 1
+        self._kick.set()
+
+    # ------------------------------------------------------------ routing
+    def _wire_extras(self, req: ServeRequest) -> Optional[dict]:
+        return self.executor._wire_extras(req)
+
+    def _chain_costs(self, chain: list) -> list:
+        specs = self.executor.pool_specs()
+        out = []
+        for key in chain:
+            drv = self._drivers.get(key)
+            if drv is not None:
+                out.append(drv.est_cost_ms())
+            elif key in specs:
+                out.append(self._model_stage_cost(specs[key]))
+            else:
+                out.append(self.hop_default_ms)
+        return out
+
+    def _model_stage_cost(self, spec) -> float:
+        if self.book is None or spec.model not in self.book:
+            return 5.0
+        return float(self.book[spec.model].latency_ms(
+            spec.start, spec.end, max(spec.batch, 1), max(spec.share, 1)))
+
+    def _hop_ms(self, client: str) -> float:
+        return self._uplink_ewma.get(client, self.hop_default_ms)
+
+    def _note_uplink(self, client: str, ms: float) -> None:
+        e = self._uplink_ewma.get(client)
+        self._uplink_ewma[client] = ms if e is None else 0.7 * e + 0.3 * ms
+
+    def _enqueue_stage(self, rid: int, st: _InFlight, payload) -> None:
+        """Queue ``payload`` for stage ``st.stage`` of the request's
+        chain; caller holds the read (or write) lock."""
+        key = st.chain[st.stage]
+        drv = self._drivers.get(key)
+        if drv is None or drv.stop_flag:
+            # the chain this request was routed on is stale (a replan
+            # landed since): re-home it like a drained leftover — same
+            # boundary in the NEW chain first, local finish as last
+            # resort. Bounded so a route/driver mismatch can't ping-pong.
+            now = self.now_ms()
+            if st.rerouted >= 3:
+                self._finish_local(rid, st, payload, boundary=key[1])
+            else:
+                self._reroute_item(BatchItem(
+                    rid=rid, client=st.req.client, payload=payload,
+                    flush_ms=now, deadline_ms=st.deadline_ms,
+                    extras=self._wire_extras(st.req), boundary=key[1],
+                    enqueued_ms=now))
+            return
+        now = self.now_ms()
+        # only stage 0 still faces the client uplink; deeper stages ride
+        # server-internal execute frames
+        hop = self._hop_ms(st.req.client) if st.stage == 0 \
+            else self.hop_default_ms
+        flush = flush_deadline_ms(st.deadline_ms,
+                                  self._chain_costs(st.chain), st.stage,
+                                  now, hop_ms=hop)
+        drv.batcher.put(BatchItem(
+            rid=rid, client=st.req.client, payload=payload,
+            flush_ms=flush, deadline_ms=st.deadline_ms,
+            extras=self._wire_extras(st.req), boundary=key[1],
+            enqueued_ms=now))
+
+    # ------------------------------------------------------------ execute
+    def _run_batch(self, driver: PoolDriver, batch: list) -> None:
+        """Execute one closed batch on the driver's pool (read lock held):
+        stage-0 items pay the per-client uplink submit (measured/shaped
+        individually), deeper items ride one batched execute frame."""
+        handle = self.executor.handle(driver.key)
+        stage0, later = [], []
+        for it in batch:
+            st = self._inflight.get(it.rid)
+            if st is None:
+                continue
+            (stage0 if st.stage == 0 else later).append(it)
+        if not stage0 and not later:
+            return
+        t0 = time.perf_counter()
+        try:
+            for it in stage0:
+                nbytes, ms = handle.submit(it.rid, it.client, it.payload,
+                                           extras=it.extras)
+                self.executor.record_uplink(it.client, nbytes, ms)
+                self._note_uplink(it.client, ms)
+            if later:
+                results = handle.execute(
+                    [(it.rid, it.client, it.payload, it.extras)
+                     for it in later])
+            else:
+                results = handle.flush()
+        except PoolDrainingError:
+            # intake refused atomically: nothing queued pool-side
+            for it in stage0 + later:
+                self._reroute_item(it)
+            return
+        except Exception:
+            traceback.print_exc()
+            recovered = {}
+            try:                       # pull back whatever did get queued
+                recovered = dict(handle.flush())
+            except Exception:
+                pass
+            for rid, y in recovered.items():
+                self._advance(rid, y)
+            for it in stage0 + later:
+                if it.rid not in recovered and it.rid in self._inflight:
+                    self._finish_local(it.rid, self._inflight[it.rid],
+                                       it.payload, boundary=it.boundary)
+            return
+        driver.note_exec((time.perf_counter() - t0) * 1e3)
+        self.stats["batches"] += 1
+        for rid, y in results:
+            self._advance(rid, y)
+
+    def _advance(self, rid: int, y) -> None:
+        st = self._inflight.get(rid)
+        if st is None:
+            return
+        st.stage += 1
+        if st.stage < len(st.chain):
+            self._enqueue_stage(rid, st, y)
+        else:
+            self._complete(rid, st, y)
+
+    def _complete(self, rid: int, st: _InFlight, y) -> None:
+        st.req.result = np.asarray(y)
+        self._inflight.pop(rid, None)
+        t_done = self.now_ms()
+        latency = t_done - st.t_arrive_ms
+        with self._done_cond:
+            self._records.append({
+                "rid": rid, "client": st.req.client, "p": st.p,
+                "latency_ms": latency, "budget_ms": st.budget_ms,
+                "ok": latency <= st.budget_ms, "rerouted": st.rerouted,
+                "local": st.local, "t_done_ms": t_done})
+            if len(self._records) > MAX_RECORDS:   # long-running: bounded
+                drop = len(self._records) - MAX_RECORDS
+                del self._records[:drop]
+                self._records_base += drop
+            self._n_done += 1
+            self._done_cond.notify_all()
+        if self.controller is not None:
+            with self._ctl_lock:
+                self.controller.observe_done(t_done, st.req.client, latency,
+                                             budget_ms=st.budget_ms)
+
+    # ------------------------------------------------- reroute / fallback
+    def _reroute_item(self, item: BatchItem) -> None:
+        """Re-home a request whose pool vanished: same block boundary in
+        the client's new chain if one exists, else finish locally."""
+        st = self._inflight.get(item.rid)
+        if st is None:
+            return
+        chain = self._routes.get(item.client)
+        if chain:
+            for idx, key in enumerate(chain):
+                if key[1] == item.boundary:
+                    st.chain = list(chain)
+                    st.stage = idx
+                    st.rerouted += 1
+                    self.stats["rerouted"] += 1
+                    self._enqueue_stage(item.rid, st, item.payload)
+                    return
+        st.rerouted += 1
+        self.stats["rerouted"] += 1
+        self._finish_local(item.rid, st, item.payload,
+                           boundary=item.boundary)
+
+    def _salvage(self, batch: list) -> None:
+        """Last-ditch accounting after an unexpected _run_batch error:
+        finish each still-in-flight item locally; if even that fails,
+        retire the request as done-with-error so join() never strands."""
+        for it in batch:
+            st = self._inflight.get(it.rid)
+            if st is None:
+                continue
+            try:
+                self._finish_local(it.rid, st, it.payload,
+                                   boundary=it.boundary)
+            except Exception:
+                traceback.print_exc()
+                self._inflight.pop(it.rid, None)
+                with self._done_cond:
+                    self._n_done += 1
+                    self._done_cond.notify_all()
+
+    def _finish_local(self, rid: int, st: _InFlight, payload,
+                      *, boundary: int) -> None:
+        """Escape hatch: run the remaining blocks ``[boundary, L)`` with
+        the server's own parameters — same numbers, no pool."""
+        from repro.models import n_fragment_units
+        L = n_fragment_units(self.cfg)
+        st.local = True
+        self.stats["local_finishes"] += 1
+        if boundary >= L:
+            y = payload
+        else:
+            fn = self.executor.fragment_fn(boundary, L)
+            y = np.asarray(fn(self.executor.params,
+                              inputs=np.asarray(payload)[None],
+                              extras=st.req.extras)[0])
+        st.stage = len(st.chain)                   # chain is done
+        self._complete(rid, st, y)
+
+    # ------------------------------------------------------------ control
+    def _control_loop(self):
+        period_s = self._period_ms / 1e3
+        while not self._stop_evt.is_set():
+            self._kick.wait(timeout=period_s)
+            self._kick.clear()
+            if self._stop_evt.is_set():
+                return
+            try:
+                self.tick()
+            except Exception:
+                traceback.print_exc()
+
+    def tick(self, *, force: bool = False):
+        """One control tick: feed live uplink samples to the controller,
+        maybe replan, apply the diff, revisit parked requests. Returns
+        the new plan when one was applied."""
+        now = self.now_ms()
+        samples = self.executor.drain_uplink()
+        plan = None
+        if self.controller is not None:
+            with self._ctl_lock:
+                self.controller.ingest_uplink(now, samples)
+                plan = self.controller.control(now, force=force)
+        if plan is not None:
+            self.apply(plan)
+            self.stats["timer_replans"] += 1
+        self._route_waiting()
+        self._expire_waiting(self.now_ms())
+        return plan
+
+    def apply(self, new_plan):
+        """Transition the live deployment to ``new_plan`` while traffic
+        is in flight. Blocks until in-flight batches finish (writer
+        lock), applies the executor diff (removed pools retire, kept
+        pools keep compiled programs/processes), then reroutes anything
+        queued on a removed pool."""
+        with self._rw.write():
+            diff = self.executor.apply_plan(new_plan)
+            leftovers = []
+            for a in diff.by_kind("remove"):
+                drv = self._drivers.pop(a.key, None)
+                if drv is None:
+                    continue
+                drv.stop_flag = True
+                leftovers.extend(drv.batcher.drain())
+                drv.batcher.stop()
+            for key, spec in self.executor.pool_specs().items():
+                drv = self._drivers.get(key)
+                if drv is None:
+                    drv = PoolDriver(self, key, spec)
+                    self._drivers[key] = drv
+                    drv.start()
+                else:
+                    drv.batcher.set_max_batch(max(spec.batch, 1))
+                    drv.model_est_ms = self._model_stage_cost(spec)
+            self._routes = self.executor.route_table()
+            self.stats["replans_applied"] += 1
+        # re-home leftovers OUTSIDE the writer section: a local finish
+        # can mean a jit compile + full forward pass, which must stall
+        # only this thread, not every pool driver
+        if leftovers:
+            with self._rw.read():
+                for item in leftovers:
+                    self._reroute_item(item)
+        self._route_waiting()
+        return diff
+
+    def _route_waiting(self) -> None:
+        with self._wait_lock:
+            parked = self._waiting
+            self._waiting = []
+        if not parked:
+            return
+        still = []
+        with self._rw.read():
+            for rid, payload, t_ms in parked:
+                st = self._inflight.get(rid)
+                if st is None:
+                    continue
+                chain = self._routes.get(st.req.client)
+                if chain and chain[0][1] == st.p:
+                    st.chain = list(chain)
+                    st.stage = 0
+                    self._enqueue_stage(rid, st, payload)
+                else:
+                    still.append((rid, payload, t_ms))
+        if still:
+            with self._wait_lock:
+                self._waiting.extend(still)
+
+    def _expire_waiting(self, now: float) -> None:
+        """Parked requests the replans never covered get finished locally
+        after a grace period — a server must answer, not starve."""
+        with self._wait_lock:
+            keep, expired = [], []
+            for rid, payload, t_ms in self._waiting:
+                (expired if now - t_ms > self.waiting_grace_ms
+                 else keep).append((rid, payload, t_ms))
+            self._waiting = keep
+        for rid, payload, _ in expired:
+            st = self._inflight.get(rid)
+            if st is not None:
+                self._finish_local(rid, st, payload, boundary=st.p)
+
+    # ------------------------------------------------------------- report
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every submitted request has completed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._done_cond:
+            while self._n_done < self._n_submitted:
+                left = None if deadline is None \
+                    else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    return False
+                self._done_cond.wait(timeout=left if left is not None
+                                     else 1.0)
+        return True
+
+    def mark(self) -> int:
+        """Snapshot index into the completion log (warmup exclusion)."""
+        with self._done_cond:
+            return self._records_base + len(self._records)
+
+    def report(self, since: int = 0) -> dict:
+        with self._done_cond:
+            start = max(since - self._records_base, 0)
+            recs = list(self._records[start:])
+        by_client: dict[str, list] = {}
+        for r in recs:
+            by_client.setdefault(r["client"], []).append(r)
+        clients = {}
+        for c, rs in sorted(by_client.items()):
+            lat = np.array([r["latency_ms"] for r in rs])
+            clients[c] = {
+                "n": len(rs),
+                "attainment": float(np.mean([r["ok"] for r in rs])),
+                "p50_ms": float(np.percentile(lat, 50)),
+                "p99_ms": float(np.percentile(lat, 99)),
+                "budget_ms": float(np.median([r["budget_ms"] for r in rs])),
+            }
+        lat = np.array([r["latency_ms"] for r in recs]) if recs \
+            else np.array([0.0])
+        # snapshot: a timer replan may mutate the driver table mid-report
+        drivers = list(self._drivers.values())
+        batch_sizes = [s for d in drivers
+                       for s in list(d.batcher.stats.batch_sizes)]
+        return {
+            "served": len(recs),
+            "attainment": float(np.mean([r["ok"] for r in recs]))
+            if recs else 0.0,
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "clients": clients,
+            "replans": self.stats["replans_applied"],
+            "timer_replans": self.stats["timer_replans"],
+            "rerouted": self.stats["rerouted"],
+            "local_finishes": self.stats["local_finishes"],
+            "waited": self.stats["waited"],
+            "mean_batch": float(np.mean(batch_sizes)) if batch_sizes
+            else 0.0,
+            "n_stage_pools": len(drivers),
+        }
+
+    # test/bench introspection -------------------------------------------
+    def driver(self, key: tuple) -> PoolDriver:
+        return self._drivers[key]
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self._inflight)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock serve loop (launch/serve.py --serve-loop, examples, tests)
+# ---------------------------------------------------------------------------
+
+def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
+                   n_clients: int = 3, seconds: float = 4.0,
+                   rate: float = 6.0, seed: int = 0,
+                   shift_frac: Optional[float] = 0.5,
+                   shaped: bool = False, control_period_ms: float = 250.0,
+                   warmup: bool = True, check_numerics: bool = True,
+                   max_check: int = 64, seq_len: int = 16,
+                   log=None) -> dict:
+    """Run the full event-driven runtime wall-clock for ``seconds``.
+
+    Trace-driven client threads emit requests at their declared rates;
+    at ``shift_frac`` of the run, client 0 flips its partition point so
+    the timer-driven control loop must replan mid-traffic. Returns the
+    server report plus ``numerics_ok`` (every served result checked
+    against the monolithic forward pass).
+    """
+    from repro.core import GraftPlanner
+    from repro.models import n_fragment_units
+    from repro.serving.controller import ServingController
+    from repro.serving.remote import RemoteExecutor
+    from repro.serving.smoke import (check_against_monolithic,
+                                     smoke_fragments, smoke_setup)
+    from repro.serving.transport import (InProcessTransport, LinkShape,
+                                         ShapedTransport, SocketTransport)
+
+    say = log if log is not None else (lambda *_: None)
+    cfg, book, params = smoke_setup(arch, seq_len=seq_len, seed=seed)
+    L = n_fragment_units(cfg)
+    frags = smoke_fragments(cfg, n_clients, rate=rate, seed=seed)
+    ctl = ServingController(
+        book, planner=GraftPlanner(book),
+        control_period_ms=control_period_ms,
+        min_replan_interval_ms=control_period_ms,
+        window_ms=max(2000.0, seconds * 500.0))
+    plan0 = ctl.bootstrap(frags, now_ms=0.0)
+
+    inner = SocketTransport() if mode == "socket" else InProcessTransport()
+    tp = inner
+    if shaped:
+        from repro.data.traces import synth_5g_trace
+        shapes = {f.client: LinkShape(
+            trace=synth_5g_trace(seed=100 + i, sigma=0.6, fade_prob=0.05),
+            rtt_ms=8.0) for i, f in enumerate(frags)}
+        # realtime: the delays must actually be PAID, not just recorded —
+        # the wall-clock latencies reported below would otherwise exclude
+        # the very fades the uplink EWMA is charging deadlines for
+        tp = ShapedTransport(inner, shapes, realtime=True)
+    cls = RemoteExecutor if mode == "socket" else GraftExecutor
+    ex = cls(plan0, params, cfg, transport=tp)
+
+    submitted: list = []                         # [(req, p)] for numerics
+    server = GraftServer(ex, controller=ctl, book=book)
+    server.start()
+    say(f"[serve-loop] {cfg.name}: {len(frags)} clients over {mode} "
+        f"transport, {seconds:.1f}s wall-clock, "
+        f"{ex.n_stage_pools} stage pools")
+    try:
+        if warmup:                               # pay the jit compiles
+            rng = np.random.RandomState(seed)
+            for f in frags:
+                req = ServeRequest(client=f.client, tokens=rng.randint(
+                    0, cfg.vocab_size, seq_len).astype(np.int32))
+                server.submit(req, f.p, f.t)
+            if not server.join(timeout=600.0):
+                raise RuntimeError("warmup requests never completed")
+            say(f"[serve-loop] warmup done "
+                f"({server.mark()} requests, compiles paid)")
+        mark = server.mark()
+        t_start = time.monotonic()
+        stop_at = t_start + seconds
+        shift_at = None if shift_frac is None \
+            else t_start + seconds * shift_frac
+
+        def client_loop(idx: int, frag):
+            crng = np.random.RandomState(seed * 1000 + idx)
+            period = 1.0 / max(frag.q, 0.5)
+            p = frag.p
+            while time.monotonic() < stop_at:
+                if (idx == 0 and shift_at is not None and L > 1
+                        and time.monotonic() >= shift_at):
+                    p = (frag.p + 1) % L
+                req = ServeRequest(client=frag.client, tokens=crng.randint(
+                    0, cfg.vocab_size, seq_len).astype(np.int32))
+                server.submit(req, p, frag.t)
+                submitted.append((req, p))
+                time.sleep(period)
+
+        threads = [threading.Thread(target=client_loop, args=(i, f),
+                                    daemon=True, name=f"client-{f.client}")
+                   for i, f in enumerate(frags)]
+        t_traffic0 = ctl.stats["replans"]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        drained = server.join(timeout=600.0)
+        report = server.report(since=mark)
+        report["drained"] = drained
+        report["controller_replans"] = ctl.stats["replans"] - t_traffic0
+        report["controller_triggers"] = dict(ctl.stats["triggers"])
+        report["wall_s"] = time.monotonic() - t_start
+    finally:
+        server.stop(drain=False, timeout=10.0)
+        ex.close()
+
+    if check_numerics:
+        done = [(req, p) for req, p in submitted if req.result is not None]
+        check = done[:max_check]
+        try:
+            check_against_monolithic(cfg, params, check)
+            report["numerics_ok"] = True
+        except AssertionError as e:      # report the verdict, let the
+            report["numerics_ok"] = False     # caller choose the exit
+            report["numerics_error"] = str(e)[:500]
+        report["numerics_checked"] = len(check)
+    return report

@@ -23,13 +23,19 @@ DEFAULT_SEQ = 16
 
 
 def smoke_setup(arch: str = DEFAULT_ARCH, *, seq_len: int = DEFAULT_SEQ,
-                seed: int = 0):
-    """-> (cfg, book, params): everything an executor needs, smoke scale."""
+                seed: int = 0, n_layers: Optional[int] = None):
+    """-> (cfg, book, params): everything an executor needs, smoke scale.
+
+    ``n_layers`` deepens the reduced model beyond the default 2 blocks —
+    multi-stage chains (align -> shared) need at least 3 boundaries to be
+    interesting."""
     import jax
     from repro import models as M
-    from repro.configs import get_smoke_config
+    from repro.configs import get_config, get_smoke_config, reduced
 
     cfg = get_smoke_config(arch)
+    if n_layers is not None and n_layers != cfg.n_layers:
+        cfg = reduced(get_config(arch), n_layers=n_layers)
     costs = dataclasses.replace(arch_layer_costs(cfg, seq_len=seq_len),
                                 name=cfg.name)
     book = ProfileBook()
@@ -60,6 +66,46 @@ def smoke_requests(cfg, frags, *, seq_len: int = DEFAULT_SEQ,
         client=f.client,
         tokens=rng.randint(0, cfg.vocab_size, seq_len).astype(np.int32)),
         f.p) for f in frags]
+
+
+def mixed_depth_plan(cfg, book, frags, *, s: int = 1, batch: int = 4):
+    """Hand-built ExecutionPlan with REAL depth-2 chains: clients with
+    p < s run an alignment stage [p, s) then the shared pool [s, L);
+    clients at p == s hit the shared pool directly.
+
+    The analytic smoke cost book is so cheap that ``GraftPlanner`` always
+    prefers solo batch-1 pools at this scale — but the runtime (executor,
+    server, benches) must be exercised on the paper's aligned topology
+    regardless of what the planner would pick, so this builds the grouped
+    plan explicitly.
+    """
+    from repro.core.planner import ExecutionPlan
+    from repro.core.profiles import Allocation, EMPTY_ALLOC
+    from repro.core.repartition import GroupPlan, StagePlan
+    from repro.models import n_fragment_units
+
+    prof = book[cfg.name]
+    L = n_fragment_units(cfg)
+    assert all(f.p <= s for f in frags), "clients must start at p <= s"
+
+    def alloc(start, end, b):
+        lat = float(prof.latency_ms(start, end, b, 50))
+        return Allocation(share=50, batch=b, n_instances=1,
+                          latency_ms=lat, throughput=b / lat * 1e3,
+                          resource=50.0)
+
+    lead = min(frags, key=lambda f: f.t)
+    shared = StagePlan(lead, s, L, lead.t / 2.0, alloc(s, L, batch))
+    aligns = tuple(
+        StagePlan(f, f.p, s, f.t / 2.0,
+                  alloc(f.p, s, batch) if f.p < s else EMPTY_ALLOC)
+        for f in frags)
+    gp = GroupPlan(model=cfg.name, repartition_point=s, shared=shared,
+                   aligns=aligns)
+    return ExecutionPlan(plans=[gp], total_resource=gp.resource,
+                         n_fragments_in=len(frags),
+                         n_fragments_merged=len(frags),
+                         schedule_time_s=0.0)
 
 
 def check_against_monolithic(cfg, params, reqs, *, atol=5e-5, rtol=1e-3):

@@ -141,6 +141,107 @@ def test_online_simulation_end_to_end(book):
     assert res.attainment() > 0.5
 
 
+# ------------------------------------------------- cold start + prediction
+
+def test_cold_start_prior_first_tick_matches_declared_plan(book):
+    """With a near-empty window, the first control() tick must plan from
+    the fleet's DECLARED rates (the cold-start prior), not from a noisy
+    one-sample estimate — the plan equals the declared-rate plan."""
+    frags = frags_for("inc", [(1, 90, 30), (2, 80, 30)])
+    declared = GraftPlanner(book).plan(frags)
+    ctl = ServingController(book, planner=GraftPlanner(book))
+    ctl.bootstrap(frags, now_ms=0.0)
+    for f in frags:                        # one lonely arrival per client
+        ctl.observe_arrival(100.0, f.client, "inc", f.p, f.t)
+    est = ctl.estimates(1200.0)
+    for f in frags:
+        assert est[f.client].from_prior
+        assert est[f.client].rate == pytest.approx(f.q)
+        assert est[f.client].budget_ms == pytest.approx(f.t)
+    plan = ctl.control(1200.0, force=True)
+    assert plan is not None
+    assert plan_pools(plan) == plan_pools(declared)
+
+
+def test_cold_start_prior_graduates_to_window_estimate(book):
+    """Once the window holds enough real arrivals, the prior steps aside
+    and the measured rate takes over."""
+    frags = frags_for("inc", [(2, 80, 30)])
+    frags = [dataclasses.replace(frags[0], client="a")]
+    ctl = ServingController(book, planner=GraftPlanner(book),
+                            cold_start_samples=8)
+    ctl.bootstrap(frags, now_ms=0.0)
+    _feed(ctl, "a", 60.0, 0.0, 2000.0)     # 120 real samples at 60 rps
+    e = ctl.estimates(2000.0)["a"]
+    assert not e.from_prior
+    assert abs(e.rate - 60.0) / 60.0 < 0.1
+
+
+def test_cold_start_prior_suppresses_first_tick_overshoot(book):
+    """Same near-empty window WITHOUT the prior: the one-sample rate
+    estimate is wildly off the declared rate — the error the prior
+    bounds (and no spurious rate_drift replan fires with it)."""
+    frags = frags_for("inc", [(2, 80, 30)])
+    frags = [dataclasses.replace(frags[0], client="a")]
+    ctl = ServingController(book, planner=GraftPlanner(book))
+    ctl.bootstrap(frags, now_ms=0.0)
+    ctl.observe_arrival(100.0, "a", "inc", 2, 80.0)
+    assert ctl.control(1200.0) is None     # prior matches plan: no trigger
+    assert ctl.stats["replans"] == 0
+    ctl._priors.clear()                    # strip the prior: raw estimate
+    e = ctl.estimates(1300.0)["a"]
+    assert abs(e.rate - 30.0) / 30.0 > 0.5
+
+
+def test_bw_trend_triggers_predictive_replan(book):
+    """A steadily decaying uplink fires bw_trend BEFORE rate/partition
+    drift is visible; a flat uplink does not."""
+    def run(decay):
+        frags = [Fragment("inc", 2, 80.0, 30.0, client="a")]
+        ctl = ServingController(book, planner=GraftPlanner(book),
+                                min_replan_interval_ms=0.0,
+                                bw_trend_lookahead_ms=1500.0,
+                                bw_trend_threshold=0.25)
+        ctl.bootstrap(frags, now_ms=0.0)
+        period = 1e3 / 30.0
+        t, bw0 = 0.0, 20e6 / 8
+        while t < 4000.0:
+            bw = bw0 * (1.0 - decay * t / 4000.0)
+            ctl.observe_arrival(t, "a", "inc", 2, 80.0,
+                                xfer_bytes=bw * 0.01, xfer_ms=10.0)
+            t += period
+        return ctl, ctl.control(4000.0)
+
+    ctl, plan = run(decay=0.8)             # loses 80% of bw over the window
+    assert plan is not None
+    assert ctl.stats["triggers"].get("bw_trend", 0) >= 1
+    ctl_flat, plan_flat = run(decay=0.0)
+    assert plan_flat is None
+    assert ctl_flat.stats["triggers"].get("bw_trend", 0) == 0
+
+
+def test_bw_trend_rearmed_by_replan_baseline(book):
+    """After a bw_trend replan the trigger re-arms against the NEW
+    baseline: the same residual slope does not immediately re-fire."""
+    frags = [Fragment("inc", 2, 80.0, 30.0, client="a")]
+    ctl = ServingController(book, planner=GraftPlanner(book),
+                            min_replan_interval_ms=0.0)
+    ctl.bootstrap(frags, now_ms=0.0)
+    period = 1e3 / 30.0
+    t, bw0 = 0.0, 20e6 / 8
+    while t < 4000.0:
+        bw = bw0 * (1.0 - 0.8 * t / 4000.0)
+        ctl.observe_arrival(t, "a", "inc", 2, 80.0,
+                            xfer_bytes=bw * 0.01, xfer_ms=10.0)
+        t += period
+    assert ctl.control(4000.0) is not None
+    n = ctl.stats["triggers"].get("bw_trend", 0)
+    assert n >= 1
+    # next tick, same window, no further decay observed since the replan
+    assert ctl.control(4100.0) is None or \
+        ctl.stats["triggers"].get("bw_trend", 0) == n
+
+
 # ----------------------------------------------------- executor transitions
 
 def test_executor_diff_transition_stays_numerically_exact():

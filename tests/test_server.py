@@ -1,0 +1,276 @@
+"""GraftServer: the event-driven serving runtime.
+
+Covers the deadline-aware micro-batcher (pure, no jax), pipelined
+pool-driver execution staying numerically exact, the executor-drain edge
+case (requests queued on a pool that a concurrent apply_plan removes are
+rerouted, never dropped), and the wall-clock serve loop completing a
+timer-driven replan mid-traffic.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.batcher import (BatchItem, MicroBatcher,
+                                   flush_deadline_ms, remaining_cost_ms)
+
+
+# ------------------------------------------------------------ micro-batcher
+
+def item(rid, flush, deadline=None, client="c"):
+    return BatchItem(rid=rid, client=client, payload=rid,
+                     flush_ms=flush, deadline_ms=deadline or flush)
+
+
+def test_batcher_closes_on_max_batch():
+    b = MicroBatcher(max_batch=3)
+    for i in range(2):
+        b.put(item(i, flush=1000.0))
+    assert b.pop_ready(now_ms=0.0) == []          # neither full nor due
+    b.put(item(2, flush=1000.0))
+    batch = b.pop_ready(now_ms=0.0)               # full: closes early
+    assert [it.rid for it in batch] == [0, 1, 2]
+    assert b.stats.closed_full == 1 and b.stats.closed_deadline == 0
+
+
+def test_batcher_closes_on_deadline_edf_order():
+    b = MicroBatcher(max_batch=8)
+    b.put(item(0, flush=50.0))
+    b.put(item(1, flush=10.0))
+    b.put(item(2, flush=30.0))
+    assert b.pop_ready(now_ms=5.0) == []          # earliest not due yet
+    batch = b.pop_ready(now_ms=10.0)              # rid 1's deadline hit
+    assert [it.rid for it in batch] == [1, 2, 0]  # EDF order, all taken
+    assert b.stats.closed_deadline == 1
+
+
+def test_batcher_pause_drain_stop():
+    b = MicroBatcher(max_batch=1)
+    b.put(item(0, flush=0.0))
+    b.pause()
+    assert b.pop_ready(now_ms=100.0) == []        # held while paused
+    b.resume()
+    assert len(b.pop_ready(now_ms=100.0)) == 1
+    b.put(item(1, flush=0.0))
+    b.put(item(2, flush=5.0))
+    drained = b.drain()
+    assert [it.rid for it in drained] == [1, 2]
+    assert len(b) == 0
+    b.stop()
+    assert b.stopped
+    b.wait_for_work(now_ms=0.0)                   # returns immediately
+
+
+def test_flush_deadline_math():
+    from repro.serving.batcher import INTER_HOP_MS
+    costs = [5.0, 20.0]
+    # this stage's own hop charged ONCE + internal hop per later stage
+    assert remaining_cost_ms(costs, 0, hop_ms=2.0) \
+        == 25.0 + 2.0 + INTER_HOP_MS
+    assert remaining_cost_ms(costs, 1, hop_ms=2.0) == 20.0 + 2.0
+    # a slow uplink must not be charged per remaining stage
+    assert remaining_cost_ms(costs, 0, hop_ms=40.0) \
+        == 25.0 + 40.0 + INTER_HOP_MS
+    # latest close time that still meets the deadline
+    assert flush_deadline_ms(100.0, costs, 0, now_ms=0.0, hop_ms=2.0) \
+        == pytest.approx(100.0 - 25.0 - 2.0 - INTER_HOP_MS)
+    # already late: fire now, never schedule in the past
+    assert flush_deadline_ms(10.0, costs, 0, now_ms=50.0) == 50.0
+
+
+# ---------------------------------------------------------- real execution
+
+@pytest.fixture(scope="module")
+def smoke():
+    from repro.serving.smoke import smoke_setup
+    cfg, book, params = smoke_setup("qwen3-1.7b", seed=0)
+    return cfg, book, params
+
+
+def _server(smoke, frags, **kw):
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftServer
+    cfg, book, params = smoke
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    return ex, GraftServer(ex, book=book, **kw).start()
+
+
+def _submit_all(server, cfg, frags, rng, n_per_client=2):
+    from repro.serving import ServeRequest
+    out = []
+    for _ in range(n_per_client):
+        for f in frags:
+            req = ServeRequest(client=f.client, tokens=rng.randint(
+                0, cfg.vocab_size, 16).astype(np.int32))
+            server.submit(req, f.p, f.t)
+            out.append((req, f.p))
+    return out
+
+
+def test_server_pipelined_numerics_match_monolithic(smoke):
+    """Requests flowing through independent pool drivers (mixed depths,
+    concurrent flushes) produce exactly the monolithic forward pass."""
+    from repro.core import Fragment
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="c0"),
+             Fragment(cfg.name, 1, 60.0, 30.0, client="c1"),
+             Fragment(cfg.name, 1, 90.0, 30.0, client="c2")]
+    ex, server = _server(smoke, frags)
+    try:
+        reqs = _submit_all(server, cfg, frags, np.random.RandomState(0),
+                           n_per_client=3)
+        assert server.join(timeout=300.0), "requests never drained"
+        check_against_monolithic(cfg, params, reqs)
+        rep = server.report()
+        assert rep["served"] == len(reqs)
+        assert rep["local_finishes"] == 0 and rep["rerouted"] == 0
+        assert rep["n_stage_pools"] == ex.n_stage_pools
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_server_mixed_depth_chains_numerics(smoke):
+    """True depth-2 topology (align [0,1) -> shared [1,L) for p=0
+    clients, direct shared for p=1): results flow across TWO pool
+    drivers via the batched execute hop and stay exact."""
+    from repro.core import Fragment
+    from repro.serving import GraftExecutor, GraftServer
+    from repro.serving.smoke import (check_against_monolithic,
+                                     mixed_depth_plan, smoke_setup)
+    cfg, book, params = smoke_setup("qwen3-1.7b", seed=0, n_layers=3)
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="a0"),
+             Fragment(cfg.name, 1, 60.0, 30.0, client="b1"),
+             Fragment(cfg.name, 0, 90.0, 30.0, client="b2")]
+    plan = mixed_depth_plan(cfg, book, frags, s=1, batch=4)
+    ex = GraftExecutor(plan, params, cfg)
+    server = GraftServer(ex, book=book).start()
+    try:
+        assert len(ex.chain_keys("a0")) == 2     # align -> shared
+        assert len(ex.chain_keys("b1")) == 1
+        reqs = _submit_all(server, cfg, frags, np.random.RandomState(4),
+                           n_per_client=3)
+        assert server.join(timeout=300.0)
+        check_against_monolithic(cfg, params, reqs)
+        assert server.report()["served"] == len(reqs)
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_server_reroutes_requests_queued_on_removed_pool(smoke):
+    """THE drain edge case: requests sitting in a pool's batcher while a
+    concurrent apply_plan removes that pool must be rerouted (here: the
+    client leaves the plan entirely, so they finish via the in-process
+    fallback) — completed exactly, never dropped."""
+    from repro.core import Fragment, GraftPlanner
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    planner = GraftPlanner(book)
+    frags1 = [Fragment(cfg.name, 0, 80.0, 30.0, client="c0"),
+              Fragment(cfg.name, 1, 60.0, 30.0, client="c1")]
+    ex, server = _server(smoke, frags1)
+    try:
+        victim_key = ex.chain_keys("c1")[0]
+        server.driver(victim_key).batcher.pause()   # pin c1's requests
+        reqs = _submit_all(server, cfg, [frags1[1]],
+                           np.random.RandomState(1), n_per_client=3)
+        deadline = time.monotonic() + 60.0
+        while len(server.driver(victim_key).batcher) < len(reqs):
+            assert time.monotonic() < deadline, "requests never queued"
+            time.sleep(0.01)
+        # c1 departs; its pool is removed WHILE its requests are queued
+        diff = server.apply(planner.plan([frags1[0]]))
+        assert any(a.key == victim_key for a in diff.by_kind("remove"))
+        assert server.join(timeout=300.0), "rerouted requests lost"
+        rep = server.report()
+        assert rep["served"] == len(reqs)           # nothing dropped
+        assert rep["rerouted"] == len(reqs)
+        assert rep["local_finishes"] == len(reqs)
+        check_against_monolithic(cfg, params, reqs)
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_server_apply_plan_keeps_warm_pools_and_requeues(smoke):
+    """A replan that keeps a pool's identity leaves its queued work
+    intact (no reroute) and the pool uncompiled-again."""
+    from repro.core import Fragment, GraftPlanner
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    planner = GraftPlanner(book)
+    frags1 = [Fragment(cfg.name, 0, 80.0, 30.0, client="c0"),
+              Fragment(cfg.name, 1, 60.0, 30.0, client="c1")]
+    ex, server = _server(smoke, frags1)
+    try:
+        reqs = _submit_all(server, cfg, frags1, np.random.RandomState(2))
+        assert server.join(timeout=300.0)
+        created = ex.stats["pools_created"]
+        # c1's rate doubles: pools resize/rebatch but identities survive
+        frags2 = [frags1[0], dataclasses.replace(frags1[1], q=60.0)]
+        diff = server.apply(planner.plan(frags2))
+        assert diff.n_kept >= 1
+        reqs += _submit_all(server, cfg, frags2, np.random.RandomState(3))
+        assert server.join(timeout=300.0)
+        assert ex.stats["pools_created"] - created == \
+            len(diff.by_kind("add"))
+        check_against_monolithic(cfg, params, reqs)
+        assert server.report()["served"] == len(reqs)
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_server_unroutable_request_grace_expires_without_controller(smoke):
+    """A request whose (client, p) no plan covers must still be answered:
+    with NO controller to replan, the always-running timer thread
+    grace-expires it to the in-process fallback — join() never strands."""
+    from repro.core import Fragment
+    from repro.serving import ServeRequest
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="c0")]
+    ex, server = _server(smoke, frags, waiting_grace_ms=150.0)
+    try:
+        req = ServeRequest(client="c0", tokens=np.random.RandomState(5)
+                           .randint(0, cfg.vocab_size, 16).astype(np.int32))
+        server.submit(req, 1, 80.0)            # p=1: plan only covers p=0
+        assert server.join(timeout=120.0), "parked request stranded"
+        rep = server.report()
+        assert rep["served"] == 1 and rep["waited"] == 1
+        assert rep["local_finishes"] == 1
+        check_against_monolithic(cfg, params, [(req, 1)])
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_serve_loop_timer_replan_mid_traffic():
+    """Acceptance: the wall-clock loop completes >= 1 timer-driven replan
+    mid-traffic and every served request matches the monolithic pass."""
+    from repro.serving import run_serve_loop
+    rep = run_serve_loop(seconds=1.5, n_clients=2, rate=8.0, seed=0,
+                         shift_frac=0.5, control_period_ms=200.0)
+    assert rep["served"] > 0
+    assert rep["drained"]
+    assert rep["numerics_ok"] and rep["numerics_checked"] > 0
+    assert rep["timer_replans"] >= 1, \
+        f"no timer-driven replan fired: {rep}"
+    assert rep["controller_replans"] >= 1
+    # the partition shift is what forced it
+    assert rep["controller_triggers"].get("partition_shift", 0) >= 1
+
+
+@pytest.mark.slow
+def test_serve_loop_socket_transport():
+    """The same loop across real process boundaries (worker subprocesses
+    behind localhost sockets)."""
+    from repro.serving import run_serve_loop
+    rep = run_serve_loop(mode="socket", seconds=1.0, n_clients=2,
+                         rate=6.0, seed=0, shift_frac=None)
+    assert rep["served"] > 0 and rep["drained"]
+    assert rep["numerics_ok"]
