@@ -1,0 +1,201 @@
+"""GraftFleet: front-end scale-out + shed-vs-record under overload.
+
+Two claims, both on ONE shared pool fleet behind a realtime shaped
+transport (every client uplink actually sleeps its transfer time — the
+network-bound regime the paper budgets for):
+
+  * **scale-out** — 2 front-ends sustain higher offered load than 1 at
+    equal SLO attainment. The single front-end serializes every client's
+    uplink submit through one channel per pool and every mobile part
+    through one ingest path; front-ends overlap both.
+  * **overload** — at ~2x the measured 1-FE sustainable load, the
+    admission-control/drop-shed policy keeps p99 of *admitted* requests
+    inside the SLO, while the no-shed baseline (today's record-lateness
+    behavior) blows it for everyone.
+
+Rows:
+  fleet/throughput/feN     us = makespan; derived rps + attainment
+  fleet/scaleout           derived ratio = thr(2fe)/thr(1fe)
+  fleet/overload/noshed    derived p99/attainment at 2x load, no policy
+  fleet/overload/shed      derived p99-of-admitted/attainment/shed_rate
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+
+BUDGET_MS = 150.0
+
+
+def _spread_clients(n, fes):
+    """Client names that rendezvous-route evenly across ``fes``,
+    returned grouped per front-end so workload mixes can be balanced."""
+    from repro.serving.fleet import rendezvous_route
+    per = n // len(fes)
+    got = {fe: [] for fe in fes}
+    i = 0
+    while min(len(v) for v in got.values()) < per and i < 10_000:
+        name = f"cl{i}"
+        fe = rendezvous_route(name, fes)
+        if len(got[fe]) < per:
+            got[fe].append(name)
+        i += 1
+    return got
+
+
+def _setup(n_clients):
+    """Every front-end gets the SAME workload mix (alternating p within
+    its client group) so a 2-FE run genuinely splits the expensive p=1
+    uplink traffic instead of depending on hash luck."""
+    from repro.core import Fragment
+    from repro.serving.smoke import mixed_depth_plan, smoke_setup
+    cfg, book, params = smoke_setup("qwen3-1.7b", seed=0, n_layers=3)
+    groups = _spread_clients(n_clients, ["fe0", "fe1"])
+    frags = [Fragment(cfg.name, p=j % 2, t=BUDGET_MS, q=30.0, client=c)
+             for fe in sorted(groups) for j, c in enumerate(groups[fe])]
+    plan = mixed_depth_plan(cfg, book, frags, s=1, batch=4)
+    return cfg, book, params, frags, plan
+
+
+def _shaped(frags, *, xfer_ms=25.0, rtt_ms=6.0):
+    """Constant-bandwidth realtime shaping: every p=1 uplink pays
+    ~xfer_ms of wall clock, so serving is genuinely network-bound."""
+    from repro.data.traces import BandwidthTrace
+    from repro.serving.transport import (InProcessTransport, LinkShape,
+                                         ShapedTransport)
+    payload = 16 * 256 * 4                       # (S=16, d=256) fp32
+    bw = payload / (xfer_ms / 1e3)
+    shapes = {f.client: LinkShape(
+        trace=BandwidthTrace(samples=np.full(600, bw)), rtt_ms=rtt_ms)
+        for f in frags}
+    return ShapedTransport(InProcessTransport(), shapes, realtime=True)
+
+
+def _reqs(cfg, frags, rng, n_waves):
+    from repro.serving import ServeRequest
+    return [(ServeRequest(client=f.client, tokens=rng.randint(
+        0, cfg.vocab_size, 16).astype(np.int32)), f.p)
+        for _ in range(n_waves) for f in frags]
+
+
+def _fleet(plan, params, cfg, book, frags, n_fe, shed_policy=None):
+    from repro.serving import GraftExecutor, GraftFleet
+    ex = GraftExecutor(plan, params, cfg, transport=_shaped(frags))
+    _prewarm_shapes(ex, cfg, np.random.RandomState(99))
+    # 2 ingest threads per front-end: enough to overlap mobile parts
+    # with uplink sleeps without thrashing small CI boxes
+    fleet = GraftFleet(ex, n_frontends=n_fe, book=book, ingest_threads=2,
+                       shed_policy=shed_policy,
+                       flush_safety_frac=0.25).start()
+    return ex, fleet
+
+
+def _prewarm_shapes(ex, cfg, rng):
+    """Compile every (pool, bucket) batch shape up front: a mid-run jit
+    trace (~100s of ms on a small box) would poison the exec EWMAs that
+    every flush deadline and admission estimate runs on."""
+    from repro.serving import ServeRequest
+    from repro.serving.batcher import bucket_size
+    for key, spec in ex.pool_specs().items():
+        req = ServeRequest(client="_warm", tokens=rng.randint(
+            0, cfg.vocab_size, 16).astype(np.int32))
+        payload = ex.mobile_part(req, key[1])
+        h = ex.handle(key)
+        for b in sorted({bucket_size(n, max(spec.batch, 1))
+                         for n in range(1, max(spec.batch, 1) + 1)}):
+            h.execute([(ex.next_rid(), "_warm", payload, None)
+                       for _ in range(b)])
+
+
+def _warm(fleet, cfg, frags, rng):
+    # roomy-but-finite budget: nothing is hopeless during warmup (so a
+    # shed policy can't eat the compile-paying requests and EWMAs learn
+    # real costs), yet partial batches still flush on deadline
+    for req, p in _reqs(cfg, frags, rng, 2):
+        fleet.submit(req, p, 250.0)
+    if not fleet.join(timeout=600.0):
+        raise RuntimeError("fleet warmup never drained")
+
+
+def _burst(fleet, cfg, frags, rng, waves, budget_ms):
+    """Submit ``waves`` waves as fast as possible; -> (makespan_s, report)."""
+    mark = fleet.mark()
+    reqs = _reqs(cfg, frags, rng, waves)
+    t0 = time.perf_counter()
+    for req, p in reqs:
+        fleet.submit(req, p, budget_ms)
+    if not fleet.join(timeout=600.0):
+        raise RuntimeError("burst never drained")
+    return time.perf_counter() - t0, fleet.report(since=mark)
+
+
+def run(rows: Rows, *, quick=False) -> None:
+    from repro.serving.batcher import ShedPolicy
+
+    n_clients = 4 if quick else 6
+    waves = 4 if quick else 8
+    rounds = 3 if quick else 4
+    cfg, book, params, frags, plan = _setup(n_clients)
+    rng = np.random.RandomState(0)
+
+    # ---- scale-out: same burst, 1 vs 2 front-ends -----------------------
+    # a roomy budget keeps attainment ~1.0 for BOTH configs (equal
+    # attainment), so the makespan difference is pure sustained-load
+    # headroom: what a front-end serializes, two overlap
+    thr = {}
+    for n_fe in (1, 2):
+        ex, fleet = _fleet(plan, params, cfg, book, frags, n_fe)
+        try:
+            _warm(fleet, cfg, frags, rng)
+            best, att = None, 0.0
+            for _ in range(rounds):
+                span, rep = _burst(fleet, cfg, frags, rng, waves,
+                                   budget_ms=1500.0)
+                if best is None or span < best:
+                    best, att = span, rep["attainment"]
+            n_req = waves * len(frags)
+            thr[n_fe] = n_req / best
+            rows.add(f"fleet/throughput/fe{n_fe}", best * 1e6,
+                     f"rps={thr[n_fe]:.1f};attainment={att:.3f};"
+                     f"requests={n_req}")
+        finally:
+            fleet.stop(drain=False, timeout=5.0)
+            ex.close()
+    ratio = thr[2] / max(thr[1], 1e-9)
+    rows.add("fleet/scaleout", 0.0, f"ratio={ratio:.2f}x")
+
+    # ---- overload: 2x the fleet's burst throughput, shed vs record ------
+    # burst throughput upper-bounds what the fleet can sustain, so 2x it
+    # is overload by construction, not by tuning
+    offered_rps = 2.0 * thr[2]
+    secs = 2.0 if quick else 4.0
+    for label, policy in (("noshed", None),
+                          ("shed", ShedPolicy(budget_frac=0.9, window=32))):
+        ex, fleet = _fleet(plan, params, cfg, book, frags, 2,
+                           shed_policy=policy)
+        try:
+            _warm(fleet, cfg, frags, rng)
+            mark = fleet.mark()
+            period = len(frags) / offered_rps    # one wave per period
+            t_end = time.perf_counter() + secs
+            while time.perf_counter() < t_end:
+                t_wave = time.perf_counter()
+                for req, p in _reqs(cfg, frags, rng, 1):
+                    fleet.submit(req, p, BUDGET_MS)
+                time.sleep(max(period - (time.perf_counter() - t_wave), 0.0))
+            if not fleet.join(timeout=600.0):
+                raise RuntimeError("overload phase never drained")
+            rep = fleet.report(since=mark)
+            shed_rate = rep["shed"] / max(rep["offered"], 1)
+            rows.add(f"fleet/overload/{label}", rep["p99_ms"] * 1e3,
+                     f"p99_ms={rep['p99_ms']:.1f};"
+                     f"attainment={rep['attainment']:.3f};"
+                     f"slo_ms={BUDGET_MS:.0f};"
+                     f"offered={rep['offered']};"
+                     f"shed_rate={shed_rate:.2f}")
+        finally:
+            fleet.stop(drain=False, timeout=5.0)
+            ex.close()

@@ -17,13 +17,18 @@ are *blocking*):
 
   * ``server_p99_ms``        — event-driven serving-runtime tail latency
                                from ``benchmarks/bench_server.py``'s
-                               paced phase; gated only once a baseline
-                               containing the key is written (it is
-                               recorded-but-non-blocking until then).
+                               paced phase; BLOCKING since the baseline
+                               gained the key (PR 4) — ``scripts/ci.sh``
+                               runs this gate in the default (blocking)
+                               job.
 
 Everything else (controller replan latency, transport hop/serialize,
-warm-vs-cold replan wall times, server makespan ratio) is recorded in
-BENCH_ci.json for trend inspection but not gated.
+warm-vs-cold replan wall times, server makespan ratio, fleet scale-out
+ratio and overload shed numbers) is recorded in BENCH_ci.json for trend
+inspection but not gated. A baseline metric missing from the current
+run only fails the gate when it is one of the GATED keys above — so a
+subset ``--only`` run (the blocking job skips the slow transport
+benches) still gates what it measured.
 
 Refreshing the baseline: rerun ``--write-baseline`` on a quiet machine
 at the commit you want to bless, eyeball the diff of
@@ -95,7 +100,21 @@ def extract_metrics(rows: list) -> dict:
             metrics["server_p50_ms"] = d["p50_ms"]
         elif name == "server/makespan/pipelined":
             metrics["server_makespan_ratio"] = d["ratio"]
+        elif name == "fleet/scaleout":
+            metrics["fleet_scaleout_ratio"] = d["ratio"]
+        elif name.startswith("fleet/overload/"):
+            kind = name.split("/")[2]
+            metrics[f"fleet_{kind}_p99_ms"] = d["p99_ms"]
+            metrics[f"fleet_{kind}_attainment"] = d["attainment"]
     return metrics
+
+
+GATED_PREFIXES = ("planner_latency_us/", "slo_attainment/")
+GATED_KEYS = ("server_p99_ms",)
+
+
+def _gated(key: str) -> bool:
+    return key in GATED_KEYS or key.startswith(GATED_PREFIXES)
 
 
 def compare(metrics: dict, baseline: dict, tol: float) -> list:
@@ -104,8 +123,9 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
     for key, base in baseline.get("metrics", {}).items():
         cur = metrics.get(key)
         if cur is None:
-            failures.append(f"{key}: missing from current run "
-                            f"(baseline {base:.4g})")
+            if _gated(key):
+                failures.append(f"{key}: missing from current run "
+                                f"(baseline {base:.4g})")
             continue
         if key.startswith("planner_latency_us/"):
             if cur > base * (1 + tol):
@@ -118,13 +138,16 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
                     f"{key}: {cur:.3f} vs baseline {base:.3f} "
                     f"(>{tol:.0%} worse)")
         elif key == "server_p99_ms":
-            # serving-runtime tail latency: gated once a baseline holds
-            # the key (compare() only sees baseline keys, so this stays
-            # non-blocking until someone --write-baseline's it in)
-            if cur > base * (1 + tol):
+            # serving-runtime tail latency: BLOCKING (baselined in PR 4).
+            # Wall-clock tails on shared 2-core runners are far noisier
+            # than planner CPU time, so this key gets 2.5x the band —
+            # it still catches the step-function regressions (a lost
+            # pipelining path, a compile on the hot path) it exists for.
+            wide = 2.5 * tol
+            if cur > base * (1 + wide):
                 failures.append(
                     f"{key}: {cur:.2f} ms vs baseline {base:.2f} ms "
-                    f"(>{tol:.0%} slower)")
+                    f"(>{wide:.0%} slower)")
         # other metrics: recorded, not gated
     return failures
 
@@ -139,6 +162,10 @@ def main(argv=None) -> int:
                     help="run the full (non --quick) benches")
     ap.add_argument("--write-baseline", action="store_true",
                     help="refresh the baseline file instead of gating")
+    ap.add_argument("--retries", type=int, default=1,
+                    help="re-run the benches up to N times when the gate "
+                         "fails, taking the element-wise best (shared "
+                         "runners throttle in bursts)")
     args = ap.parse_args(argv)
 
     rows = run_benches(args.only, quick=not args.full)
@@ -160,20 +187,41 @@ def main(argv=None) -> int:
               f"({len(metrics)} metrics)")
         return 0
 
-    with open(args.out, "w") as f:
-        json.dump(snapshot, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"bench snapshot written to {args.out} ({len(rows)} rows)")
-
     try:
         with open(args.baseline) as f:
             baseline = json.load(f)
     except FileNotFoundError:
+        with open(args.out, "w") as f:
+            json.dump(snapshot, f, indent=2, sort_keys=True)
+            f.write("\n")
         print(f"no baseline at {args.baseline}; gate skipped "
               f"(run --write-baseline to create one)", file=sys.stderr)
         return 0
 
+    # retry on failure: shared runners throttle in bursts, so one bad
+    # interval must not fail the gate when a clean re-run shows the code
+    # is fine. The retry must pass ON ITS OWN — runs are never merged
+    # element-wise (that could pass on a metrics vector no run produced)
     failures = compare(metrics, baseline, args.tolerance)
+    for attempt in range(args.retries):
+        if not failures:
+            break
+        print(f"gate failed (attempt {attempt + 1}); re-running benches "
+              f"to rule out a throttling burst:", file=sys.stderr)
+        for fmsg in failures:
+            print(f"  - {fmsg}", file=sys.stderr)
+        rows = run_benches(args.only, quick=not args.full)
+        metrics = extract_metrics(rows)
+        snapshot["metrics"] = metrics
+        snapshot["rows"] = [{"name": n, "us_per_call": us, "derived": d}
+                            for n, us, d in rows]
+        snapshot["retried"] = attempt + 1
+        failures = compare(metrics, baseline, args.tolerance)
+
+    with open(args.out, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench snapshot written to {args.out} ({len(rows)} rows)")
     for key in ("planner_latency_us", "slo_attainment",
                 "replan_warm_ms", "replan_cold_ms"):
         vals = {k.split("/", 1)[1]: v for k, v in metrics.items()

@@ -23,7 +23,7 @@ def main(argv=None) -> None:
                             bench_massive, bench_overhead, bench_slo,
                             bench_energy, bench_kernels, bench_incremental,
                             bench_calibration, bench_controller,
-                            bench_transport, bench_server)
+                            bench_transport, bench_server, bench_fleet)
     suites = {
         "calibration": bench_calibration.run, # Table 2 anchors
         "resource": bench_resource.run,       # Table 3 / Fig 7
@@ -41,6 +41,7 @@ def main(argv=None) -> None:
         "controller": bench_controller.run,   # online control loop (beyond paper)
         "transport": bench_transport.run,     # cross-process data path
         "server": bench_server.run,           # event-driven serving runtime
+        "fleet": bench_fleet.run,             # multi-front-end scale-out
     }
     only = set(args.only.split(",")) if args.only else None
     rows = Rows()

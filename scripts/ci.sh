@@ -16,7 +16,7 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 if [[ "${1:-}" == "--bench-gate" ]]; then
     python -m benchmarks.gate \
-        --only incremental,controller,transport,server \
+        --only incremental,controller,transport,server,fleet \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
     exit $?
 fi
@@ -31,5 +31,16 @@ if [[ "${1:-}" != "--tests" ]]; then
     # a mid-traffic partition shift driving a timer replan
     python -m repro.launch.serve --serve-loop --execute inprocess \
         --serve-seconds 2 --clients 2
-    python -m benchmarks.run --quick --only incremental,controller
+    # fleet topology: two front-ends over one executor, same loop
+    python -m repro.launch.serve --serve-loop --execute inprocess \
+        --serve-seconds 2 --clients 2 --frontends 2
+    # BLOCKING bench gate on the fast suites: planner latency, controller
+    # SLO attainment, and the server_p99_ms serving-runtime tail (the
+    # slow transport/fleet benches stay in the non-blocking --bench-gate
+    # job; missing non-gated baseline keys do not fail a subset run).
+    # Wider tolerance than the trend-tracking job: a blocking gate on a
+    # small shared runner must only trip on step-function regressions.
+    python -m benchmarks.gate --only incremental,controller,server \
+        --tolerance 0.35 \
+        --baseline benchmarks/baseline.json --out BENCH_ci.json
 fi

@@ -10,7 +10,8 @@ from repro.core.planner import GraftPlanner, ExecutionPlan
 from repro.core.plandiff import (PoolSpec, PoolAction, PlanDiff, plan_pools,
                                  diff_plans, apply_diff)
 from repro.core.baselines import plan_gslice, plan_static, plan_optimal
-from repro.core.placement import place, Placement
+from repro.core.placement import (place, place_pools, migrate, Placement,
+                                  MigrationAction)
 
 __all__ = [
     "LayerCosts", "arch_layer_costs", "Fragment", "merge_fragments",
@@ -19,5 +20,6 @@ __all__ = [
     "solo_plan", "pool_key", "GraftPlanner", "ExecutionPlan",
     "PoolSpec", "PoolAction", "PlanDiff", "plan_pools", "diff_plans",
     "apply_diff",
-    "plan_gslice", "plan_static", "plan_optimal", "place", "Placement",
+    "plan_gslice", "plan_static", "plan_optimal", "place", "place_pools",
+    "migrate", "Placement", "MigrationAction",
 ]

@@ -69,6 +69,13 @@ class PoolAction:
     old: Optional[PoolSpec] = None
     new: Optional[PoolSpec] = None
 
+    @property
+    def n_delta(self) -> int:
+        """Instance-count change this action implies (what placement-aware
+        autoscaling spawns/retires instead of re-packing)."""
+        return ((self.new.n_instances if self.new else 0)
+                - (self.old.n_instances if self.old else 0))
+
 
 @dataclass
 class PlanDiff:

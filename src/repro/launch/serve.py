@@ -64,7 +64,8 @@ def run_serve_loop_cli(args) -> int:
     rep = run_serve_loop(
         arch=args.arch, mode=mode, n_clients=min(args.clients, 4),
         seconds=args.serve_seconds, rate=args.serve_rate, seed=args.seed,
-        shift_frac=0.5, shaped=args.shaped, log=print)
+        shift_frac=0.5, shaped=args.shaped, frontends=args.frontends,
+        shed_budget_frac=args.shed_budget, log=print)
     print(f"[serve-loop] served {rep['served']} requests in "
           f"{rep['wall_s']:.1f}s wall "
           f"(mean batch {rep['mean_batch']:.2f}, "
@@ -73,6 +74,13 @@ def run_serve_loop_cli(args) -> int:
           f"({rep['timer_replans']} timer-driven); triggers "
           f"{rep['controller_triggers']}; "
           f"rerouted {rep['rerouted']}, waited {rep['waited']}")
+    if rep.get("n_frontends", 1) > 1 or rep.get("shed", 0):
+        fes = rep.get("frontends", {})
+        print(f"[serve-loop] fleet: {rep.get('n_frontends', 1)} front-ends "
+              f"{ {n: s['served'] for n, s in fes.items()} }, "
+              f"shed {rep.get('shed', 0)}/{rep.get('offered', 0)}, "
+              f"cross-dispatched {rep.get('cross_dispatched', 0)}, "
+              f"{rep.get('n_chips', 0)} chips")
     print("[serve-loop] client     n   attainment   p50 ms   p99 ms"
           "   budget ms")
     for c, s in rep["clients"].items():
@@ -115,6 +123,13 @@ def main(argv=None):
     ap.add_argument("--shaped", action="store_true",
                     help="serve-loop: shape uplinks with synthetic 5G "
                          "traces")
+    ap.add_argument("--frontends", type=int, default=1,
+                    help="serve-loop: run N GraftServer front-ends over "
+                         "one shared pool fleet (GraftFleet)")
+    ap.add_argument("--shed-budget", type=float, default=None,
+                    help="serve-loop: enable the admission-control shed "
+                         "policy with this per-client shed budget "
+                         "fraction (e.g. 0.5)")
     args = ap.parse_args(argv)
 
     if args.serve_loop:

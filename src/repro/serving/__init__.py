@@ -11,15 +11,18 @@ from repro.serving.executor import (GraftExecutor, ServeRequest,
                                     PoolDrainingError)
 from repro.serving.remote import RemoteExecutor
 from repro.serving.controller import ServingController, Estimate
-from repro.serving.batcher import BatchItem, MicroBatcher
+from repro.serving.batcher import (BatchItem, MicroBatcher, ShedPolicy,
+                                   bucket_size)
 from repro.serving.server import GraftServer, run_serve_loop
+from repro.serving.fleet import GraftFleet, rendezvous_route
 
 __all__ = [
     "partition", "PartitionDecision", "MobileClient", "make_fleet",
     "fleet_fragments", "simulate", "SimResult", "GraftExecutor",
     "ServeRequest", "PoolDrainingError", "RemoteExecutor",
     "ServingController", "Estimate",
-    "BatchItem", "MicroBatcher", "GraftServer", "run_serve_loop",
+    "BatchItem", "MicroBatcher", "ShedPolicy", "bucket_size",
+    "GraftServer", "run_serve_loop", "GraftFleet", "rendezvous_route",
     "Transport", "InProcessTransport", "SocketTransport", "ShapedTransport",
     "LinkShape", "TransferStats", "FrameError", "TruncatedFrameError",
 ]

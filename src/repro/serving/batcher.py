@@ -43,6 +43,8 @@ class BatchItem:
     extras: Optional[dict] = None
     boundary: int = 0                # block boundary the payload sits at
     enqueued_ms: float = 0.0
+    hop_charge_ms: float = 0.0       # uplink time this item will serialize
+                                     # on the pool's channel (stage 0 only)
 
 
 @dataclass
@@ -76,12 +78,14 @@ class MicroBatcher:
         self._max_batch = max(int(max_batch), 1)
         self._stopped = False
         self._paused = False                     # test hook: hold batches
+        self._pending_hop_ms = 0.0               # sum of queued hop charges
         self.stats = BatcherStats()
 
     # ------------------------------------------------------------ intake
     def put(self, item: BatchItem) -> None:
         with self._cond:
             heapq.heappush(self._heap, (item.flush_ms, next(self._seq), item))
+            self._pending_hop_ms += item.hop_charge_ms
             self._cond.notify_all()
 
     def put_many(self, items) -> None:
@@ -89,7 +93,16 @@ class MicroBatcher:
             for item in items:
                 heapq.heappush(self._heap,
                                (item.flush_ms, next(self._seq), item))
+                self._pending_hop_ms += item.hop_charge_ms
             self._cond.notify_all()
+
+    @property
+    def pending_hop_ms(self) -> float:
+        """Serialized uplink time already queued here — what admission
+        control charges a NEW request for the queue it would join (the
+        stage cost model alone misses the network-bound backlog)."""
+        with self._lock:
+            return self._pending_hop_ms
 
     # ---------------------------------------------------------- consumer
     def _ready_locked(self, now_ms: float) -> bool:
@@ -110,6 +123,9 @@ class MicroBatcher:
             by_full = len(self._heap) >= self._max_batch
             batch = [heapq.heappop(self._heap)[2]
                      for _ in range(min(self._max_batch, len(self._heap)))]
+            self._pending_hop_ms -= sum(it.hop_charge_ms for it in batch)
+            if not self._heap:
+                self._pending_hop_ms = 0.0       # no queue, no drift
             self.stats.n_batches += 1
             self.stats.n_items += len(batch)
             self.stats.batch_sizes.append(len(batch))
@@ -169,6 +185,7 @@ class MicroBatcher:
         """Remove and return every queued item (EDF order)."""
         with self._cond:
             out = [heapq.heappop(self._heap)[2] for _ in range(len(self._heap))]
+            self._pending_hop_ms = 0.0
             return out
 
     def next_flush_ms(self) -> Optional[float]:
@@ -178,6 +195,115 @@ class MicroBatcher:
     def __len__(self) -> int:
         with self._cond:
             return len(self._heap)
+
+
+def bucket_size(n: int, max_batch: int) -> int:
+    """Pad-to-bucket target for a batch of ``n``: the smallest power of
+    two >= n, capped at ``max_batch`` (the cap itself is always a bucket
+    even when not a power of two). Padding partial batches to these
+    buckets bounds the distinct batch shapes a pool's jitted program ever
+    sees at ~log2(max_batch)+1 instead of one trace per queue-length the
+    traffic happens to produce — replans that rebatch pools stop churning
+    the compile cache."""
+    n = max(int(n), 1)
+    cap = max(int(max_batch), 1)
+    if n >= cap:
+        return n                      # never pad past the planned batch
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
+def hopeless(now_ms: float, deadline_ms: float,
+             est_remaining_ms: float) -> bool:
+    """A request is *provably* blown iff its projected completion exceeds
+    the deadline STRICTLY — landing exactly on the boundary still counts
+    as feasible, so the shed policy must admit it."""
+    return now_ms + est_remaining_ms > deadline_ms
+
+
+class ShedPolicy:
+    """Admission-control / drop-shed policy with per-client shed budgets.
+
+    The simulator has always dropped SLO-blown requests (paper §3); the
+    live runtime used to record lateness instead. This policy closes the
+    gap: callers ask :meth:`decide` whether a *hopeless* request (see
+    :func:`hopeless` — uplink EWMA + remaining-stage cost past the
+    deadline) should be shed. Two guarantees:
+
+      * never shed a feasible request — ``decide(c, hopeless=False)`` is
+        always admit (it only records the decision in the window);
+      * per-client shed *budget* — at most ``budget_frac`` of a client's
+        last ``window`` admission decisions may be sheds. At the budget
+        the request is admitted regardless (must-admit), so a client on a
+        degraded link still gets service instead of starving.
+
+    The window counts admission outcomes as they happen: a shed enters
+    as True at shed time, an admit as False at admit time
+    (:meth:`note_admitted` for feasible requests at ingest; a
+    budget-forced admit records inside :meth:`should_shed`). Timeliness
+    matters: billing admits at *completion* would starve the budget
+    under exactly the queueing overload shedding exists for. A request
+    the budget forces through is marked exempt by the caller so later
+    checkpoints (deeper stages, batch close) cannot shed it — otherwise
+    one request could be billed against the budget at every stage of its
+    chain and the per-client shed *rate* would silently exceed the
+    budget.
+
+    Thread-safe; shared by every ingest thread, pool driver, and fleet
+    front-end so the budget is global per client, and — because it lives
+    outside the drivers — its accounting survives replans that tear
+    drivers down.
+    """
+
+    def __init__(self, *, budget_frac: float = 0.25, window: int = 64):
+        self.budget_frac = float(budget_frac)
+        self.window = max(int(window), 1)
+        self._lock = threading.Lock()
+        self._hist: dict[str, deque] = {}      # client -> deque[bool: shed?]
+        self.stats = {"shed": 0, "admitted": 0, "budget_admits": 0}
+
+    def shed_frac(self, client: str) -> float:
+        """Fraction of the client's recent requests that were shed."""
+        with self._lock:
+            h = self._hist.get(client)
+            return (sum(h) / len(h)) if h else 0.0
+
+    def should_shed(self, client: str) -> bool:
+        """Called ONLY for a provably-blown request. True => shed it
+        (recorded). False => the budget is spent, the request must be
+        admitted (recorded; the caller marks it exempt from any later
+        checkpoint).
+
+        A shed is allowed only if the window INCLUDING this shed stays
+        within budget: ``(sheds + 1) / (n + 1) <= budget_frac``. The
+        projected form makes the boundary cases exact — 1.0 may shed
+        every hopeless request, 0.0 sheds none — with no empty-window
+        special case (a client with no admitted history cannot be shed
+        unless the budget is total)."""
+        with self._lock:
+            h = self._hist.get(client)
+            if h is None:
+                h = self._hist[client] = deque(maxlen=self.window)
+            if (sum(h) + 1) / (len(h) + 1) > self.budget_frac:
+                h.append(False)                    # budget spent: must admit
+                self.stats["budget_admits"] += 1
+                self.stats["admitted"] += 1
+                return False
+            h.append(True)
+            self.stats["shed"] += 1
+            return True
+
+    def note_admitted(self, client: str) -> None:
+        """One feasible request admitted at ingest — its window entry
+        (what pays the budget down while the system keeps up)."""
+        with self._lock:
+            h = self._hist.get(client)
+            if h is None:
+                h = self._hist[client] = deque(maxlen=self.window)
+            h.append(False)
+            self.stats["admitted"] += 1
 
 
 INTER_HOP_MS = 0.5       # server-internal execute-frame hop allowance

@@ -46,12 +46,15 @@ class ClientWindow:
     bw: deque = field(default_factory=deque)          # (t_ms, bytes/s)
     budgets: deque = field(default_factory=deque)     # (t_ms, budget_ms)
     lat: deque = field(default_factory=deque)         # (t_ms, lat/budget)
+    sheds: deque = field(default_factory=deque)       # t_ms (dropped reqs)
     p: int = 0                                        # latest partition point
 
     def prune(self, horizon_ms: float) -> None:
-        for dq in (self.arrivals, self.bw, self.budgets, self.lat):
-            while dq and (dq[0] if dq is self.arrivals
-                          else dq[0][0]) < horizon_ms:
+        for dq in (self.arrivals, self.sheds):
+            while dq and dq[0] < horizon_ms:
+                dq.popleft()
+        for dq in (self.bw, self.budgets, self.lat):
+            while dq and dq[0][0] < horizon_ms:
                 dq.popleft()
 
 
@@ -65,6 +68,7 @@ class Estimate:
     bw: float                                         # bytes/s uplink
     risk: float                                       # lat/budget percentile
     bw_slope: float = 0.0                             # bytes/s per ms (trend)
+    shed_frac: float = 0.0                            # dropped / offered
     from_prior: bool = False                          # cold-start seeded
 
 
@@ -95,7 +99,8 @@ class ServingController:
                  cold_start_samples: int = 8,
                  bw_trend_lookahead_ms: float = 1500.0,
                  bw_trend_threshold: float = 0.25,
-                 bw_trend_min_samples: int = 4):
+                 bw_trend_min_samples: int = 4,
+                 shed_trigger_frac: float = 0.1):
         from repro.core.reuse import IncrementalPlanner
         self.book = book
         self.planner = planner or IncrementalPlanner(book)
@@ -111,6 +116,7 @@ class ServingController:
         self.bw_trend_lookahead_ms = bw_trend_lookahead_ms
         self.bw_trend_threshold = bw_trend_threshold
         self.bw_trend_min_samples = bw_trend_min_samples
+        self.shed_trigger_frac = shed_trigger_frac
 
         self._clients: dict[str, ClientWindow] = {}
         self._planned_q: dict[str, float] = {}           # client -> planned RPS
@@ -154,6 +160,15 @@ class ServingController:
         for client, nbytes, ms in samples:
             self.observe_uplink(now_ms, client, nbytes, ms)
 
+    def observe_shed(self, now_ms: float, client: str) -> None:
+        """One request dropped by the runtime's shed policy. Sheds are
+        capacity-starvation signals: their fraction of offered load feeds
+        the ``overload_shed`` trigger so the planner gets a chance to buy
+        the missing capacity instead of shedding forever."""
+        w = self._clients.get(client)
+        if w is not None:
+            w.sheds.append(now_ms)
+
     def observe_done(self, now_ms: float, client: str,
                      server_latency_ms: float,
                      budget_ms: Optional[float] = None) -> None:
@@ -189,7 +204,7 @@ class ServingController:
         for name, w in list(self._clients.items()):
             w.prune(horizon)
             if not w.arrivals:
-                if not (w.bw or w.budgets or w.lat):
+                if not (w.bw or w.budgets or w.lat or w.sheds):
                     del self._clients[name]     # departed: evict, don't leak
                 continue
             if len(w.arrivals) >= 2:        # inter-arrival estimate: robust
@@ -203,7 +218,10 @@ class ServingController:
                                        self.risk_pct)) if w.lat else 0.0
             out[name] = Estimate(model=w.model, p=w.p, rate=rate,
                                  budget_ms=budget, bw=bw, risk=risk,
-                                 bw_slope=self._bw_slope(w))
+                                 bw_slope=self._bw_slope(w),
+                                 shed_frac=min(
+                                     len(w.sheds) / max(len(w.arrivals), 1),
+                                     1.0))
         # cold-start overlay: while a client's window is near-empty, the
         # fleet's DECLARED rate/budget speak for it (bounding the first
         # ticks' estimation error) — the window takes over once it holds
@@ -252,6 +270,12 @@ class ServingController:
                     trig.append("rate_drift")
             if e.risk > self.risk_threshold:
                 trig.append("slo_risk")
+            # the runtime is dropping this client's requests: the current
+            # allocation provably lacks capacity for the offered load —
+            # replan (arrival windows already count shed requests, so the
+            # planner sees the full offered rate)
+            if e.shed_frac > self.shed_trigger_frac:
+                trig.append("overload_shed")
             # predictive: a steadily DEGRADING uplink means this client is
             # about to shift its partition point (Neurosurgeon picks a
             # deeper split on a slow link) — replan on the projected drop
@@ -336,10 +360,11 @@ class ServingController:
         # would permanently pass the base>0 guard and kill the trigger
         self._planned_bw = {name: self._bw_anchor(e)
                             for name, e in est.items() if e.bw > 0}
-        # a replan resets the risk windows: the new allocation gets a fresh
-        # look instead of being re-triggered by stale queueing samples
+        # a replan resets the risk/shed windows: the new allocation gets a
+        # fresh look instead of being re-triggered by stale samples
         for w in self._clients.values():
             w.lat.clear()
+            w.sheds.clear()
         self._last_replan_ms = now_ms
         return plan
 

@@ -39,9 +39,11 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core.planner import ExecutionPlan
+from repro.core.placement import MOVE, migrate, place_pools
 from repro.core.plandiff import diff_plans, plan_pools, PlanDiff, PoolSpec
 from repro.core.repartition import pool_key
 from repro.models import run_fragment
+from repro.serving.batcher import bucket_size
 from repro.serving.simulator import _routing
 from repro.serving.transport import (Channel, InProcessTransport, Transport,
                                      error_reply)
@@ -74,7 +76,8 @@ class FragmentInstance:
     shutdown instead of hanging a zero-width batching loop.
     """
 
-    def __init__(self, params, cfg: ModelConfig, spec: PoolSpec):
+    def __init__(self, params, cfg: ModelConfig, spec: PoolSpec,
+                 *, pad_buckets: bool = True, chips=None):
         self.cfg = cfg
         self.key = spec.key
         self.start, self.end = spec.start, spec.end
@@ -83,6 +86,8 @@ class FragmentInstance:
         # it: zero-rate pools carry EMPTY_ALLOC's batch of 1), so the
         # contract is uniform: batch 0 <=> intake refused
         self.draining = spec.batch == 0
+        self.pad_buckets = pad_buckets
+        self.chips: list = list(chips) if chips else []   # placement binding
         self._fn = jax.jit(functools.partial(
             run_fragment, cfg=cfg, start=spec.start, end=spec.end))
         self._params = params
@@ -108,19 +113,31 @@ class FragmentInstance:
     def flush(self):
         """Process queued requests in batches; returns [(req, output), ...].
         Batch is clamped to >= 1 here so a zero/negative batch can never
-        spin the dequeue loop without making progress."""
+        spin the dequeue loop without making progress.
+
+        Partial batches are padded to power-of-two buckets (capped at the
+        planned batch) by replicating the last payload; pad rows are
+        sliced off before results leave the pool. The jitted program then
+        sees at most ~log2(batch)+1 shapes instead of one re-trace per
+        queue length — what keeps replans from churning the compile
+        cache (``pad_buckets=False`` restores the exact-shape behavior).
+        """
         out = []
         step = max(self.batch, 1)
         while self.queue:
             chunk = self.queue[:step]
             del self.queue[:step]
-            payloads = jnp.stack([p for _, p in chunk])
+            payloads = [p for _, p in chunk]
+            if self.pad_buckets:
+                tgt = bucket_size(len(chunk), step)
+                payloads.extend(payloads[-1:] * (tgt - len(chunk)))
+            stacked = jnp.stack(payloads)
             extras = chunk[0][0].extras
-            shape = (payloads.shape, tuple(sorted(extras)) if extras else ())
+            shape = (stacked.shape, tuple(sorted(extras)) if extras else ())
             if shape not in self._shapes_seen:
                 self._shapes_seen.add(shape)
                 self.n_compiles += 1          # new trace for this shape
-            y = self._fn(self._params, inputs=payloads, extras=extras)
+            y = self._fn(self._params, inputs=stacked, extras=extras)
             self.n_batches += 1
             for i, (req, _) in enumerate(chunk):
                 out.append((req, y[i]))
@@ -137,10 +154,15 @@ class PoolService:
 
     def __init__(self, inst: FragmentInstance):
         self.inst = inst
+        # several channels may reach one pool (fleet front-ends each open
+        # their own so uplink transfers overlap); the pool itself is one
+        # resource, so its ops serialize here
+        self._lock = threading.Lock()
 
     def handle(self, msg: dict) -> dict:
         try:
-            return self._dispatch(msg)
+            with self._lock:
+                return self._dispatch(msg)
         except Exception as e:                       # error crosses the wire
             return error_reply(e)
 
@@ -177,11 +199,18 @@ class PoolService:
                                    share=msg["share"], batch=msg["batch"],
                                    n_instances=msg["n_instances"]))
             return {"ok": True}
+        if op == "bind":
+            # placement binding: which chip each of this pool's instances
+            # runs on. Migration-aware replans re-bind only pools whose
+            # chips actually changed.
+            inst.chips = [int(c) for c in msg["chips"]]
+            return {"ok": True}
         if op == "stats":
             return {"ok": True, "pid": os.getpid(),
                     "queue_len": len(inst.queue),
                     "n_batches": inst.n_batches,
                     "n_compiles": inst.n_compiles,
+                    "chips": list(inst.chips),
                     "draining": inst.draining}
         raise ValueError(f"unknown pool op {op!r}")
 
@@ -250,6 +279,10 @@ class PoolHandle:
                     "share": spec.share, "batch": spec.batch,
                     "n_instances": spec.n_instances})
 
+    def bind(self, chips: list) -> None:
+        """Tell the pool which chip each instance is placed on."""
+        self._call({"op": "bind", "chips": [int(c) for c in chips]})
+
     def stats(self) -> dict:
         return self._call({"op": "stats"})
 
@@ -279,7 +312,12 @@ class GraftExecutor:
         # never drain_uplink() don't grow a tuple per request forever
         self.uplink: deque = deque(maxlen=65_536)
         self.stats = {"pools_created": 0, "pools_reused": 0,
-                      "pools_removed": 0, "plan_applies": 0}
+                      "pools_removed": 0, "plan_applies": 0,
+                      "instances_spawned": 0, "instances_retired": 0,
+                      "instances_moved": 0}
+        self.placement = None                 # set by the first _deploy
+        self.last_migrations: list = []       # chip actions of the last apply
+        self._bound: dict[tuple, tuple] = {}  # key -> chips last pushed
         self._deploy(plan)
 
     # ------------------------------------------------------------- pools
@@ -331,6 +369,23 @@ class GraftExecutor:
             client: [self._handles[pool_key(sp.fragment.model, sp)]
                      for sp in chain]
             for client, chain in self.routes.items()}
+        if self.placement is None:            # initial deploy: pack fresh
+            self.placement = place_pools(self._pools)
+        self._bind_chips()
+
+    def _bind_chips(self) -> None:
+        """Push the current placement's chip binding to every pool whose
+        chips changed (migration-aware: untouched pools see no traffic)."""
+        for key, handle in self._handles.items():
+            chips = tuple(self.placement.chips_of(key))
+            if self._bound.get(key) == chips:
+                continue
+            handle.bind(list(chips))
+            self._bound[key] = chips
+
+    def chips_of(self, key: tuple) -> list:
+        """Chip index per instance of pool ``key`` (empty pre-placement)."""
+        return self.placement.chips_of(key) if self.placement else []
 
     def apply_plan(self, new_plan: ExecutionPlan) -> PlanDiff:
         """Transition the live deployment to ``new_plan``. Pools whose
@@ -347,9 +402,18 @@ class GraftExecutor:
                     f"drain with serve() before apply_plan()")
         for a in removed:
             self._retire_pool(self._handles.pop(a.key))
+            self._bound.pop(a.key, None)
             self.stats["pools_removed"] += 1
         self.stats["pools_reused"] += diff.n_kept
         self.stats["plan_applies"] += 1
+        # placement-aware autoscaling: transition the chip packing across
+        # the diff instead of re-packing — unchanged instances keep their
+        # chips; only the delta spawns/retires/moves (bound in _deploy)
+        self.placement, self.last_migrations = migrate(self.placement, diff)
+        stat_key = {MOVE: "instances_moved", "spawn": "instances_spawned",
+                    "retire": "instances_retired"}
+        for act in self.last_migrations:
+            self.stats[stat_key[act.kind]] += 1
         self._deploy(new_plan)
         return diff
 
@@ -454,6 +518,17 @@ class GraftExecutor:
 
     def handle(self, key: tuple) -> PoolHandle:
         return self._handles[key]
+
+    def open_handle(self, key: tuple) -> PoolHandle:
+        """A NEW channel to pool ``key``. Fleet front-ends open one each
+        so their (per-channel-locked, possibly shaped-and-slept) uplink
+        submits overlap instead of serializing on the shared deploy
+        handle; the pool itself serializes execution in PoolService.
+        Remote pools override: one worker connection exists, so the
+        shared handle is returned."""
+        if key not in self._handles:
+            raise KeyError(f"no pool {key}")
+        return PoolHandle(key, self.transport.connect(pool_endpoint(key)))
 
     def record_uplink(self, client: str, nbytes: float, ms: float) -> None:
         """Log one measured first-hop transfer (the server's batch-close

@@ -1,0 +1,347 @@
+"""GraftFleet — multi-front-end scale-out over ONE shared pool fleet.
+
+The paper's evaluation serves fleet-scale traffic (five DNN types, real
+network traces): many clients share one pool fleet under an SLO. A
+single :class:`~repro.serving.server.GraftServer` front-end tops out on
+ingest (mobile-part execution) and on serializing every client's uplink
+through one channel per pool. ``GraftFleet`` runs **several front-ends
+over one executor** — one set of stage pools, one placement, one
+controller — and adds the two cluster-level behaviors a lone server
+cannot provide:
+
+  * **Consistent client -> ingest routing.** Clients map to front-ends
+    by rendezvous (highest-random-weight) hashing: deterministic, and
+    minimal-movement by construction — adding a front-end moves only the
+    clients that now hash highest to it; removing one moves only *its*
+    clients. In-flight requests keep draining on the old front-end
+    (:meth:`remove_frontend` drains before teardown), so a rebalance
+    never drops or reorders work that already entered the system.
+
+  * **Fleet-wide control.** The fleet owns the controller tick: it
+    ingests transport-measured uplinks, replans, and applies the diff
+    ONCE to the shared executor under every front-end's writer lock —
+    front-ends observe (arrivals, completions, sheds, all on one shared
+    clock and controller lock) but never replan on their own
+    (``external_control``). Replans ride ``core.plandiff`` into
+    ``core.placement.migrate``: unchanged instances stay on their chips;
+    only the delta spawns/retires/moves.
+
+Shared pools mean one front-end's flush can surface requests *owned by
+another front-end* (the pool batches across front-ends). Every submit
+registers its request in a fleet-wide ``rid -> server`` registry; pool
+drivers hand foreign results to :meth:`_dispatch`, which forwards them
+to the owner OUTSIDE the flushing server's lock — the owner takes its
+own read lock, so a fleet-wide writer (replan) can never deadlock
+against the hand-off.
+
+Admission control (:class:`~repro.serving.batcher.ShedPolicy`) is one
+shared object: per-client shed budgets are fleet-global and survive both
+replans and front-end rebalances.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+import traceback
+from contextlib import ExitStack
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.batcher import ShedPolicy
+from repro.serving.server import GraftServer, summarize_records
+
+__all__ = ["GraftFleet", "rendezvous_route", "rendezvous_table"]
+
+
+def _score(frontend: str, client: str) -> int:
+    """Deterministic HRW weight (never the salted builtin ``hash``)."""
+    h = hashlib.blake2b(f"{frontend}\x00{client}".encode(),
+                        digest_size=8).digest()
+    return int.from_bytes(h, "big")
+
+
+def rendezvous_route(client: str, frontends: list) -> str:
+    """The front-end ``client`` consistently routes to: the one with the
+    highest rendezvous hash. Stable under membership change everywhere
+    except the added/removed front-end's own winners."""
+    if not frontends:
+        raise ValueError("no front-ends to route to")
+    return max(sorted(frontends), key=lambda fe: _score(fe, client))
+
+
+def rendezvous_table(clients, frontends: list) -> dict:
+    """client -> front-end for a whole fleet (test/report helper)."""
+    return {c: rendezvous_route(c, frontends) for c in clients}
+
+
+class GraftFleet:
+    """Coordinator for several GraftServer front-ends on one executor.
+
+    ``executor`` is owned by the caller (same contract as GraftServer);
+    the fleet owns its front-ends and the control thread.
+    """
+
+    def __init__(self, executor, *, n_frontends: int = 2, controller=None,
+                 book=None, shed_policy: Optional[ShedPolicy] = None,
+                 ingest_threads: Optional[int] = None,
+                 hop_default_ms: float = 1.0,
+                 waiting_grace_ms: Optional[float] = None,
+                 flush_safety_frac: float = 0.15):
+        self.executor = executor
+        self.controller = controller
+        self.book = book
+        self.shed_policy = shed_policy
+        self._ingest_threads = ingest_threads
+        self._hop_default_ms = hop_default_ms
+        self._waiting_grace_ms = waiting_grace_ms
+        self._flush_safety_frac = flush_safety_frac
+        self._period_ms = getattr(controller, "control_period_ms", 250.0)
+
+        self._t0 = time.monotonic()
+        self._ctl_lock = threading.Lock()     # shared by every front-end
+        self._fe_lock = threading.RLock()     # membership
+        self.registry: dict = {}              # rid -> owning GraftServer
+        self._servers: dict[str, GraftServer] = {}
+        self._retired: dict[str, GraftServer] = {}   # removed, kept for
+        self._n_created = 0                          # report continuity
+        self._threads: list = []
+        self._stop_evt = threading.Event()
+        self._started = False
+        self.stats = {"replans_applied": 0, "timer_replans": 0,
+                      "frontends_added": 0, "frontends_removed": 0,
+                      "cross_dispatched": 0}
+        for _ in range(max(int(n_frontends), 1)):
+            self._make_frontend()
+
+    # -------------------------------------------------------------- clock
+    def now_ms(self) -> float:
+        """The ONE clock every front-end and the controller share —
+        per-server clocks would skew the controller's sliding windows."""
+        return (time.monotonic() - self._t0) * 1e3
+
+    # --------------------------------------------------------- membership
+    def _make_frontend(self, name: Optional[str] = None) -> str:
+        with self._fe_lock:
+            if name is None:
+                name = f"fe{self._n_created}"
+            if name in self._servers:
+                raise ValueError(f"front-end {name!r} already exists")
+            self._n_created += 1
+            srv = GraftServer(
+                self.executor, controller=self.controller, book=self.book,
+                hop_default_ms=self._hop_default_ms,
+                waiting_grace_ms=self._waiting_grace_ms,
+                ingest_threads=self._ingest_threads,
+                flush_safety_frac=self._flush_safety_frac,
+                shed_policy=self.shed_policy, name=name,
+                clock=self.now_ms, ctl_lock=self._ctl_lock,
+                external_control=True, registry=self.registry,
+                foreign_router=self._dispatch)
+            self._servers[name] = srv
+            if self._started:
+                srv.start()
+            return name
+
+    @property
+    def frontends(self) -> list:
+        with self._fe_lock:
+            return list(self._servers)
+
+    def frontend(self, name: str) -> GraftServer:
+        with self._fe_lock:
+            return self._servers[name]
+
+    def add_frontend(self, name: Optional[str] = None) -> str:
+        """Scale out: new clients (and only the clients whose rendezvous
+        winner the newcomer is) route here from the next submit on."""
+        name = self._make_frontend(name)
+        self.stats["frontends_added"] += 1
+        return name
+
+    def remove_frontend(self, name: str, *, drain: bool = True,
+                        timeout: float = 60.0) -> bool:
+        """Scale in: take ``name`` out of the routing ring FIRST (new
+        submits for its clients rendezvous to the survivors), then let
+        its in-flight requests drain on the old ingest before teardown.
+        Returns True when fully drained."""
+        with self._fe_lock:
+            if len(self._servers) <= 1:
+                raise ValueError("cannot remove the last front-end")
+            srv = self._servers.pop(name)
+        self.stats["frontends_removed"] += 1
+        ok = srv.stop(drain=drain, timeout=timeout)
+        with self._fe_lock:
+            # keep the stopped server: its completion log and stats stay
+            # part of every fleet report — scale-in must not erase the
+            # traffic the departed front-end served
+            self._retired[name] = srv
+        return ok
+
+    # ------------------------------------------------------------ routing
+    def route(self, client: str) -> GraftServer:
+        with self._fe_lock:
+            return self._servers[rendezvous_route(client,
+                                                  list(self._servers))]
+
+    def routing_table(self, clients) -> dict:
+        with self._fe_lock:
+            return rendezvous_table(clients, list(self._servers))
+
+    def submit(self, req, p: int, budget_ms: float) -> int:
+        """Accept one request on the client's consistent front-end."""
+        return self.route(req.client).submit(req, p, budget_ms)
+
+    def _dispatch(self, results: list) -> None:
+        """Hand results a shared pool flushed on one front-end to their
+        owning front-ends (called with NO locks held)."""
+        by_owner: dict[int, tuple] = {}
+        for rid, y in results:
+            owner = self.registry.get(rid)
+            if owner is None:
+                continue                       # completed/shed meanwhile
+            by_owner.setdefault(id(owner), (owner, []))[1].append((rid, y))
+        for owner, rs in by_owner.values():
+            self.stats["cross_dispatched"] += len(rs)
+            try:
+                owner.accept_results(rs)
+            except Exception:
+                traceback.print_exc()
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> "GraftFleet":
+        assert not self._started, "fleet already started"
+        self._started = True
+        with self._fe_lock:
+            for srv in self._servers.values():
+                srv.start()
+        t = threading.Thread(target=self._control_loop, daemon=True,
+                             name="fleet-control")
+        t.start()
+        self._threads.append(t)
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float = 60.0) -> bool:
+        self._stop_evt.set()
+        ok = True
+        with self._fe_lock:
+            servers = list(self._servers.values())
+        for srv in servers:
+            ok = srv.stop(drain=drain, timeout=timeout) and ok
+        return ok
+
+    def __enter__(self):
+        return self.start() if not self._started else self
+
+    def __exit__(self, *exc):
+        self.stop(drain=False, timeout=5.0)
+
+    # ------------------------------------------------------------ control
+    def _control_loop(self):
+        period_s = self._period_ms / 1e3
+        while not self._stop_evt.wait(timeout=period_s):
+            try:
+                self.tick()
+            except Exception:
+                traceback.print_exc()
+
+    def tick(self, *, force: bool = False):
+        """One fleet control tick: controller sees the fleet-wide event
+        stream, a replan is applied ONCE across every front-end."""
+        plan = None
+        if self.controller is not None:
+            now = self.now_ms()
+            samples = self.executor.drain_uplink()
+            with self._ctl_lock:
+                self.controller.ingest_uplink(now, samples)
+                plan = self.controller.control(now, force=force)
+            if plan is not None:
+                self.apply(plan)
+                self.stats["timer_replans"] += 1
+        # parked-request routing/expiry is NOT repeated here: each
+        # front-end's own control thread still ticks those even under
+        # external_control
+        return plan
+
+    def apply(self, new_plan):
+        """Transition the SHARED executor under every front-end's writer
+        lock, then re-sync each front-end's drivers/routes to the result.
+        One executor transition, one placement migration — not one per
+        front-end."""
+        with self._fe_lock:
+            servers = list(self._servers.values())
+        with ExitStack() as stack:
+            for srv in servers:                # fixed order: no lock cycles
+                stack.enter_context(srv._rw.write())
+            diff = self.executor.apply_plan(new_plan)
+            leftovers = [srv._sync_to_executor(diff) for srv in servers]
+        for srv, lo in zip(servers, leftovers):
+            srv._finish_apply(lo)
+        self.stats["replans_applied"] += 1
+        return diff
+
+    # ------------------------------------------------------------- report
+    def join(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        ok = True
+        with self._fe_lock:
+            servers = list(self._servers.values())
+        for srv in servers:
+            left = None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+            ok = srv.join(timeout=left) and ok
+        return ok
+
+    def mark(self) -> dict:
+        """Per-front-end completion-log snapshot (warmup exclusion);
+        covers retired front-ends too so a later ``report(since=...)``
+        slices their frozen logs consistently."""
+        with self._fe_lock:
+            return {name: srv.mark()
+                    for name, srv in [*self._servers.items(),
+                                      *self._retired.items()]}
+
+    def report(self, since: Optional[dict] = None) -> dict:
+        """Fleet-wide SLO report: merged completion records (including
+        retired front-ends' — scale-in does not erase served traffic),
+        per-front-end breakdown, shared-pool/placement state."""
+        with self._fe_lock:
+            items = list(self._servers.items()) + list(self._retired.items())
+            live = set(self._servers)
+        recs, per_fe = [], {}
+        sums = {k: 0 for k in ("rerouted", "local_finishes", "waited",
+                               "shed_ingest", "shed_flush")}
+        batch_sizes = []
+        for name, srv in items:
+            rs = srv.records((since or {}).get(name, 0))
+            recs.extend(rs)
+            per_fe[name] = {
+                "served": sum(1 for r in rs if not r.get("shed")),
+                "shed": sum(1 for r in rs if r.get("shed")),
+                "retired": name not in live,
+                "ingest_threads": getattr(srv, "n_ingest_threads", 0)}
+            for k in sums:
+                sums[k] += srv.stats[k]
+            batch_sizes += [s for d in list(srv._drivers.values())
+                            for s in list(d.batcher.stats.batch_sizes)]
+        out = summarize_records(recs)
+        placement = getattr(self.executor, "placement", None)
+        out.update({
+            "frontends": per_fe,
+            "n_frontends": len(live),
+            "replans": self.stats["replans_applied"],
+            "timer_replans": self.stats["timer_replans"],
+            "cross_dispatched": self.stats["cross_dispatched"],
+            "mean_batch": float(np.mean(batch_sizes)) if batch_sizes
+            else 0.0,
+            "n_stage_pools": self.executor.n_stage_pools,
+            "n_chips": placement.n_chips if placement is not None else 0,
+            **sums,
+        })
+        return out
+
+    @property
+    def n_inflight(self) -> int:
+        with self._fe_lock:
+            return sum(s.n_inflight for s in self._servers.values())

@@ -78,7 +78,8 @@ def _worker_loop(conn: socket.socket,
                                 batch=msg["batch"],
                                 n_instances=msg["n_instances"])
                 service = PoolService(
-                    FragmentInstance(msg["params"], cfg, spec))
+                    FragmentInstance(msg["params"], cfg, spec,
+                                     chips=msg.get("chips")))
                 reply = {"ok": True, "pid": os.getpid()}
             except Exception as e:
                 reply = error_reply(e)
@@ -164,11 +165,13 @@ class WorkerProc:
         self.channel = SocketChannel(f"worker/{key}", None, max_frame_bytes,
                                      sock=conn)
 
-    def init(self, cfg_bytes: bytes, params_np, spec: PoolSpec) -> None:
+    def init(self, cfg_bytes: bytes, params_np, spec: PoolSpec,
+             chips=None) -> None:
         reply = self.channel.request({
             "op": "init", "cfg": cfg_bytes, "params": params_np,
             "key": list(spec.key), "share": spec.share, "batch": spec.batch,
-            "n_instances": spec.n_instances})
+            "n_instances": spec.n_instances,
+            "chips": [int(c) for c in (chips or [])]})
         if not reply.get("ok"):
             raise RuntimeError(f"worker init for {spec.key} failed: "
                                f"{reply.get('error')}")
@@ -218,7 +221,11 @@ class RemoteExecutor(GraftExecutor):
         t0 = time.perf_counter()
         w = WorkerProc(spec.key, self._max_frame)
         try:
-            w.init(self._cfg_bytes, self._params_np, spec)
+            # a pool added by a migration-aware replan knows its chips at
+            # birth (placement is transitioned before _deploy spawns);
+            # the initial deploy binds right after packing instead
+            w.init(self._cfg_bytes, self._params_np, spec,
+                   chips=self.chips_of(spec.key))
         except Exception:
             w.shutdown()                 # the spawned proc must not leak
             raise
@@ -260,6 +267,12 @@ class RemoteExecutor(GraftExecutor):
                     pass
             raise first_err
         return handles
+
+    def open_handle(self, key: tuple) -> PoolHandle:
+        """Remote pools have ONE dial-back connection per worker, so
+        fleet front-ends share the deploy handle (its per-handle lock
+        serializes the wire; the worker is single-threaded anyway)."""
+        return self._handles[key]
 
     def _retire_pool(self, handle: PoolHandle) -> None:
         w = self._workers.pop(handle.key, None)

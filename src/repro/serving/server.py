@@ -45,16 +45,18 @@ import traceback
 from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-from repro.serving.batcher import (BatchItem, MicroBatcher,
-                                   flush_deadline_ms)
+from repro.serving.batcher import (BatchItem, MicroBatcher, ShedPolicy,
+                                   flush_deadline_ms, hopeless,
+                                   remaining_cost_ms)
 from repro.serving.executor import (GraftExecutor, PoolDrainingError,
                                     ServeRequest)
 
-__all__ = ["GraftServer", "PoolDriver", "run_serve_loop"]
+__all__ = ["GraftServer", "PoolDriver", "run_serve_loop",
+           "summarize_records"]
 
 MAX_RECORDS = 65_536      # completion-log cap; oldest roll off the front
 
@@ -112,6 +114,7 @@ class _InFlight:
     stage: int = 0
     rerouted: int = 0
     local: bool = False              # finished by the in-process fallback
+    shed_exempt: bool = False        # budget-forced admit: never shed later
 
 
 class PoolDriver(threading.Thread):
@@ -125,6 +128,7 @@ class PoolDriver(threading.Thread):
         self.batcher = MicroBatcher(max_batch=max(spec.batch, 1))
         self.model_est_ms = server._model_stage_cost(spec)
         self.exec_ewma_ms: Optional[float] = None   # measured batch wall
+        self.busy_until_ms = 0.0     # estimated end of the batch in flight
         self.stop_flag = False
         self.n_batches = 0
 
@@ -144,20 +148,29 @@ class PoolDriver(threading.Thread):
         while True:
             if self.stop_flag or self.batcher.stopped:
                 return
-            batch = None
+            batch, foreign = None, None
             with srv._rw.read():
                 if self.stop_flag:
                     return
                 batch = self.batcher.pop_ready(srv.now_ms())
                 if batch:
                     try:
-                        srv._run_batch(self, batch)
+                        foreign = srv._run_batch(self, batch)
                     except Exception:
                         # the driver thread must NEVER die with work
                         # outstanding: salvage the popped batch so
                         # join() can't strand, then keep serving
                         traceback.print_exc()
                         srv._salvage(batch)
+            # fleet mode: a shared pool's flush can return requests OWNED
+            # BY ANOTHER FRONT-END — hand them over OUTSIDE our read
+            # section (the receiving server takes its own lock; nesting
+            # the two would deadlock against a fleet-wide writer)
+            if foreign:
+                try:
+                    srv.foreign_router(foreign)
+                except Exception:
+                    traceback.print_exc()
             if not batch:
                 self.batcher.wait_for_work(srv.now_ms())
 
@@ -171,19 +184,47 @@ class GraftServer:
 
     def __init__(self, executor: GraftExecutor, *, controller=None,
                  book=None, hop_default_ms: float = 1.0,
-                 waiting_grace_ms: Optional[float] = None):
+                 waiting_grace_ms: Optional[float] = None,
+                 ingest_threads: Optional[int] = None,
+                 shed_policy: Optional[ShedPolicy] = None,
+                 flush_safety_frac: float = 0.15,
+                 name: str = "graft",
+                 clock: Optional[Callable[[], float]] = None,
+                 ctl_lock: Optional[threading.Lock] = None,
+                 external_control: bool = False,
+                 registry: Optional[dict] = None,
+                 foreign_router: Optional[Callable] = None):
         self.executor = executor
         self.controller = controller
         self.book = book
         self.cfg = executor.cfg
+        self.name = name
         self.hop_default_ms = hop_default_ms
         self._period_ms = getattr(controller, "control_period_ms", 250.0)
         self.waiting_grace_ms = waiting_grace_ms \
             if waiting_grace_ms is not None else 4.0 * self._period_ms
+        # fleet plumbing: a GraftFleet shares ONE clock, controller lock,
+        # rid->server registry, and shed policy across its front-ends and
+        # owns the control loop itself (external_control). Standalone
+        # servers get private defaults and keep controlling themselves.
+        self.shed_policy = shed_policy
+        # batches used to close at the LAST instant that could still meet
+        # the SLO — which lands every deadline-closed request exactly ON
+        # the boundary, where scheduler jitter decides the attainment
+        # coin-flip (and the flush-time shed check sees everything as
+        # marginal). Reserve a slice of the budget as headroom instead.
+        self.flush_safety_frac = flush_safety_frac
+        self.ingest_threads = ingest_threads      # None -> min(4, n_clients)
+        self.external_control = external_control
+        self.registry = registry
+        self.foreign_router = foreign_router
+        self._clock = clock
 
         self._rw = _RWLock()
-        self._ctl_lock = threading.Lock()
+        self._ctl_lock = ctl_lock if ctl_lock is not None \
+            else threading.Lock()
         self._drivers: dict[tuple, PoolDriver] = {}
+        self._local_handles: dict[tuple, object] = {}   # per-server channels
         self._routes: dict[str, list] = {}
         self._inflight: dict[int, _InFlight] = {}
 
@@ -210,11 +251,14 @@ class GraftServer:
 
         self.stats = {"replans_applied": 0, "timer_replans": 0,
                       "rerouted": 0, "local_finishes": 0,
-                      "waited": 0, "batches": 0}
+                      "waited": 0, "batches": 0,
+                      "shed_ingest": 0, "shed_flush": 0}
         self._t0 = time.monotonic()
 
     # -------------------------------------------------------------- clock
     def now_ms(self) -> float:
+        if self._clock is not None:        # fleet mode: one shared clock
+            return self._clock()
         return (time.monotonic() - self._t0) * 1e3
 
     # ----------------------------------------------------------- lifecycle
@@ -227,14 +271,21 @@ class GraftServer:
                 self._drivers[key] = drv
                 drv.start()
             self._routes = self.executor.route_table()
-        t = threading.Thread(target=self._ingest_loop, daemon=True,
-                             name="graft-ingest")
-        t.start()
-        self._threads.append(t)
+        # mobile parts used to serialize on ONE ingest thread; default one
+        # thread per routed client up to 4 so concurrent clients' device
+        # fragments overlap (the shared deque + condition is already
+        # multi-consumer safe)
+        self.n_ingest_threads = self.ingest_threads if self.ingest_threads \
+            else min(4, max(len(self._routes), 1))
+        for i in range(self.n_ingest_threads):
+            t = threading.Thread(target=self._ingest_loop, daemon=True,
+                                 name=f"{self.name}-ingest-{i}")
+            t.start()
+            self._threads.append(t)
         # the timer thread always runs: with no controller it still
         # routes/grace-expires parked requests so join() can't strand
         t = threading.Thread(target=self._control_loop, daemon=True,
-                             name="graft-control")
+                             name=f"{self.name}-control")
         t.start()
         self._threads.append(t)
         return self
@@ -252,6 +303,7 @@ class GraftServer:
             for drv in self._drivers.values():
                 drv.stop_flag = True
                 drv.batcher.stop()
+            self._drop_local_handles()
         self._closed = True
         return ok
 
@@ -268,6 +320,8 @@ class GraftServer:
         if self._closed or self._stop_ingest:
             raise RuntimeError("server is stopped")
         rid = self.executor.next_rid()
+        if self.registry is not None:      # fleet: results may surface on
+            self.registry[rid] = self      # ANOTHER front-end's flush
         with self._ingest_cond:
             self._ingest_q.append((rid, req, p, budget_ms, self.now_ms()))
             self._n_submitted += 1
@@ -289,6 +343,9 @@ class GraftServer:
                 self._ingest_one(*job)
             except Exception:
                 traceback.print_exc()
+                self._inflight.pop(job[0], None)
+                if self.registry is not None:    # don't leak the rid slot
+                    self.registry.pop(job[0], None)
                 with self._done_cond:        # never strand join()
                     self._n_done += 1
                     self._done_cond.notify_all()
@@ -315,6 +372,8 @@ class GraftServer:
             chain = self._routes.get(req.client)
             if chain and chain[0][1] == p:
                 st.chain = list(chain)
+                if self._shed_at_ingest(rid, st, now):
+                    return
                 self._enqueue_stage(rid, st, payload)
                 return
         # no chain for this (client, p) yet — a shifted/unknown client
@@ -342,6 +401,22 @@ class GraftServer:
                 out.append(self.hop_default_ms)
         return out
 
+    def _downstream_backlog_ms(self, chain: list, after_stage: int) -> float:
+        """Serialized uplink work already queued at stages STRICTLY after
+        ``after_stage`` — head-of-line time a request will lose waiting
+        for those drivers to push other clients' transfers. The stage
+        cost model alone cannot see this network-bound backlog."""
+        now = self.now_ms()
+        total = 0.0
+        for key in chain[after_stage + 1:]:
+            drv = self._drivers.get(key)
+            if drv is not None:
+                # queued uplink charges + the batch the driver is ALREADY
+                # sleeping through (popped, so absent from the queue)
+                total += drv.batcher.pending_hop_ms \
+                    + max(drv.busy_until_ms - now, 0.0)
+        return total
+
     def _model_stage_cost(self, spec) -> float:
         if self.book is None or spec.model not in self.book:
             return 5.0
@@ -354,6 +429,94 @@ class GraftServer:
     def _note_uplink(self, client: str, ms: float) -> None:
         e = self._uplink_ewma.get(client)
         self._uplink_ewma[client] = ms if e is None else 0.7 * e + 0.3 * ms
+
+    # ---------------------------------------------------- admission / shed
+    def _est_remaining_ms(self, st: _InFlight, *, at_stage: int,
+                          include_backlog: bool = False) -> float:
+        """Uplink EWMA + remaining-stage cost from ``at_stage`` on —
+        the provably-blown test's left-hand side. ``include_backlog``
+        additionally charges the queue a NEW request would join at the
+        entry stage: the uplink time its pool channel must serialize for
+        already-queued stage-0 items (the network-bound backlog the
+        stage cost model can't see) plus execution of the full batches
+        ahead. Flush-time items are already at the head, so no backlog."""
+        costs = self._chain_costs(st.chain)
+        hop = self._hop_ms(st.req.client) if at_stage == 0 \
+            else self.hop_default_ms
+        est = remaining_cost_ms(costs, at_stage, hop_ms=hop) \
+            + self._downstream_backlog_ms(st.chain, at_stage)
+        if include_backlog:
+            drv = self._drivers.get(st.chain[at_stage]) \
+                if at_stage < len(st.chain) else None
+            if drv is not None:
+                full_batches = len(drv.batcher) // max(drv.batcher.max_batch,
+                                                       1)
+                est += drv.batcher.pending_hop_ms \
+                    + full_batches * drv.est_cost_ms()
+        return est
+
+    def _shed_at_ingest(self, rid: int, st: _InFlight, now: float) -> bool:
+        """Admission control at the door (caller holds the read lock):
+        a request whose deadline is provably blown before it is even
+        queued is shed — unless the client's shed budget says otherwise
+        (then it is admitted AND exempt from every later checkpoint).
+        Returns True when the request was shed."""
+        if self.shed_policy is None:
+            return False
+        blown = hopeless(now, st.deadline_ms,
+                         self._est_remaining_ms(st, at_stage=0,
+                                                include_backlog=True))
+        if not blown:
+            self.shed_policy.note_admitted(st.req.client)
+            return False
+        if not self.shed_policy.should_shed(st.req.client):
+            st.shed_exempt = True                  # budget-forced admit
+            return False
+        self._shed(rid, st, "ingest")
+        return True
+
+    def _shed_at_flush(self, item: BatchItem, st: _InFlight,
+                       now: float, extra_ms: float = 0.0) -> bool:
+        """Drop decision when a batch closes: requests that became
+        hopeless while queued (bandwidth faded, batch ahead overran) are
+        dropped instead of burning pool time on a guaranteed SLO miss.
+        ``extra_ms`` charges work between this item and its result that
+        the chain estimate can't see (its batch companions' uplinks —
+        the flush only fires after every submit in the batch). The
+        flush-safety margin is demanded as headroom here too: this is
+        the LAST checkpoint before real link/pool time is spent, so a
+        request that could only finish exactly on the boundary (where
+        execution variance decides) is dropped rather than gambled on."""
+        if st.shed_exempt:
+            return False
+        margin = self.flush_safety_frac * max(st.budget_ms, 0.0)
+        blown = hopeless(now, item.deadline_ms - margin, extra_ms +
+                         self._est_remaining_ms(st, at_stage=st.stage))
+        if not blown or not self.shed_policy.should_shed(item.client):
+            if blown:
+                st.shed_exempt = True              # budget-forced admit
+            return False
+        self._shed(item.rid, st, "flush")
+        return True
+
+    def _shed(self, rid: int, st: _InFlight, where: str) -> None:
+        """Retire a request WITHOUT serving it (the simulator's drop,
+        now on the live path). Sheds count toward join() and land in the
+        completion log flagged, so reports can split p99-of-admitted
+        from offered load."""
+        self._inflight.pop(rid, None)
+        if self.registry is not None:
+            self.registry.pop(rid, None)
+        self.stats["shed_" + where] += 1
+        t = self.now_ms()
+        self._push_record({
+            "rid": rid, "client": st.req.client, "p": st.p,
+            "latency_ms": t - st.t_arrive_ms, "budget_ms": st.budget_ms,
+            "ok": False, "shed": True, "rerouted": st.rerouted,
+            "local": st.local, "t_done_ms": t})
+        if self.controller is not None:
+            with self._ctl_lock:
+                self.controller.observe_shed(t, st.req.client)
 
     def _enqueue_stage(self, rid: int, st: _InFlight, payload) -> None:
         """Queue ``payload`` for stage ``st.stage`` of the request's
@@ -377,50 +540,88 @@ class GraftServer:
             return
         now = self.now_ms()
         # only stage 0 still faces the client uplink; deeper stages ride
-        # server-internal execute frames
+        # server-internal execute frames. The safety margin keeps the
+        # batch-close off the exact SLO boundary.
         hop = self._hop_ms(st.req.client) if st.stage == 0 \
             else self.hop_default_ms
-        flush = flush_deadline_ms(st.deadline_ms,
+        margin = self.flush_safety_frac * max(st.budget_ms, 0.0) \
+            + self._downstream_backlog_ms(st.chain, st.stage)
+        flush = flush_deadline_ms(st.deadline_ms - margin,
                                   self._chain_costs(st.chain), st.stage,
                                   now, hop_ms=hop)
         drv.batcher.put(BatchItem(
             rid=rid, client=st.req.client, payload=payload,
             flush_ms=flush, deadline_ms=st.deadline_ms,
             extras=self._wire_extras(st.req), boundary=key[1],
-            enqueued_ms=now))
+            enqueued_ms=now,
+            hop_charge_ms=hop if st.stage == 0 else 0.0))
 
     # ------------------------------------------------------------ execute
-    def _run_batch(self, driver: PoolDriver, batch: list) -> None:
+    def _run_batch(self, driver: PoolDriver, batch: list):
         """Execute one closed batch on the driver's pool (read lock held):
         stage-0 items pay the per-client uplink submit (measured/shaped
-        individually), deeper items ride one batched execute frame."""
-        handle = self.executor.handle(driver.key)
+        individually), deeper items ride one batched execute frame.
+        Returns results owned by another front-end (fleet mode) for the
+        caller to dispatch outside the lock, or None."""
+        handle = self._pool_handle(driver.key)
+        now = self.now_ms()
         stage0, later = [], []
         for it in batch:
             st = self._inflight.get(it.rid)
             if st is None:
                 continue
+            # stage-0 items are checked per item in the submit loop below
+            # (their batch position costs them uplink slack)
+            if st.stage != 0 and self.shed_policy is not None \
+                    and self._shed_at_flush(it, st, now):
+                continue
             (stage0 if st.stage == 0 else later).append(it)
         if not stage0 and not later:
-            return
-        t0 = time.perf_counter()
+            return None
+        driver.busy_until_ms = self.now_ms() \
+            + sum(it.hop_charge_ms for it in stage0) + driver.est_cost_ms()
+        # exec_ms accumulates ONLY pool execution: the uplink submits are
+        # charged separately (hop EWMA) by every deadline/admission
+        # estimate — folding their (possibly realtime-shaped) wall time
+        # into exec_ewma double-counts the hop and, under load, inflates
+        # remaining-cost estimates until every request looks hopeless
+        exec_ms = 0.0
+        results = []
         try:
+            if later:
+                # deeper-stage items first: they are closest to their
+                # deadlines and must not wait behind this same batch's
+                # stage-0 uplink transfers
+                t0 = time.perf_counter()
+                results += handle.execute(
+                    [(it.rid, it.client, it.payload, it.extras)
+                     for it in later])
+                exec_ms += (time.perf_counter() - t0) * 1e3
+            companions = sum(it.hop_charge_ms for it in stage0)
             for it in stage0:
+                companions -= it.hop_charge_ms     # hops still after THIS
+                st = self._inflight.get(it.rid)
+                # re-check per item at CURRENT time: earlier items' uplink
+                # transfers in this same batch consume later items' slack,
+                # and a blown request must not burn 25 ms of link time
+                if st is None or (self.shed_policy is not None
+                                  and self._shed_at_flush(
+                                      it, st, self.now_ms(),
+                                      extra_ms=companions)):
+                    continue
                 nbytes, ms = handle.submit(it.rid, it.client, it.payload,
                                            extras=it.extras)
                 self.executor.record_uplink(it.client, nbytes, ms)
                 self._note_uplink(it.client, ms)
-            if later:
-                results = handle.execute(
-                    [(it.rid, it.client, it.payload, it.extras)
-                     for it in later])
-            else:
-                results = handle.flush()
+            if stage0:
+                t0 = time.perf_counter()
+                results += handle.flush()
+                exec_ms += (time.perf_counter() - t0) * 1e3
         except PoolDrainingError:
             # intake refused atomically: nothing queued pool-side
             for it in stage0 + later:
                 self._reroute_item(it)
-            return
+            return None
         except Exception:
             traceback.print_exc()
             recovered = {}
@@ -428,17 +629,69 @@ class GraftServer:
                 recovered = dict(handle.flush())
             except Exception:
                 pass
+            foreign = None
             for rid, y in recovered.items():
-                self._advance(rid, y)
+                if rid in self._inflight:
+                    self._advance(rid, y)
+                elif self.foreign_router is not None:
+                    # a shared pool's recovery flush can surface ANOTHER
+                    # front-end's results too — dropping them here would
+                    # strand those requests forever
+                    if foreign is None:
+                        foreign = []
+                    foreign.append((rid, y))
             for it in stage0 + later:
                 if it.rid not in recovered and it.rid in self._inflight:
                     self._finish_local(it.rid, self._inflight[it.rid],
                                        it.payload, boundary=it.boundary)
-            return
-        driver.note_exec((time.perf_counter() - t0) * 1e3)
+            return foreign
+        driver.note_exec(exec_ms)
         self.stats["batches"] += 1
+        foreign = None
         for rid, y in results:
-            self._advance(rid, y)
+            if rid in self._inflight:
+                self._advance(rid, y)
+            elif self.foreign_router is not None:
+                if foreign is None:
+                    foreign = []
+                foreign.append((rid, y))
+        return foreign
+
+    def _pool_handle(self, key: tuple):
+        """This server's own channel to pool ``key`` (opened lazily).
+        Per-front-end channels let two front-ends' uplink submits to the
+        same pool overlap; executors without multi-channel support fall
+        back to the shared deploy handle."""
+        h = self._local_handles.get(key)
+        if h is None:
+            try:
+                h = self.executor.open_handle(key)
+            except (AttributeError, KeyError):
+                h = self.executor.handle(key)
+            self._local_handles[key] = h
+        return h
+
+    def _drop_local_handles(self, keys=None) -> None:
+        for key in list(self._local_handles) if keys is None else keys:
+            h = self._local_handles.pop(key, None)
+            if h is None:
+                continue
+            try:                    # never close the executor's own handle
+                shared = self.executor._handles.get(key)
+            except AttributeError:
+                shared = None
+            if h is not shared:
+                try:
+                    h.close()
+                except Exception:
+                    pass
+
+    def accept_results(self, results: list) -> None:
+        """Advance requests whose stage output surfaced on ANOTHER
+        front-end's flush of a shared pool (fleet dispatch target)."""
+        with self._rw.read():
+            for rid, y in results:
+                self._advance(rid, y)
 
     def _advance(self, rid: int, y) -> None:
         st = self._inflight.get(rid)
@@ -450,23 +703,29 @@ class GraftServer:
         else:
             self._complete(rid, st, y)
 
-    def _complete(self, rid: int, st: _InFlight, y) -> None:
-        st.req.result = np.asarray(y)
-        self._inflight.pop(rid, None)
-        t_done = self.now_ms()
-        latency = t_done - st.t_arrive_ms
+    def _push_record(self, rec: dict) -> None:
         with self._done_cond:
-            self._records.append({
-                "rid": rid, "client": st.req.client, "p": st.p,
-                "latency_ms": latency, "budget_ms": st.budget_ms,
-                "ok": latency <= st.budget_ms, "rerouted": st.rerouted,
-                "local": st.local, "t_done_ms": t_done})
+            self._records.append(rec)
             if len(self._records) > MAX_RECORDS:   # long-running: bounded
                 drop = len(self._records) - MAX_RECORDS
                 del self._records[:drop]
                 self._records_base += drop
             self._n_done += 1
             self._done_cond.notify_all()
+
+    def _complete(self, rid: int, st: _InFlight, y) -> None:
+        st.req.result = np.asarray(y)
+        self._inflight.pop(rid, None)
+        if self.registry is not None:
+            self.registry.pop(rid, None)
+        t_done = self.now_ms()
+        latency = t_done - st.t_arrive_ms
+        self._push_record({
+            "rid": rid, "client": st.req.client, "p": st.p,
+            "latency_ms": latency, "budget_ms": st.budget_ms,
+            "ok": latency <= st.budget_ms, "shed": False,
+            "rerouted": st.rerouted, "local": st.local,
+            "t_done_ms": t_done})
         if self.controller is not None:
             with self._ctl_lock:
                 self.controller.observe_done(t_done, st.req.client, latency,
@@ -508,6 +767,8 @@ class GraftServer:
             except Exception:
                 traceback.print_exc()
                 self._inflight.pop(it.rid, None)
+                if self.registry is not None:
+                    self.registry.pop(it.rid, None)
                 with self._done_cond:
                     self._n_done += 1
                     self._done_cond.notify_all()
@@ -546,17 +807,19 @@ class GraftServer:
     def tick(self, *, force: bool = False):
         """One control tick: feed live uplink samples to the controller,
         maybe replan, apply the diff, revisit parked requests. Returns
-        the new plan when one was applied."""
-        now = self.now_ms()
-        samples = self.executor.drain_uplink()
+        the new plan when one was applied. With ``external_control`` the
+        fleet owns the controller; this tick only re-routes and expires
+        parked requests."""
         plan = None
-        if self.controller is not None:
+        if self.controller is not None and not self.external_control:
+            now = self.now_ms()
+            samples = self.executor.drain_uplink()
             with self._ctl_lock:
                 self.controller.ingest_uplink(now, samples)
                 plan = self.controller.control(now, force=force)
-        if plan is not None:
-            self.apply(plan)
-            self.stats["timer_replans"] += 1
+            if plan is not None:
+                self.apply(plan)
+                self.stats["timer_replans"] += 1
         self._route_waiting()
         self._expire_waiting(self.now_ms())
         return plan
@@ -569,25 +832,39 @@ class GraftServer:
         queued on a removed pool."""
         with self._rw.write():
             diff = self.executor.apply_plan(new_plan)
-            leftovers = []
-            for a in diff.by_kind("remove"):
-                drv = self._drivers.pop(a.key, None)
-                if drv is None:
-                    continue
-                drv.stop_flag = True
-                leftovers.extend(drv.batcher.drain())
-                drv.batcher.stop()
-            for key, spec in self.executor.pool_specs().items():
-                drv = self._drivers.get(key)
-                if drv is None:
-                    drv = PoolDriver(self, key, spec)
-                    self._drivers[key] = drv
-                    drv.start()
-                else:
-                    drv.batcher.set_max_batch(max(spec.batch, 1))
-                    drv.model_est_ms = self._model_stage_cost(spec)
-            self._routes = self.executor.route_table()
-            self.stats["replans_applied"] += 1
+            leftovers = self._sync_to_executor(diff)
+        self._finish_apply(leftovers)
+        return diff
+
+    def _sync_to_executor(self, diff):
+        """Re-align drivers/routes with the executor's (already
+        transitioned) deployment; caller holds the write lock. Returns
+        the batch items drained off removed pools. Split from
+        :meth:`apply` so a GraftFleet can apply ONE executor transition
+        under every front-end's writer lock."""
+        leftovers = []
+        for a in diff.by_kind("remove"):
+            drv = self._drivers.pop(a.key, None)
+            if drv is None:
+                continue
+            drv.stop_flag = True
+            leftovers.extend(drv.batcher.drain())
+            drv.batcher.stop()
+        self._drop_local_handles([a.key for a in diff.by_kind("remove")])
+        for key, spec in self.executor.pool_specs().items():
+            drv = self._drivers.get(key)
+            if drv is None:
+                drv = PoolDriver(self, key, spec)
+                self._drivers[key] = drv
+                drv.start()
+            else:
+                drv.batcher.set_max_batch(max(spec.batch, 1))
+                drv.model_est_ms = self._model_stage_cost(spec)
+        self._routes = self.executor.route_table()
+        self.stats["replans_applied"] += 1
+        return leftovers
+
+    def _finish_apply(self, leftovers):
         # re-home leftovers OUTSIDE the writer section: a local finish
         # can mean a jit compile + full forward pass, which must stall
         # only this thread, not every pool driver
@@ -596,7 +873,6 @@ class GraftServer:
                 for item in leftovers:
                     self._reroute_item(item)
         self._route_waiting()
-        return diff
 
     def _route_waiting(self) -> None:
         with self._wait_lock:
@@ -654,45 +930,32 @@ class GraftServer:
         with self._done_cond:
             return self._records_base + len(self._records)
 
-    def report(self, since: int = 0) -> dict:
+    def records(self, since: int = 0) -> list:
+        """Raw completion-log slice (fleet reports merge these)."""
         with self._done_cond:
             start = max(since - self._records_base, 0)
-            recs = list(self._records[start:])
-        by_client: dict[str, list] = {}
-        for r in recs:
-            by_client.setdefault(r["client"], []).append(r)
-        clients = {}
-        for c, rs in sorted(by_client.items()):
-            lat = np.array([r["latency_ms"] for r in rs])
-            clients[c] = {
-                "n": len(rs),
-                "attainment": float(np.mean([r["ok"] for r in rs])),
-                "p50_ms": float(np.percentile(lat, 50)),
-                "p99_ms": float(np.percentile(lat, 99)),
-                "budget_ms": float(np.median([r["budget_ms"] for r in rs])),
-            }
-        lat = np.array([r["latency_ms"] for r in recs]) if recs \
-            else np.array([0.0])
+            return list(self._records[start:])
+
+    def report(self, since: int = 0) -> dict:
+        recs = self.records(since)
+        out = summarize_records(recs)
         # snapshot: a timer replan may mutate the driver table mid-report
         drivers = list(self._drivers.values())
         batch_sizes = [s for d in drivers
                        for s in list(d.batcher.stats.batch_sizes)]
-        return {
-            "served": len(recs),
-            "attainment": float(np.mean([r["ok"] for r in recs]))
-            if recs else 0.0,
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
-            "clients": clients,
+        out.update({
             "replans": self.stats["replans_applied"],
             "timer_replans": self.stats["timer_replans"],
             "rerouted": self.stats["rerouted"],
             "local_finishes": self.stats["local_finishes"],
             "waited": self.stats["waited"],
+            "shed_ingest": self.stats["shed_ingest"],
+            "shed_flush": self.stats["shed_flush"],
             "mean_batch": float(np.mean(batch_sizes)) if batch_sizes
             else 0.0,
             "n_stage_pools": len(drivers),
-        }
+        })
+        return out
 
     # test/bench introspection -------------------------------------------
     def driver(self, key: tuple) -> PoolDriver:
@@ -701,6 +964,43 @@ class GraftServer:
     @property
     def n_inflight(self) -> int:
         return len(self._inflight)
+
+
+def summarize_records(recs: list) -> dict:
+    """Completion-log records -> the SLO report. Latency percentiles and
+    attainment are computed over ADMITTED (non-shed) requests — the shed
+    policy's whole point is that the requests it serves stay inside the
+    SLO; ``offered``/``shed`` keep the dropped load visible."""
+    admitted = [r for r in recs if not r.get("shed")]
+    by_client: dict[str, list] = {}
+    for r in recs:
+        by_client.setdefault(r["client"], []).append(r)
+    clients = {}
+    for c, rs in sorted(by_client.items()):
+        adm = [r for r in rs if not r.get("shed")]
+        lat = np.array([r["latency_ms"] for r in adm]) if adm \
+            else np.array([0.0])
+        clients[c] = {
+            "n": len(adm),
+            "shed": len(rs) - len(adm),
+            "attainment": float(np.mean([r["ok"] for r in adm]))
+            if adm else 0.0,
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "budget_ms": float(np.median([r["budget_ms"] for r in rs])),
+        }
+    lat = np.array([r["latency_ms"] for r in admitted]) if admitted \
+        else np.array([0.0])
+    return {
+        "served": len(admitted),
+        "offered": len(recs),
+        "shed": len(recs) - len(admitted),
+        "attainment": float(np.mean([r["ok"] for r in admitted]))
+        if admitted else 0.0,
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "clients": clients,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -714,6 +1014,8 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
                    shaped: bool = False, control_period_ms: float = 250.0,
                    warmup: bool = True, check_numerics: bool = True,
                    max_check: int = 64, seq_len: int = 16,
+                   frontends: int = 1,
+                   shed_budget_frac: Optional[float] = None,
                    log=None) -> dict:
     """Run the full event-driven runtime wall-clock for ``seconds``.
 
@@ -722,6 +1024,10 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
     the timer-driven control loop must replan mid-traffic. Returns the
     server report plus ``numerics_ok`` (every served result checked
     against the monolithic forward pass).
+
+    ``frontends > 1`` (or a ``shed_budget_frac``) runs the fleet
+    topology instead: several front-ends over the one executor, clients
+    rendezvous-routed, the fleet owning the control tick.
     """
     from repro.core import GraftPlanner
     from repro.models import n_fragment_units
@@ -758,11 +1064,19 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
     ex = cls(plan0, params, cfg, transport=tp)
 
     submitted: list = []                         # [(req, p)] for numerics
-    server = GraftServer(ex, controller=ctl, book=book)
+    if frontends > 1 or shed_budget_frac is not None:
+        from repro.serving.fleet import GraftFleet
+        policy = ShedPolicy(budget_frac=shed_budget_frac) \
+            if shed_budget_frac is not None else None
+        server = GraftFleet(ex, n_frontends=max(frontends, 1),
+                            controller=ctl, book=book, shed_policy=policy)
+    else:
+        server = GraftServer(ex, controller=ctl, book=book)
     server.start()
     say(f"[serve-loop] {cfg.name}: {len(frags)} clients over {mode} "
         f"transport, {seconds:.1f}s wall-clock, "
-        f"{ex.n_stage_pools} stage pools")
+        f"{ex.n_stage_pools} stage pools, "
+        f"{max(frontends, 1)} front-end(s)")
     try:
         if warmup:                               # pay the jit compiles
             rng = np.random.RandomState(seed)
@@ -772,8 +1086,10 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
                 server.submit(req, f.p, f.t)
             if not server.join(timeout=600.0):
                 raise RuntimeError("warmup requests never completed")
+            m = server.mark()
+            n_warm = sum(m.values()) if isinstance(m, dict) else m
             say(f"[serve-loop] warmup done "
-                f"({server.mark()} requests, compiles paid)")
+                f"({n_warm} requests, compiles paid)")
         mark = server.mark()
         t_start = time.monotonic()
         stop_at = t_start + seconds

@@ -56,11 +56,15 @@ __all__ = [
     "FrameError", "TruncatedFrameError", "TransferStats", "error_reply",
     "encode_frame", "decode_frame", "read_frame", "write_frame",
     "Channel", "Transport", "InProcessTransport", "SocketTransport",
-    "ShapedTransport", "LinkShape",
+    "ShapedTransport", "LinkShape", "ZEROCOPY_MIN_BYTES",
 ]
 
 _LEN = struct.Struct(">Q")
 DEFAULT_MAX_FRAME = 1 << 30          # 1 GiB: far above any smoke activation
+ZEROCOPY_MIN_BYTES = 1 << 16         # arrays >= 64 KiB decode as views into
+                                     # the frame buffer (no per-array copy);
+                                     # smaller ones copy so they stay
+                                     # writable and don't pin big buffers
 
 
 class FrameError(ValueError):
@@ -99,7 +103,14 @@ def _pack_default(obj):
 def _unpack_hook(obj):
     if obj.get("__nd__") == 1:
         arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
-        return arr.reshape(obj["shape"]).copy()   # writable, owns its data
+        arr = arr.reshape(obj["shape"])
+        if arr.nbytes < ZEROCOPY_MIN_BYTES:
+            return arr.copy()                     # writable, owns its data
+        # large activation frames: hand out the (read-only) view into the
+        # received buffer — the data path only ever re-serializes or
+        # jnp.asarray()s payloads, so the copy the old path paid per hop
+        # was pure overhead exactly where frames are biggest
+        return arr
     return obj
 
 
@@ -127,20 +138,31 @@ def decode_frame(buf: bytes, *, max_frame_bytes: int = DEFAULT_MAX_FRAME
     return read_frame(io.BytesIO(buf), max_frame_bytes=max_frame_bytes)
 
 
-def _read_exact(readable, n: int) -> bytes:
-    """Read exactly n bytes from a socket or file-like; raise on EOF."""
-    chunks, got = [], 0
+def _read_exact(readable, n: int) -> bytearray:
+    """Read exactly n bytes from a socket or file-like; raise on EOF.
+
+    Reads straight into ONE preallocated buffer through a memoryview
+    (``recv_into``/``readinto``) instead of accumulating per-recv bytes
+    chunks and joining them — for a large activation frame the old path
+    copied every byte twice (chunk + join) before decoding even started.
+    """
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
     while got < n:
-        if hasattr(readable, "recv"):
-            c = readable.recv(min(n - got, 1 << 20))
+        if hasattr(readable, "recv_into"):
+            k = readable.recv_into(view[got:n])
+        elif hasattr(readable, "readinto"):
+            k = readable.readinto(view[got:n])
         else:
-            c = readable.read(n - got)
-        if not c:
+            chunk = readable.read(n - got)
+            k = len(chunk)
+            view[got:got + k] = chunk
+        if not k:
             raise TruncatedFrameError(
                 f"stream ended after {got}/{n} bytes")
-        chunks.append(c)
-        got += len(c)
-    return b"".join(chunks)
+        got += k
+    return buf
 
 
 def read_frame(readable, *, max_frame_bytes: int = DEFAULT_MAX_FRAME

@@ -1,0 +1,537 @@
+"""GraftFleet: consistent routing, cross-front-end result hand-off,
+drain-on-remove, the admission-control/shed policy (budget, boundary,
+replan survival), pad-to-bucket compile hygiene, and migration-aware
+placement keeping unchanged instances on their chips."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.placement import (MigrationAction, migrate, place_pools)
+from repro.core.plandiff import PoolSpec, diff_plans
+from repro.serving.batcher import ShedPolicy, bucket_size, hopeless
+from repro.serving.fleet import rendezvous_route, rendezvous_table
+
+
+# --------------------------------------------------------- routing (pure)
+
+def test_rendezvous_routing_is_deterministic_and_minimal_movement():
+    clients = [f"client-{i}" for i in range(64)]
+    fes = ["fe0", "fe1", "fe2"]
+    t1 = rendezvous_table(clients, fes)
+    assert t1 == rendezvous_table(clients, list(reversed(fes)))
+    # every front-end wins some clients at this population
+    assert set(t1.values()) == set(fes)
+    # ADD: only clients whose new winner is the newcomer move
+    t2 = rendezvous_table(clients, fes + ["fe3"])
+    for c in clients:
+        assert t2[c] == t1[c] or t2[c] == "fe3"
+    assert any(t2[c] == "fe3" for c in clients)
+    # REMOVE: only the removed front-end's clients move
+    t3 = rendezvous_table(clients, ["fe0", "fe1"])
+    for c in clients:
+        if t1[c] != "fe2":
+            assert t3[c] == t1[c]
+        else:
+            assert t3[c] in ("fe0", "fe1")
+    with pytest.raises(ValueError):
+        rendezvous_route("c", [])
+
+
+# ------------------------------------------------------ shed policy (pure)
+
+def test_hopeless_boundary_is_strict():
+    # exactly on the slack boundary => still feasible => must admit
+    assert not hopeless(now_ms=10.0, deadline_ms=15.0, est_remaining_ms=5.0)
+    assert hopeless(now_ms=10.0, deadline_ms=15.0, est_remaining_ms=5.0001)
+    assert not hopeless(now_ms=0.0, deadline_ms=0.0, est_remaining_ms=0.0)
+
+
+def test_shed_policy_window_counts_requests_and_respects_budget():
+    pol = ShedPolicy(budget_frac=0.5, window=8)
+    # a client with admitted history may shed up to the budget...
+    pol.note_admitted("c")
+    assert pol.should_shed("c") is True          # [F] -> 1/2 <= 0.5
+    # ...but the NEXT hopeless request busts the projected budget: admit
+    # (the forced admit records its own window entry)
+    assert pol.should_shed("c") is False         # [F,T] -> 2/3 > 0.5
+    assert pol.stats["budget_admits"] == 1
+    assert pol.should_shed("c") is True          # [F,T,F] -> 2/4 <= 0.5
+    # windowed fraction never exceeds the budget
+    assert pol.shed_frac("c") <= 0.5
+    # budgets are per client: a client with NO admitted history cannot
+    # be shed under a partial budget (1/1 > 0.5) — no starving from birth
+    assert pol.should_shed("other") is False
+    # ...while a total budget (1.0) may always shed
+    total = ShedPolicy(budget_frac=1.0, window=4)
+    assert all(total.should_shed("x") for _ in range(6))
+
+
+def test_shed_policy_budget_exhausted_must_admit():
+    pol = ShedPolicy(budget_frac=0.25, window=8)
+    # steady state: every request hopeless — forced admits self-record
+    seq = [pol.should_shed("c") for _ in range(16)]
+    admitted = seq.count(False)
+    assert admitted >= 11            # ~75% of hopeless load still admitted
+    assert seq.count(True) >= 1      # the budget IS used
+    assert pol.shed_frac("c") <= 0.25 + 1 / 8    # within one window slot
+    assert pol.stats["shed"] + pol.stats["admitted"] == 16
+
+
+# -------------------------------------------------------- buckets (pure)
+
+def test_bucket_size_pads_to_powers_of_two_capped():
+    assert bucket_size(1, 8) == 1
+    assert bucket_size(3, 8) == 4
+    assert bucket_size(5, 8) == 8
+    assert bucket_size(8, 8) == 8
+    assert bucket_size(5, 6) == 6          # the cap is always a bucket
+    assert bucket_size(2, 1) == 2          # never pad past/below reality
+    assert bucket_size(0, 4) == 1
+    # the whole point: bounded shape count for any traffic mix
+    assert len({bucket_size(n, 16) for n in range(1, 17)}) == 5
+
+
+# ------------------------------------------------- placement migration
+
+def _pools(*specs):
+    return {s.key: s for s in specs}
+
+
+def test_migrate_keeps_unchanged_instances_on_their_chips():
+    old = _pools(PoolSpec(("m", 0, 2), 50, 4, 2),
+                 PoolSpec(("m", 2, 4), 50, 2, 1))
+    pl = place_pools(old)
+    before = dict(pl.assignments)
+    # resize one pool up, add a brand-new pool
+    new = _pools(PoolSpec(("m", 0, 2), 50, 4, 4),
+                 PoolSpec(("m", 2, 4), 50, 2, 1),
+                 PoolSpec(("n", 0, 4), 60, 1, 1))
+    pl2, actions = migrate(pl, diff_plans(old, new))
+    for inst, chip in before.items():
+        assert pl2.assignments[inst] == chip, f"{inst} moved"
+    kinds = [a.kind for a in actions]
+    assert kinds.count("spawn") == 3 and "retire" not in kinds \
+        and "move" not in kinds
+    # spawns fill existing free capacity before opening chips
+    assert {a for a in pl2.assignments.values()} >= set(before.values())
+    # chip accounting stays within capacity
+    for chip in pl2.chips:
+        assert chip.used <= 100
+
+
+def test_migrate_retires_and_moves_only_what_changed():
+    old = _pools(PoolSpec(("m", 0, 2), 60, 4, 2),
+                 PoolSpec(("m", 2, 4), 40, 2, 2))
+    pl = place_pools(old)
+    # shrink m[0:2) to one instance; grow m[2:4)'s share so an instance
+    # no longer fits beside a 60 and must MOVE
+    new = _pools(PoolSpec(("m", 0, 2), 60, 4, 1),
+                 PoolSpec(("m", 2, 4), 70, 2, 2))
+    pl2, actions = migrate(pl, diff_plans(old, new))
+    kinds = {}
+    for a in actions:
+        kinds.setdefault(a.kind, []).append(a)
+    assert [a.instance for a in kinds["retire"]] == [1]   # highest ordinal
+    assert all(isinstance(a, MigrationAction) for a in actions)
+    # the surviving m[0:2) instance did not budge
+    assert pl2.assignments[(("m", 0, 2), 0)] == \
+        pl.assignments[(("m", 0, 2), 0)]
+    for a in kinds.get("move", []):
+        assert a.from_chip is not None and a.from_chip != a.chip
+    for chip in pl2.chips:
+        assert chip.used <= 100
+    # remove everything -> empty placement, all retires
+    pl3, acts3 = migrate(pl2, diff_plans(new, {}))
+    assert pl3.assignments == {} and \
+        all(a.kind == "retire" for a in acts3)
+
+
+# ----------------------------------------------------- jax-backed tests
+
+@pytest.fixture(scope="module")
+def smoke():
+    from repro.serving.smoke import smoke_setup
+    return smoke_setup("qwen3-1.7b", seed=0)
+
+
+def _requests(cfg, frags, rng, n_per_client=2):
+    from repro.serving import ServeRequest
+    out = []
+    for _ in range(n_per_client):
+        for f in frags:
+            out.append((ServeRequest(client=f.client, tokens=rng.randint(
+                0, cfg.vocab_size, 16).astype(np.int32)), f.p))
+    return out
+
+
+def _spread_frags(cfg, fleet_names, n_per_fe=2, budget=80.0):
+    """Fragments whose client names rendezvous-route across ALL the given
+    front-ends (so multi-front-end paths are genuinely exercised)."""
+    from repro.core import Fragment
+    got = {fe: 0 for fe in fleet_names}
+    frags, i = [], 0
+    while min(got.values()) < n_per_fe and i < 10_000:
+        name = f"cl{i}"
+        fe = rendezvous_route(name, fleet_names)
+        if got[fe] < n_per_fe:
+            got[fe] += 1
+            frags.append(Fragment(cfg.name, p=len(frags) % 2, t=budget,
+                                  q=30.0, client=name))
+        i += 1
+    return frags
+
+
+def test_fleet_serves_across_frontends_exactly(smoke):
+    """Clients spread over two front-ends of ONE executor: everything
+    completes, numerics match the monolithic pass, and the fleet report
+    accounts for every request exactly once."""
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftFleet
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = _spread_frags(cfg, ["fe0", "fe1"], n_per_fe=2)
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    fleet = GraftFleet(ex, n_frontends=2, book=book).start()
+    try:
+        table = fleet.routing_table([f.client for f in frags])
+        assert set(table.values()) == {"fe0", "fe1"}
+        reqs = _requests(cfg, frags, np.random.RandomState(0),
+                         n_per_client=3)
+        for req, p in reqs:
+            fleet.submit(req, p, 80.0)
+        assert fleet.join(timeout=300.0), "fleet never drained"
+        check_against_monolithic(cfg, params, reqs)
+        rep = fleet.report()
+        assert rep["served"] == len(reqs) and rep["shed"] == 0
+        assert sum(fe["served"] for fe in rep["frontends"].values()) \
+            == len(reqs)
+        assert all(fe["ingest_threads"] >= 1
+                   for fe in rep["frontends"].values())
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_fleet_cross_frontend_result_handoff(smoke):
+    """A shared pool's flush surfacing a request owned by ANOTHER
+    front-end must be handed to its owner and complete exactly (the
+    registry + dispatch path, driven deterministically)."""
+    from repro.core import GraftPlanner
+    from repro.models import n_fragment_units
+    from repro.serving import GraftExecutor, GraftFleet, ServeRequest
+    cfg, book, params = smoke
+    L = n_fragment_units(cfg)
+    frags = _spread_frags(cfg, ["fe0", "fe1"], n_per_fe=1)
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    fleet = GraftFleet(ex, n_frontends=2, book=book).start()
+    try:
+        f = frags[0]
+        owner = fleet.route(f.client)
+        key = ex.chain_keys(f.client)[0]
+        owner.driver(key).batcher.pause()           # pin it in the batcher
+        rng = np.random.RandomState(3)
+        req = ServeRequest(client=f.client, tokens=rng.randint(
+            0, cfg.vocab_size, 16).astype(np.int32))
+        rid = fleet.submit(req, f.p, 80.0)
+        deadline = time.monotonic() + 60.0
+        while len(owner.driver(key).batcher) < 1:
+            assert time.monotonic() < deadline, "request never queued"
+            time.sleep(0.01)
+        assert fleet.registry[rid] is owner
+        # simulate the OTHER front-end's flush producing this result:
+        # drain the item and push its final-stage output through dispatch
+        [item] = owner.driver(key).batcher.drain()
+        y = np.asarray(ex.fragment_fn(key[1], L)(
+            params, inputs=np.asarray(item.payload)[None],
+            extras=None)[0])
+        fleet._dispatch([(rid, y)])
+        assert fleet.join(timeout=60.0)
+        assert req.result is not None
+        assert rid not in fleet.registry            # ownership released
+        from repro.serving.smoke import check_against_monolithic
+        check_against_monolithic(cfg, params, [(req, f.p)])
+        assert fleet.stats["cross_dispatched"] == 1
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_fleet_remove_frontend_drains_then_reroutes(smoke):
+    """Scale-in: the removed front-end's in-flight requests drain on its
+    own ingest; its clients' NEXT submits rendezvous to a survivor."""
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftFleet
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = _spread_frags(cfg, ["fe0", "fe1", "fe2"], n_per_fe=1)
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    fleet = GraftFleet(ex, n_frontends=3, book=book).start()
+    try:
+        table = fleet.routing_table([f.client for f in frags])
+        victim_fe = table[frags[0].client]
+        reqs = _requests(cfg, frags, np.random.RandomState(7))
+        for req, p in reqs:
+            fleet.submit(req, p, 80.0)
+        assert fleet.remove_frontend(victim_fe, drain=True, timeout=300.0)
+        assert victim_fe not in fleet.frontends
+        # the victim drained ITS in-flight before teardown; survivors
+        # finish theirs on the normal path
+        assert fleet.join(timeout=300.0)
+        for req, _p in reqs:
+            assert req.result is not None, "in-flight lost on scale-in"
+        check_against_monolithic(cfg, params, reqs)
+        # the victim's clients re-route consistently to a survivor...
+        moved = fleet.route(frags[0].client).name
+        assert moved in fleet.frontends and moved != victim_fe
+        # ...and unaffected clients keep their front-end (minimal movement)
+        for f in frags:
+            if table[f.client] != victim_fe:
+                assert fleet.route(f.client).name == table[f.client]
+        reqs2 = _requests(cfg, [frags[0]], np.random.RandomState(8))
+        for req, p in reqs2:
+            fleet.submit(req, p, 80.0)
+        assert fleet.join(timeout=300.0)
+        check_against_monolithic(cfg, params, reqs2)
+        with pytest.raises(ValueError):      # never drop to zero ingest
+            for name in list(fleet.frontends):
+                fleet.remove_frontend(name)
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+# ------------------------------------------------------------- shedding
+
+def _server(smoke, frags, **kw):
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftServer
+    cfg, book, params = smoke
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    return ex, GraftServer(ex, book=book, **kw).start()
+
+
+def test_server_sheds_hopeless_requests_at_ingest(smoke):
+    """budget << any feasible estimate => provably blown at ingest; with
+    an unlimited shed budget every such request is dropped at the door,
+    none reach a pool, and join() still completes."""
+    from repro.core import Fragment
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="s0")]
+    pol = ShedPolicy(budget_frac=1.0, window=16)
+    ex, server = _server(smoke, frags, shed_policy=pol)
+    try:
+        reqs = _requests(cfg, frags, np.random.RandomState(0),
+                         n_per_client=4)
+        for req, p in reqs:
+            server.submit(req, p, 1e-3)           # microsecond budget
+        assert server.join(timeout=120.0), "sheds must count as done"
+        rep = server.report()
+        assert rep["shed"] == len(reqs) and rep["served"] == 0
+        assert rep["shed_ingest"] == len(reqs) and rep["shed_flush"] == 0
+        assert rep["offered"] == len(reqs)
+        assert all(r.result is None for r, _ in reqs)
+        assert server.stats["batches"] == 0       # nothing hit a pool
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_server_shed_budget_exhaustion_admits_and_serves(smoke):
+    """With a finite shed budget, a client whose every request turns
+    hopeless still gets a large share ADMITTED and actually served —
+    shedding degrades, never starves. (A feasible round first builds the
+    client's served history; the hopeless burst then sheds up to the
+    budget and budget-admits the rest.)"""
+    from repro.core import Fragment
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="s1")]
+    pol = ShedPolicy(budget_frac=0.5, window=8)
+    ex, server = _server(smoke, frags, shed_policy=pol)
+    try:
+        # roomy budget: the first flush pays the jit compile, which must
+        # not make tail requests of the warm round genuinely hopeless
+        feasible = _requests(cfg, frags, np.random.RandomState(1),
+                             n_per_client=4)
+        for req, p in feasible:
+            server.submit(req, p, 5000.0)
+        assert server.join(timeout=300.0)
+        assert server.report()["shed"] == 0      # nothing feasible shed
+        hopeless_reqs = _requests(cfg, frags, np.random.RandomState(2),
+                                  n_per_client=8)
+        for req, p in hopeless_reqs:
+            server.submit(req, p, 1e-3)
+        assert server.join(timeout=300.0)
+        rep = server.report()
+        n = len(feasible) + len(hopeless_reqs)
+        assert rep["shed"] >= 1, "budget never used"
+        assert rep["served"] >= n // 2, "must-admit starved"
+        assert rep["served"] + rep["shed"] == n
+        assert pol.stats["budget_admits"] >= 1
+        assert pol.shed_frac("s1") <= 0.5 + 1 / 8
+        served = [r for r, _ in feasible + hopeless_reqs
+                  if r.result is not None]
+        assert len(served) == rep["served"]
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_shed_accounting_survives_mid_traffic_replan(smoke):
+    """The policy's per-client window and totals live OUTSIDE the pool
+    drivers, so a replan that rebuilds every driver must not reset
+    them."""
+    import dataclasses as dc
+    from repro.core import Fragment, GraftPlanner
+    cfg, book, params = smoke
+    planner = GraftPlanner(book)
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="s2"),
+             Fragment(cfg.name, 1, 60.0, 30.0, client="s3")]
+    pol = ShedPolicy(budget_frac=1.0, window=32)
+    ex, server = _server(smoke, frags, shed_policy=pol)
+    try:
+        for req, p in _requests(cfg, [frags[0]], np.random.RandomState(2)):
+            server.submit(req, p, 1e-3)
+        assert server.join(timeout=120.0)
+        shed_before = server.stats["shed_ingest"]
+        frac_before = pol.shed_frac("s2")
+        assert shed_before == 2 and frac_before > 0
+        # replan: rates double, drivers are torn down / rebuilt
+        server.apply(planner.plan([dc.replace(f, q=60.0) for f in frags]))
+        for req, p in _requests(cfg, [frags[0]], np.random.RandomState(3)):
+            server.submit(req, p, 1e-3)
+        assert server.join(timeout=120.0)
+        assert server.stats["shed_ingest"] == shed_before + 2
+        assert pol.shed_frac("s2") >= frac_before    # window kept growing
+        assert pol.stats["shed"] == 4
+        assert server.report()["shed"] == 4
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_fleet_shed_policy_is_fleet_global(smoke):
+    """One ShedPolicy across front-ends: budgets follow the client, not
+    the front-end, and the fleet report splits admitted/shed."""
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftFleet
+    cfg, book, params = smoke
+    frags = _spread_frags(cfg, ["fe0", "fe1"], n_per_fe=1)
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    pol = ShedPolicy(budget_frac=1.0, window=16)
+    fleet = GraftFleet(ex, n_frontends=2, book=book,
+                       shed_policy=pol).start()
+    try:
+        reqs = _requests(cfg, frags, np.random.RandomState(4))
+        for req, p in reqs:
+            fleet.submit(req, p, 1e-3)
+        assert fleet.join(timeout=120.0)
+        rep = fleet.report()
+        assert rep["shed"] == len(reqs) and rep["served"] == 0
+        assert sum(fe["shed"] for fe in rep["frontends"].values()) \
+            == len(reqs)
+        for f in frags:
+            assert pol.shed_frac(f.client) > 0
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+# ----------------------------------------------- pad-to-bucket compiles
+
+def test_pad_to_bucket_bounds_compile_count(smoke):
+    """Varying partial-batch sizes hit padded power-of-two shapes, so the
+    pool's program cache sees O(log batch) shapes; the unpadded pool
+    re-traces per distinct size."""
+    import jax.numpy as jnp
+    from repro.core.plandiff import PoolSpec
+    from repro.serving.executor import FragmentInstance, ServeRequest
+    cfg, book, params = smoke
+    spec = PoolSpec(key=(cfg.name, 0, 2), share=50, batch=4, n_instances=1)
+    tok = np.zeros(16, np.int32)
+
+    def feed(inst, sizes):
+        for n in sizes:
+            for _ in range(n):
+                inst.submit(ServeRequest(client="c", tokens=None),
+                            jnp.asarray(tok))
+            inst.flush()
+
+    padded = FragmentInstance(params, cfg, spec)          # default: on
+    feed(padded, [3, 4, 2, 3, 1])
+    assert padded.n_compiles == 3                          # {4, 2, 1}
+    exact = FragmentInstance(params, cfg, spec, pad_buckets=False)
+    feed(exact, [3, 4, 2, 3, 1])
+    assert exact.n_compiles == 4                           # {3, 4, 2, 1}
+
+
+def test_pad_to_bucket_survives_replan_retarget(smoke):
+    """A rebatch retarget changes the bucket cap without invalidating
+    shapes already compiled (the regression the satellite gates): after
+    max_batch drops 4 -> 2, previously-seen bucket shapes stay cached."""
+    import jax.numpy as jnp
+    from repro.core.plandiff import PoolSpec
+    from repro.serving.executor import FragmentInstance, ServeRequest
+    cfg, book, params = smoke
+    spec = PoolSpec(key=(cfg.name, 0, 2), share=50, batch=4, n_instances=1)
+    inst = FragmentInstance(params, cfg, spec)
+    tok = np.zeros(16, np.int32)
+
+    def feed(sizes):
+        for n in sizes:
+            for _ in range(n):
+                inst.submit(ServeRequest(client="c", tokens=None),
+                            jnp.asarray(tok))
+            inst.flush()
+
+    feed([3, 2])                                   # shapes {4, 2}
+    assert inst.n_compiles == 2
+    inst.retarget(dataclasses.replace(spec, batch=2))
+    feed([2, 1, 2])                                # {2} cached, {1} new
+    assert inst.n_compiles == 3
+
+
+# --------------------------------------------- executor chip stability
+
+def test_executor_replan_keeps_unchanged_instances_on_chips(smoke):
+    """Acceptance: a resize/add replan emits migration actions and every
+    pool untouched by the diff keeps its chip ids across apply."""
+    from repro.core import Fragment, GraftPlanner
+    from repro.serving import GraftExecutor
+    from repro.serving.smoke import check_against_monolithic, smoke_requests
+    cfg, book, params = smoke
+    planner = GraftPlanner(book)
+    frags1 = [Fragment(cfg.name, 0, 60.0, 30.0, client="c0"),
+              Fragment(cfg.name, 1, 70.0, 30.0, client="c1")]
+    with GraftExecutor(planner.plan(frags1), params, cfg) as ex:
+        chips1 = {k: ex.chips_of(k) for k in ex.pool_specs()}
+        assert all(chips1.values())           # every instance is placed
+        stats1 = {k: s["chips"] for k, s in ex.pool_stats().items()}
+        assert stats1 == chips1               # binding reached the pools
+        # a new client arrives on a new split -> add/resize, never re-pack
+        frags2 = frags1 + [Fragment(cfg.name, 1, 50.0, 30.0, client="c2")]
+        diff = ex.apply_plan(planner.plan(frags2))
+        assert diff.n_kept >= 1
+        chips2 = {k: ex.chips_of(k) for k in ex.pool_specs()}
+        for a in diff.by_kind("keep"):
+            assert chips2[a.key] == chips1[a.key], \
+                f"kept pool {a.key} hopped chips"
+        for a in diff.by_kind("resize") + diff.by_kind("rebatch"):
+            n = min(len(chips1[a.key]), len(chips2[a.key]))
+            assert chips2[a.key][:n] == chips1[a.key][:n], \
+                f"surviving instances of {a.key} re-packed"
+        if diff.by_kind("add") or any(
+                a.n_delta > 0 for a in diff.by_kind("resize")):
+            assert any(m.kind == "spawn" for m in ex.last_migrations)
+        assert ex.stats["instances_spawned"] == sum(
+            1 for m in ex.last_migrations if m.kind == "spawn")
+        # the transitioned deployment still serves exactly
+        reqs = smoke_requests(cfg, frags2, seed=9)
+        ex.serve(reqs)
+        check_against_monolithic(cfg, params, reqs)

@@ -39,6 +39,10 @@ def test_remote_executor_equivalence_across_replan(setup):
         check_against_monolithic(cfg, params, reqs)
         compiles1 = {k: s["n_compiles"] for k, s in ex.pool_stats().items()}
         created1 = ex.stats["pools_created"]
+        # every worker knows its placement (chip binding crossed the wire)
+        chips1 = {k: s["chips"] for k, s in ex.pool_stats().items()}
+        for key, chips in chips1.items():
+            assert chips == ex.chips_of(key) and len(chips) >= 1
 
         # conditions shift: c3 arrives on the deeper split point
         frags2 = frags1 + [Fragment(cfg.name, 1, 50.0, 30.0, client="c3")]
@@ -53,6 +57,17 @@ def test_remote_executor_equivalence_across_replan(setup):
         assert survivors
         for key in survivors:
             assert pids2[key] == pids1[key], f"worker for {key} restarted"
+
+        # ... and migration-aware placement kept them on their chips
+        # (strictly-kept pools exactly; resized ones keep old ordinals)
+        chips2 = {k: s["chips"] for k, s in ex.pool_stats().items()}
+        for a in diff.by_kind("keep"):
+            if a.key in survivors:
+                assert chips2[a.key] == chips1[a.key], \
+                    f"kept worker {a.key} hopped chips across apply_plan"
+        for key in survivors:
+            n = min(len(chips1[key]), len(chips2[key]))
+            assert chips2[key][:n] == chips1[key][:n]
 
         # serving the SAME request shapes after the replan recompiles
         # nothing on strictly-kept pools (their batch spec is unchanged)

@@ -133,6 +133,35 @@ def test_server_pipelined_numerics_match_monolithic(smoke):
         ex.close()
 
 
+def test_server_parallel_ingest_threads(smoke):
+    """Mobile parts no longer serialize on one ingest thread: the server
+    spawns min(4, n_clients) by default (configurable), and concurrent
+    multi-client submission stays exact."""
+    from repro.core import Fragment
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, i % 2, 80.0, 30.0, client=f"i{i}")
+             for i in range(6)]
+    ex, server = _server(smoke, frags)
+    try:
+        assert server.n_ingest_threads == 4        # min(4, 6 clients)
+        reqs = _submit_all(server, cfg, frags, np.random.RandomState(6),
+                           n_per_client=3)
+        assert server.join(timeout=300.0)
+        check_against_monolithic(cfg, params, reqs)
+        assert server.report()["served"] == len(reqs)
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+    # explicit override wins
+    ex2, server2 = _server(smoke, frags[:2], ingest_threads=3)
+    try:
+        assert server2.n_ingest_threads == 3
+    finally:
+        server2.stop(drain=False, timeout=5.0)
+        ex2.close()
+
+
 def test_server_mixed_depth_chains_numerics(smoke):
     """True depth-2 topology (align [0,1) -> shared [1,L) for p=0
     clients, direct shared for p=1): results flow across TWO pool

@@ -53,6 +53,34 @@ def test_frame_round_trip_dtypes_and_shapes(dtype):
     assert np.array_equal(out, view, equal_nan=True)
 
 
+def test_zero_copy_receive_above_size_threshold():
+    """Frames carrying large activations decode as read-only VIEWS into
+    the received buffer (no per-array copy); small arrays still copy so
+    they stay writable and don't pin frame buffers. The threshold is the
+    boundary: one byte under copies, at-threshold does not."""
+    from repro.serving.transport import ZEROCOPY_MIN_BYTES
+    small = np.arange(ZEROCOPY_MIN_BYTES - 1, dtype=np.uint8)
+    big = np.arange(ZEROCOPY_MIN_BYTES, dtype=np.uint8)
+    out = decode_frame(encode_frame({"s": small, "b": big}))
+    assert out["s"].flags.writeable and out["s"].base is None   # owned copy
+    assert not out["b"].flags.writeable                          # view
+    assert out["b"].base is not None, "large array was copied"
+    assert np.array_equal(out["s"], small)
+    assert np.array_equal(out["b"], big)
+    # the socket path reads into ONE preallocated buffer and round-trips
+    # the same way (values exact, large payloads zero-copy on receive)
+    tp = SocketTransport()
+    tp.serve("zc", lambda m: {"ok": True, "payload": m["payload"]})
+    ch = tp.connect("zc")
+    x = (np.arange(ZEROCOPY_MIN_BYTES // 4, dtype=np.float32)
+         .reshape(2, -1))
+    back = ch.request({"payload": x})["payload"]
+    assert np.array_equal(back, x)
+    assert not back.flags.writeable and back.base is not None
+    ch.close()
+    tp.close()
+
+
 def test_frame_round_trip_nested_structures():
     rng = np.random.RandomState(0)
     msg = {"op": "init", "n": 3, "f": 2.5, "none": None, "flag": True,
