@@ -13,11 +13,21 @@ network-bound regime the paper budgets for):
     inside the SLO, while the no-shed baseline (today's record-lateness
     behavior) blows it for everyone.
 
+``--remote`` (or suite ``fleet_remote``) adds the REMOTE data-path
+claim: with pools in worker subprocesses, per-front-end dial-back
+channels (``RemoteExecutor.open_handle``) beat the shared-channel
+baseline on p99 at equal paced offered load — two front-ends' shaped
+uplink transfers overlap on separate TCP lanes instead of queueing on
+the one worker connection.
+
 Rows:
   fleet/throughput/feN     us = makespan; derived rps + attainment
   fleet/scaleout           derived ratio = thr(2fe)/thr(1fe)
   fleet/overload/noshed    derived p99/attainment at 2x load, no policy
   fleet/overload/shed      derived p99-of-admitted/attainment/shed_rate
+  fleet/remote/shared      us = p99; one worker connection per pool
+  fleet/remote/perfe       us = p99; one dial-back lane per front-end
+  fleet/remote/win         derived p99_shared/p99_perfe ratio
 """
 from __future__ import annotations
 
@@ -132,6 +142,61 @@ def _burst(fleet, cfg, frags, rng, waves, budget_ms):
     return time.perf_counter() - t0, fleet.report(since=mark)
 
 
+def run_remote(rows: Rows, *, quick=False) -> None:
+    """Per-front-end dial-back channels vs the shared worker connection,
+    REMOTE pools (worker subprocesses), equal paced offered load."""
+    from repro.serving import GraftFleet
+    from repro.serving.remote import RemoteExecutor
+    from repro.serving.transport import ShapedTransport, SocketTransport
+
+    n_clients = 4
+    cfg, book, params, frags, plan = _setup(n_clients)
+    rng = np.random.RandomState(0)
+    secs = 1.5 if quick else 3.0
+    # pace between the two regimes: one wave's p=1 transfers fit the
+    # period when they OVERLAP (per-FE lanes), not when they serialize
+    # on the one worker connection — so equal offered load separates the
+    # configurations on tail latency alone
+    n_p1 = sum(1 for f in frags if f.p == 1)
+    period = 25.0e-3 * (n_p1 + 1) / 2.0
+    p99 = {}
+    for label, per_fe in (("shared", False), ("perfe", True)):
+        tp = ShapedTransport(SocketTransport(), _shaped(frags).shapes,
+                             realtime=True)
+        ex = RemoteExecutor(plan, params, cfg, transport=tp,
+                            per_frontend_channels=per_fe)
+        _prewarm_shapes(ex, cfg, np.random.RandomState(99))
+        fleet = GraftFleet(ex, n_frontends=2, book=book, ingest_threads=2,
+                           flush_safety_frac=0.25).start()
+        try:
+            _warm(fleet, cfg, frags, rng)
+            mark = fleet.mark()
+            t_end = time.perf_counter() + secs
+            offered = 0
+            while time.perf_counter() < t_end:
+                t_wave = time.perf_counter()
+                for req, p in _reqs(cfg, frags, rng, 1):
+                    fleet.submit(req, p, 10_000.0)   # measure, don't shed
+                    offered += 1
+                time.sleep(max(period - (time.perf_counter() - t_wave),
+                               0.0))
+            if not fleet.join(timeout=600.0):
+                raise RuntimeError("remote paced phase never drained")
+            rep = fleet.report(since=mark)
+            p99[label] = rep["p99_ms"]
+            rows.add(f"fleet/remote/{label}", rep["p99_ms"] * 1e3,
+                     f"p99_ms={rep['p99_ms']:.1f};"
+                     f"p50_ms={rep['p50_ms']:.1f};"
+                     f"offered={offered};"
+                     f"offered_rps={offered / secs:.1f};"
+                     f"channels={'per-frontend' if per_fe else 'shared'}")
+        finally:
+            fleet.stop(drain=False, timeout=5.0)
+            ex.close()
+    rows.add("fleet/remote/win", 0.0,
+             f"p99_ratio={p99['shared'] / max(p99['perfe'], 1e-9):.2f}x")
+
+
 def run(rows: Rows, *, quick=False) -> None:
     from repro.serving.batcher import ShedPolicy
 
@@ -199,3 +264,18 @@ def run(rows: Rows, *, quick=False) -> None:
         finally:
             fleet.stop(drain=False, timeout=5.0)
             ex.close()
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--remote", action="store_true",
+                    help="run the remote per-front-end-channel claim "
+                         "(worker subprocesses) instead of the "
+                         "in-process scale-out/overload suites")
+    args = ap.parse_args()
+    rows = Rows()
+    print("name,us_per_call,derived")
+    (run_remote if args.remote else run)(rows, quick=args.quick)
+    rows.emit()

@@ -106,6 +106,10 @@ def extract_metrics(rows: list) -> dict:
             kind = name.split("/")[2]
             metrics[f"fleet_{kind}_p99_ms"] = d["p99_ms"]
             metrics[f"fleet_{kind}_attainment"] = d["attainment"]
+        elif name == "fleet/remote/win":
+            # per-front-end vs shared worker channels (recorded, not
+            # gated: worker-subprocess wall clock on shared runners)
+            metrics["fleet_remote_channel_ratio"] = d["p99_ratio"]
     return metrics
 
 

@@ -42,6 +42,7 @@ def main(argv=None) -> None:
         "transport": bench_transport.run,     # cross-process data path
         "server": bench_server.run,           # event-driven serving runtime
         "fleet": bench_fleet.run,             # multi-front-end scale-out
+        "fleet_remote": bench_fleet.run_remote,  # per-FE worker channels
     }
     only = set(args.only.split(",")) if args.only else None
     rows = Rows()

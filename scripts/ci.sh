@@ -4,11 +4,15 @@
 # benches, so scheduler/controller/transport regressions surface before
 # merge.
 #
-#   ./scripts/ci.sh               # full gate (tests + demo smoke + quick benches)
-#   ./scripts/ci.sh --tests       # tests only
-#   ./scripts/ci.sh --bench-gate  # quick benches -> BENCH_ci.json, fail on
-#                                 # >20% planner-latency / SLO-attainment
-#                                 # regression vs benchmarks/baseline.json
+#   ./scripts/ci.sh                # full gate (tests + demo smoke + quick benches)
+#   ./scripts/ci.sh --tests        # tests only
+#   ./scripts/ci.sh --bench-gate   # quick benches -> BENCH_ci.json, fail on
+#                                  # >20% planner-latency / SLO-attainment
+#                                  # regression vs benchmarks/baseline.json
+#   ./scripts/ci.sh --remote-smoke # multi-host-shaped serve loop: 2 front-ends
+#                                  # over the SOCKET executor (worker
+#                                  # subprocesses dialing back to
+#                                  # --advertise-host 127.0.0.1)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -16,8 +20,17 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 if [[ "${1:-}" == "--bench-gate" ]]; then
     python -m benchmarks.gate \
-        --only incremental,controller,transport,server,fleet \
+        --only incremental,controller,transport,server,fleet,fleet_remote \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
+    exit $?
+fi
+
+if [[ "${1:-}" == "--remote-smoke" ]]; then
+    # the remote data path end-to-end: per-front-end worker channels,
+    # numerics checked against the monolithic pass (exit 1 on mismatch)
+    python -m repro.launch.serve --serve-loop --execute socket \
+        --serve-seconds 2 --clients 2 --frontends 2 \
+        --advertise-host 127.0.0.1
     exit $?
 fi
 

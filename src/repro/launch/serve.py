@@ -27,7 +27,8 @@ from repro.core import (GraftPlanner, plan_gslice, plan_static, place,
 from repro.serving import make_fleet, fleet_fragments, simulate
 
 
-def run_execute(arch: str, mode: str, n_clients: int, seed: int) -> int:
+def run_execute(arch: str, mode: str, n_clients: int, seed: int,
+                advertise_host: str = "127.0.0.1") -> int:
     """Smoke-scale real execution behind the chosen transport."""
     from repro.serving import (GraftExecutor, InProcessTransport,
                                RemoteExecutor, SocketTransport)
@@ -39,7 +40,8 @@ def run_execute(arch: str, mode: str, n_clients: int, seed: int) -> int:
     frags = smoke_fragments(cfg, n_clients, seed=seed)
     plan = planner.plan(frags)
     if mode == "socket":
-        ex = RemoteExecutor(plan, params, cfg, transport=SocketTransport())
+        ex = RemoteExecutor(plan, params, cfg, transport=SocketTransport(),
+                            advertise_host=advertise_host)
     else:
         ex = GraftExecutor(plan, params, cfg, transport=InProcessTransport())
     with ex:
@@ -65,7 +67,8 @@ def run_serve_loop_cli(args) -> int:
         arch=args.arch, mode=mode, n_clients=min(args.clients, 4),
         seconds=args.serve_seconds, rate=args.serve_rate, seed=args.seed,
         shift_frac=0.5, shaped=args.shaped, frontends=args.frontends,
-        shed_budget_frac=args.shed_budget, log=print)
+        shed_budget_frac=args.shed_budget,
+        advertise_host=args.advertise_host, log=print)
     print(f"[serve-loop] served {rep['served']} requests in "
           f"{rep['wall_s']:.1f}s wall "
           f"(mean batch {rep['mean_batch']:.2f}, "
@@ -130,6 +133,10 @@ def main(argv=None):
                     help="serve-loop: enable the admission-control shed "
                          "policy with this per-client shed budget "
                          "fraction (e.g. 0.5)")
+    ap.add_argument("--advertise-host", default="127.0.0.1",
+                    help="socket mode: the address pool workers dial "
+                         "back to — set the parent's routable host when "
+                         "workers run on other machines")
     args = ap.parse_args(argv)
 
     if args.serve_loop:
@@ -164,7 +171,7 @@ def main(argv=None):
               f"drops {sum(res.drops.values())}")
     if args.execute != "off":
         return run_execute(args.arch, args.execute, min(args.clients, 4),
-                           args.seed)
+                           args.seed, advertise_host=args.advertise_host)
     return 0
 
 

@@ -9,7 +9,9 @@ from repro.serving.transport import (Transport, InProcessTransport,
                                      TruncatedFrameError)
 from repro.serving.executor import (GraftExecutor, ServeRequest,
                                     PoolDrainingError)
-from repro.serving.remote import RemoteExecutor
+from repro.serving.remote import (RemoteExecutor, SSHLauncher,
+                                  SubprocessLauncher, WorkerDiedError,
+                                  WorkerLauncher)
 from repro.serving.controller import ServingController, Estimate
 from repro.serving.batcher import (BatchItem, MicroBatcher, ShedPolicy,
                                    bucket_size)
@@ -20,7 +22,8 @@ __all__ = [
     "partition", "PartitionDecision", "MobileClient", "make_fleet",
     "fleet_fragments", "simulate", "SimResult", "GraftExecutor",
     "ServeRequest", "PoolDrainingError", "RemoteExecutor",
-    "ServingController", "Estimate",
+    "WorkerLauncher", "SubprocessLauncher", "SSHLauncher",
+    "WorkerDiedError", "ServingController", "Estimate",
     "BatchItem", "MicroBatcher", "ShedPolicy", "bucket_size",
     "GraftServer", "run_serve_loop", "GraftFleet", "rendezvous_route",
     "Transport", "InProcessTransport", "SocketTransport", "ShapedTransport",

@@ -17,7 +17,10 @@ depth boundaries like the lock-step ``GraftExecutor.serve`` loop.
 
 The batcher is intentionally executor-agnostic: it holds opaque
 :class:`BatchItem` payloads and deals only in deadlines, so it is unit
-testable without jax and reusable for any staged pipeline.
+testable without jax and reusable for any staged pipeline. It also
+holds NO clock of its own — every deadline-sensitive entry point takes
+``now_ms`` from the caller (the server's injectable clock), so under a
+test's fake clock the whole batching policy is deterministic.
 """
 from __future__ import annotations
 

@@ -88,7 +88,8 @@ class GraftFleet:
                  ingest_threads: Optional[int] = None,
                  hop_default_ms: float = 1.0,
                  waiting_grace_ms: Optional[float] = None,
-                 flush_safety_frac: float = 0.15):
+                 flush_safety_frac: float = 0.15,
+                 clock=None):
         self.executor = executor
         self.controller = controller
         self.book = book
@@ -100,6 +101,7 @@ class GraftFleet:
         self._period_ms = getattr(controller, "control_period_ms", 250.0)
 
         self._t0 = time.monotonic()
+        self._clock = clock                   # injectable (test determinism)
         self._ctl_lock = threading.Lock()     # shared by every front-end
         self._fe_lock = threading.RLock()     # membership
         self.registry: dict = {}              # rid -> owning GraftServer
@@ -118,7 +120,10 @@ class GraftFleet:
     # -------------------------------------------------------------- clock
     def now_ms(self) -> float:
         """The ONE clock every front-end and the controller share —
-        per-server clocks would skew the controller's sliding windows."""
+        per-server clocks would skew the controller's sliding windows.
+        Injectable (``clock=``) so fleet tests run on a fake clock."""
+        if self._clock is not None:
+            return self._clock()
         return (time.monotonic() - self._t0) * 1e3
 
     # --------------------------------------------------------- membership

@@ -219,6 +219,11 @@ class GraftServer:
         self.registry = registry
         self.foreign_router = foreign_router
         self._clock = clock
+        # exec-duration measurement rides the SAME injectable clock as
+        # now_ms(): under a fake clock every EWMA (exec, uplink window)
+        # becomes deterministic instead of soaking up host jitter
+        self._perf = clock if clock is not None \
+            else (lambda: time.perf_counter() * 1e3)
 
         self._rw = _RWLock()
         self._ctl_lock = ctl_lock if ctl_lock is not None \
@@ -432,14 +437,20 @@ class GraftServer:
 
     # ---------------------------------------------------- admission / shed
     def _est_remaining_ms(self, st: _InFlight, *, at_stage: int,
-                          include_backlog: bool = False) -> float:
+                          include_backlog: bool = False,
+                          now: Optional[float] = None) -> float:
         """Uplink EWMA + remaining-stage cost from ``at_stage`` on —
         the provably-blown test's left-hand side. ``include_backlog``
         additionally charges the queue a NEW request would join at the
         entry stage: the uplink time its pool channel must serialize for
         already-queued stage-0 items (the network-bound backlog the
-        stage cost model can't see) plus execution of the full batches
-        ahead. Flush-time items are already at the head, so no backlog."""
+        stage cost model can't see), execution of the full batches
+        ahead, and the batch the entry driver is ALREADY pushing
+        (``busy_until_ms`` — popped items are absent from the queue, so
+        without this charge an uplink-bound pool looks idle at ingest
+        exactly while it is sleeping through transfers, and the shed
+        lands late at batch close instead). Flush-time items are already
+        at the head, so no backlog."""
         costs = self._chain_costs(st.chain)
         hop = self._hop_ms(st.req.client) if at_stage == 0 \
             else self.hop_default_ms
@@ -449,10 +460,12 @@ class GraftServer:
             drv = self._drivers.get(st.chain[at_stage]) \
                 if at_stage < len(st.chain) else None
             if drv is not None:
+                t = self.now_ms() if now is None else now
                 full_batches = len(drv.batcher) // max(drv.batcher.max_batch,
                                                        1)
                 est += drv.batcher.pending_hop_ms \
-                    + full_batches * drv.est_cost_ms()
+                    + full_batches * drv.est_cost_ms() \
+                    + max(drv.busy_until_ms - t, 0.0)
         return est
 
     def _shed_at_ingest(self, rid: int, st: _InFlight, now: float) -> bool:
@@ -465,7 +478,8 @@ class GraftServer:
             return False
         blown = hopeless(now, st.deadline_ms,
                          self._est_remaining_ms(st, at_stage=0,
-                                                include_backlog=True))
+                                                include_backlog=True,
+                                                now=now))
         if not blown:
             self.shed_policy.note_admitted(st.req.client)
             return False
@@ -592,11 +606,11 @@ class GraftServer:
                 # deeper-stage items first: they are closest to their
                 # deadlines and must not wait behind this same batch's
                 # stage-0 uplink transfers
-                t0 = time.perf_counter()
+                t0 = self._perf()
                 results += handle.execute(
                     [(it.rid, it.client, it.payload, it.extras)
                      for it in later])
-                exec_ms += (time.perf_counter() - t0) * 1e3
+                exec_ms += self._perf() - t0
             companions = sum(it.hop_charge_ms for it in stage0)
             for it in stage0:
                 companions -= it.hop_charge_ms     # hops still after THIS
@@ -614,9 +628,9 @@ class GraftServer:
                 self.executor.record_uplink(it.client, nbytes, ms)
                 self._note_uplink(it.client, ms)
             if stage0:
-                t0 = time.perf_counter()
+                t0 = self._perf()
                 results += handle.flush()
-                exec_ms += (time.perf_counter() - t0) * 1e3
+                exec_ms += self._perf() - t0
         except PoolDrainingError:
             # intake refused atomically: nothing queued pool-side
             for it in stage0 + later:
@@ -645,6 +659,10 @@ class GraftServer:
                     self._finish_local(it.rid, self._inflight[it.rid],
                                        it.payload, boundary=it.boundary)
             return foreign
+        finally:
+            # the batch is over on every path: a stale busy_until would
+            # keep charging phantom backlog to ingest admission
+            driver.busy_until_ms = self.now_ms()
         driver.note_exec(exec_ms)
         self.stats["batches"] += 1
         foreign = None
@@ -1016,6 +1034,7 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
                    max_check: int = 64, seq_len: int = 16,
                    frontends: int = 1,
                    shed_budget_frac: Optional[float] = None,
+                   advertise_host: str = "127.0.0.1", launcher=None,
                    log=None) -> dict:
     """Run the full event-driven runtime wall-clock for ``seconds``.
 
@@ -1028,6 +1047,12 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
     ``frontends > 1`` (or a ``shed_budget_frac``) runs the fleet
     topology instead: several front-ends over the one executor, clients
     rendezvous-routed, the fleet owning the control tick.
+
+    ``advertise_host``/``launcher`` only apply to ``mode="socket"``:
+    workers dial back to the advertised address and are started by the
+    given :class:`repro.serving.remote.WorkerLauncher` (local subprocess
+    when None) — the multi-host smoke path CI drives with
+    ``--advertise-host 127.0.0.1``.
     """
     from repro.core import GraftPlanner
     from repro.models import n_fragment_units
@@ -1060,8 +1085,12 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
         # the wall-clock latencies reported below would otherwise exclude
         # the very fades the uplink EWMA is charging deadlines for
         tp = ShapedTransport(inner, shapes, realtime=True)
-    cls = RemoteExecutor if mode == "socket" else GraftExecutor
-    ex = cls(plan0, params, cfg, transport=tp)
+    if mode == "socket":
+        ex = RemoteExecutor(plan0, params, cfg, transport=tp,
+                            advertise_host=advertise_host,
+                            launcher=launcher)
+    else:
+        ex = GraftExecutor(plan0, params, cfg, transport=tp)
 
     submitted: list = []                         # [(req, p)] for numerics
     if frontends > 1 or shed_budget_frac is not None:

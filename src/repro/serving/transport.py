@@ -175,8 +175,17 @@ def read_frame(readable, *, max_frame_bytes: int = DEFAULT_MAX_FRAME
         raise FrameError(f"incoming frame of {length} bytes exceeds "
                          f"max_frame_bytes={max_frame_bytes}")
     body = _read_exact(readable, length)
-    return msgpack.unpackb(body, object_hook=_unpack_hook, raw=False,
-                           strict_map_key=False)
+    try:
+        return msgpack.unpackb(body, object_hook=_unpack_hook, raw=False,
+                               strict_map_key=False)
+    except FrameError:
+        raise
+    except Exception as e:
+        # garbage bodies (bit flips, hostile peers, ndarray envelopes
+        # whose data/shape/dtype disagree) surface as the ONE typed
+        # error, never a raw msgpack/numpy internal
+        raise FrameError(f"undecodable frame body: "
+                         f"{type(e).__name__}: {e}") from None
 
 
 def write_frame(sock: socket.socket, msg: dict, *,

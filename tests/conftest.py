@@ -1,11 +1,59 @@
 import os
 import sys
+import time
+import zlib
 
 # NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
 # smoke tests and benches must see 1 device; only launch/dryrun.py (run as a
 # separate process) forces 512 placeholder devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np
+import pytest
+
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _pin_seed(request):
+    """Pin numpy's GLOBAL rng per test, derived from the test's nodeid:
+    deterministic across runs and orders, different across tests. Tests
+    that care already construct their own RandomState; this catches the
+    library paths that fall back to np.random so a reordered or -k'd run
+    can't flake differently from the full suite."""
+    np.random.seed(zlib.crc32(request.node.nodeid.encode()) & 0x7FFFFFFF)
+
+
+class FakeClock:
+    """Injectable manual clock (milliseconds) for GraftServer/GraftFleet.
+
+    Wall time never advances on its own, so every deadline, EWMA, and
+    backlog estimate in the runtime is a pure function of what the test
+    advances — the deflake story for the timer-sensitive tests."""
+
+    def __init__(self, t0_ms: float = 0.0):
+        self.t_ms = float(t0_ms)
+
+    def __call__(self) -> float:
+        return self.t_ms
+
+    def advance(self, ms: float) -> None:
+        self.t_ms += float(ms)
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()
+
+
+def wait_until(cond, *, timeout_s: float = 60.0, interval_s: float = 0.005,
+               desc: str = "condition"):
+    """Poll ``cond()`` until truthy; assert (with ``desc``) on timeout.
+    The ONE place tests are allowed to wait on background threads — tiny
+    fixed interval, no test-local sleep tuning."""
+    deadline = time.monotonic() + timeout_s
+    while not cond():
+        assert time.monotonic() < deadline, f"timed out waiting for {desc}"
+        time.sleep(interval_s)

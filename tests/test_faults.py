@@ -1,0 +1,357 @@
+"""Fault injection on the serving data path.
+
+Three fault families, each asserting the same survival contract — the
+pool recovers, in-flight requests reroute or finish in-process (never
+dropped, never stranded), and every answer stays numerically identical
+to the monolithic forward pass:
+
+  * :class:`FlakyTransport` — an injectable transport wrapper whose
+    channels can be partitioned mid-run (requests raise
+    ``ConnectionResetError``), driving the in-process executor through
+    the same connection-loss paths a dead socket would.
+  * per-front-end channel partition — one fleet front-end's dedicated
+    pool channel goes dark; the OTHER front-ends must keep flushing
+    through their own channels while the partitioned one degrades to
+    local finishes.
+  * worker kill (slow) — a ``RemoteExecutor`` worker subprocess is
+    SIGKILLed with a batch queued against it; the executor must respawn
+    it (reconnect-with-backoff) and the next batch must ride the new
+    process.
+
+Everything here is deterministic: fake clocks where deadline math could
+race, ``wait_until`` (5 ms poll) as the only wait on background threads,
+no test-side sleeps beyond it.
+"""
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import wait_until
+from repro.serving.transport import Channel, InProcessTransport, Transport
+
+
+# --------------------------------------------------------------- harness
+
+class FlakyChannel(Channel):
+    """Wraps a channel with an injectable partition switch."""
+
+    def __init__(self, inner: Channel):
+        super().__init__(inner.name)
+        self._inner = inner
+        self.stats = inner.stats
+        self.broken = False
+
+    def request(self, msg: dict) -> dict:
+        if self.broken:
+            raise ConnectionResetError(
+                f"injected partition on channel {self.name}")
+        return self._inner.request(msg)
+
+    def close(self) -> None:
+        self._inner.close()
+
+
+class FlakyTransport(Transport):
+    """Transport wrapper: every connected channel is a FlakyChannel the
+    test can partition/heal individually (``channels`` keeps them in
+    connect order)."""
+
+    def __init__(self, inner: Transport):
+        self.inner = inner
+        self.channels: list = []
+
+    def serve(self, name, handler):
+        return self.inner.serve(name, handler)
+
+    def connect(self, name) -> FlakyChannel:
+        ch = FlakyChannel(self.inner.connect(name))
+        self.channels.append(ch)
+        return ch
+
+    def stop(self, name) -> None:
+        self.inner.stop(name)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def __getattr__(self, item):
+        return getattr(self.inner, item)
+
+
+# ------------------------------------------------------ launchers (pure)
+
+def test_launcher_argv_shapes():
+    from repro.serving.remote import (SSHLauncher, SubprocessLauncher,
+                                      bind_host_for)
+    sub = SubprocessLauncher().argv("127.0.0.1:4242", 99)
+    assert sub[0] == sys.executable and "--connect" in sub
+    assert sub[sub.index("--connect") + 1] == "127.0.0.1:4242"
+    assert sub[sub.index("--max-frame") + 1] == "99"
+
+    ssh = SSHLauncher("gpu-host-3", python="python3.11",
+                      pythonpath="/opt/repro/src")
+    argv = ssh.argv("198.51.100.7:5123", 1024)
+    # `ssh <host> env PYTHONPATH=... JAX_PLATFORMS=cpu python -m ...`
+    assert argv[:2] == ["ssh", "gpu-host-3"]
+    assert argv[2] == "env" and "PYTHONPATH=/opt/repro/src" in argv
+    assert argv[argv.index("-m") + 1] == "repro.serving.remote"
+    assert argv[argv.index("--connect") + 1] == "198.51.100.7:5123"
+    # injectable ssh prefix (what tests/wrappers substitute)
+    shim = SSHLauncher("h", ssh=("/usr/bin/autossh", "-M", "0"))
+    assert shim.argv("a:1", 2)[:4] == ["/usr/bin/autossh", "-M", "0", "h"]
+
+    # loopback advertisements bind loopback; routable ones bind all
+    assert bind_host_for("127.0.0.1") == "127.0.0.1"
+    assert bind_host_for("localhost") == "localhost"
+    assert bind_host_for("10.0.0.7") == ""
+    assert bind_host_for("parent.cluster.local") == ""
+
+
+# --------------------------------------------------------- jax fixtures
+
+@pytest.fixture(scope="module")
+def smoke():
+    from repro.serving.smoke import smoke_setup
+    return smoke_setup("qwen3-1.7b", seed=0)
+
+
+def _requests(cfg, frags, rng, n_per_client=2):
+    from repro.serving import ServeRequest
+    out = []
+    for _ in range(n_per_client):
+        for f in frags:
+            out.append((ServeRequest(client=f.client, tokens=rng.randint(
+                0, cfg.vocab_size, 16).astype(np.int32)), f.p))
+    return out
+
+
+# ------------------------------------------- in-process channel faults
+
+def test_server_survives_channel_partition_and_heals(smoke):
+    """Partition a server's pool channel mid-run: queued work finishes
+    in-process (exact numerics, nothing stranded); after the partition
+    heals, traffic rides the pool again."""
+    from repro.core import Fragment, GraftPlanner
+    from repro.serving import GraftExecutor, GraftServer
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, 0, 5000.0, 30.0, client="f0")]
+    tp = FlakyTransport(InProcessTransport())
+    ex = GraftExecutor(GraftPlanner(book).plan(frags), params, cfg,
+                       transport=tp)
+    server = GraftServer(ex, book=book).start()
+    try:
+        warm = _requests(cfg, frags, np.random.RandomState(0),
+                         n_per_client=1)
+        for req, p in warm:
+            server.submit(req, p, 5000.0)
+        assert server.join(timeout=300.0)
+        batches_warm = server.stats["batches"]
+        assert batches_warm >= 1
+
+        key = ex.chain_keys("f0")[0]
+        lane = server._local_handles[key].channel   # this server's lane
+        assert isinstance(lane, FlakyChannel)
+        lane.broken = True
+        cut = _requests(cfg, frags, np.random.RandomState(1),
+                        n_per_client=2)
+        for req, p in cut:
+            server.submit(req, p, 5000.0)
+        assert server.join(timeout=300.0), \
+            "requests stranded behind a partitioned channel"
+        rep = server.report()
+        assert rep["served"] == len(warm) + len(cut)     # nothing dropped
+        assert rep["local_finishes"] == len(cut)
+        check_against_monolithic(cfg, params, warm + cut)
+
+        lane.broken = False                              # partition heals
+        back = _requests(cfg, frags, np.random.RandomState(2),
+                         n_per_client=1)
+        for req, p in back:
+            server.submit(req, p, 5000.0)
+        assert server.join(timeout=300.0)
+        assert server.stats["batches"] > batches_warm    # pool again
+        assert server.report()["local_finishes"] == len(cut)
+        check_against_monolithic(cfg, params, back)
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def _shared_pool_frags(cfg, fes, *, p=1):
+    """One client per front-end, all entering the SAME shared pool."""
+    from repro.core import Fragment
+    from repro.serving.fleet import rendezvous_route
+    got, frags, i = {fe: 0 for fe in fes}, [], 0
+    while min(got.values()) < 1 and i < 10_000:
+        name = f"fp{i}"
+        fe = rendezvous_route(name, fes)
+        if got[fe] < 1:
+            got[fe] += 1
+            frags.append(Fragment(cfg.name, p=p, t=5000.0, q=30.0,
+                                  client=name))
+        i += 1
+    return frags
+
+
+def test_fleet_partitioned_frontend_does_not_stall_others(smoke):
+    """Partition ONE front-end's dedicated channel to the shared pool:
+    the other front-end keeps flushing through its own channel (that is
+    the per-front-end-channel isolation story), the partitioned one
+    degrades to local finishes, and every request completes exactly."""
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftFleet
+    from repro.serving.smoke import (check_against_monolithic,
+                                     mixed_depth_plan, smoke_setup)
+    cfg, book, params = smoke_setup("qwen3-1.7b", seed=0, n_layers=3)
+    frags = _shared_pool_frags(cfg, ["fe0", "fe1"], p=1)
+    plan = mixed_depth_plan(cfg, book, frags, s=1, batch=4)
+    tp = FlakyTransport(InProcessTransport())
+    ex = GraftExecutor(plan, params, cfg, transport=tp)
+    fleet = GraftFleet(ex, n_frontends=2, book=book).start()
+    try:
+        # every client's chain is the ONE shared pool
+        keys = {tuple(ex.chain_keys(f.client)) for f in frags}
+        assert len(keys) == 1
+        key = next(iter(keys))[0]
+        warm = _requests(cfg, frags, np.random.RandomState(0),
+                         n_per_client=1)
+        for req, p in warm:
+            fleet.submit(req, p, 5000.0)
+        assert fleet.join(timeout=300.0)
+        check_against_monolithic(cfg, params, warm)
+
+        table = fleet.routing_table([f.client for f in frags])
+        dark_fe = table[frags[0].client]
+        lit_fe = next(fe for fe in fleet.frontends if fe != dark_fe)
+        dark, lit = fleet.frontend(dark_fe), fleet.frontend(lit_fe)
+        # each front-end opened its OWN channel to the shared pool
+        assert dark._local_handles[key] is not lit._local_handles[key]
+        dark._local_handles[key].channel.broken = True
+
+        lit_batches = lit.stats["batches"]
+        reqs = _requests(cfg, frags, np.random.RandomState(1),
+                         n_per_client=3)
+        for req, p in reqs:
+            fleet.submit(req, p, 5000.0)
+        assert fleet.join(timeout=300.0), \
+            "a partitioned front-end stalled the fleet"
+        check_against_monolithic(cfg, params, reqs)
+        # the lit front-end kept flushing through the pool...
+        assert lit.stats["batches"] > lit_batches
+        assert lit.stats["local_finishes"] == 0
+        # ...while the dark one finished its share in-process
+        n_dark = sum(1 for f in frags if table[f.client] == dark_fe) * 3
+        assert dark.stats["local_finishes"] == n_dark
+        rep = fleet.report()
+        assert rep["served"] == len(warm) + len(reqs)
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+# ------------------------------------------------- worker kill (remote)
+
+@pytest.mark.slow
+def test_worker_kill_mid_batch_respawns_and_completes(smoke):
+    """SIGKILL a pool worker with a batch pinned against it: the batch
+    finishes in-process (exact numerics, nothing stranded), the executor
+    respawns the worker with backoff, and the NEXT batch rides the new
+    process — pool death is a blip, not an outage."""
+    from repro.core import Fragment, GraftPlanner
+    from repro.serving import GraftServer, SocketTransport
+    from repro.serving.remote import RemoteExecutor
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, 0, 5000.0, 30.0, client="k0")]
+    ex = RemoteExecutor(GraftPlanner(book).plan(frags), params, cfg,
+                        transport=SocketTransport(),
+                        respawn_backoff_s=0.01)   # test cap: fast backoff
+    server = GraftServer(ex, book=book).start()
+    try:
+        key = ex.chain_keys("k0")[0]
+        warm = _requests(cfg, frags, np.random.RandomState(3),
+                         n_per_client=1)
+        for req, p in warm:
+            server.submit(req, p, 5000.0)
+        assert server.join(timeout=600.0)
+        check_against_monolithic(cfg, params, warm)
+        pid0 = ex.worker(key).pid
+
+        drv = server.driver(key)
+        drv.batcher.pause()                      # pin the doomed batch
+        doomed = _requests(cfg, frags, np.random.RandomState(4),
+                           n_per_client=2)
+        for req, p in doomed:
+            server.submit(req, p, 5000.0)
+        wait_until(lambda: len(drv.batcher) == len(doomed),
+                   desc="requests to queue on the doomed pool")
+        ex.worker(key).proc.kill()               # mid-batch worker death
+        ex.worker(key).proc.wait(timeout=30)
+        drv.batcher.resume()
+        assert server.join(timeout=600.0), \
+            "worker death stranded in-flight requests"
+        rep = server.report()
+        assert rep["served"] == len(warm) + len(doomed)  # nothing dropped
+        # the request in flight at kill time falls back in-process; any
+        # batched behind it may already ride the respawned worker
+        assert 1 <= rep["local_finishes"] <= len(doomed)
+        check_against_monolithic(cfg, params, doomed)
+
+        # the executor RESPAWNED the worker (new pid, logged)...
+        w = ex.worker(key)
+        assert w.respawns == 1 and w.pid != pid0
+        assert (key, 1) in ex.respawn_log
+        # ...and the next batch rides the new process, not the fallback
+        after = _requests(cfg, frags, np.random.RandomState(5),
+                          n_per_client=1)
+        for req, p in after:
+            server.submit(req, p, 5000.0)
+        assert server.join(timeout=600.0)
+        check_against_monolithic(cfg, params, after)
+        rep2 = server.report()
+        assert rep2["local_finishes"] == rep["local_finishes"]  # no new
+        assert rep2["served"] == rep["served"] + len(after)     # fallbacks
+        stats = ex.handle(key).stats()
+        assert stats["pid"] == w.pid and stats["n_batches"] >= 1
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+@pytest.mark.slow
+def test_worker_respawn_budget_exhausts_typed(smoke):
+    """Past max_respawns the pool fails TYPED (WorkerDiedError), not
+    with a hang or a raw socket error. The first death is observed by a
+    NEVER-BOUND per-front-end lane — liveness is verified, not inferred
+    from the observer's generation, so the respawn still happens."""
+    from repro.core import Fragment, GraftPlanner
+    from repro.serving import SocketTransport
+    from repro.serving.remote import RemoteExecutor, WorkerDiedError
+    cfg, book, params = smoke
+    frags = [Fragment(cfg.name, 0, 60.0, 30.0, client="x0")]
+    ex = RemoteExecutor(GraftPlanner(book).plan(frags), params, cfg,
+                        transport=SocketTransport(),
+                        max_respawns=1, respawn_backoff_s=0.01)
+    try:
+        key = ex.chain_keys("x0")[0]
+        lane = ex.open_handle(key)               # per-FE lane, never used
+        for round_ in range(2):                  # respawn, then budget out
+            ex.worker(key).proc.kill()
+            ex.worker(key).proc.wait(timeout=30)
+            if round_ == 0:
+                with pytest.raises(WorkerDiedError):
+                    lane.stats()     # a lane that never bound observes
+                assert ex.worker(key).respawns == 1   # ...and STILL heals
+                assert int(lane.stats()["pid"]) == ex.worker(key).pid
+                assert int(ex.handle(key).stats()["pid"]) \
+                    == ex.worker(key).pid        # main lane re-bound too
+            else:
+                with pytest.raises(WorkerDiedError):
+                    ex.handle(key).stats()
+                with pytest.raises(WorkerDiedError):
+                    ex.handle(key).stats()       # budget spent: still typed
+        lane.close()
+    finally:
+        ex.close()

@@ -3,14 +3,15 @@ drain-on-remove, the admission-control/shed policy (budget, boundary,
 replan survival), pad-to-bucket compile hygiene, and migration-aware
 placement keeping unchanged instances on their chips."""
 import dataclasses
-import time
 
 import numpy as np
 import pytest
 
+from conftest import FakeClock, wait_until
 from repro.core.placement import (MigrationAction, migrate, place_pools)
 from repro.core.plandiff import PoolSpec, diff_plans
-from repro.serving.batcher import ShedPolicy, bucket_size, hopeless
+from repro.serving.batcher import (ShedPolicy, bucket_size, hopeless,
+                                   remaining_cost_ms)
 from repro.serving.fleet import rendezvous_route, rendezvous_table
 
 
@@ -218,7 +219,8 @@ def test_fleet_serves_across_frontends_exactly(smoke):
 def test_fleet_cross_frontend_result_handoff(smoke):
     """A shared pool's flush surfacing a request owned by ANOTHER
     front-end must be handed to its owner and complete exactly (the
-    registry + dispatch path, driven deterministically)."""
+    registry + dispatch path, driven deterministically on a fake
+    clock — no deadline can fire behind the test's back)."""
     from repro.core import GraftPlanner
     from repro.models import n_fragment_units
     from repro.serving import GraftExecutor, GraftFleet, ServeRequest
@@ -227,7 +229,8 @@ def test_fleet_cross_frontend_result_handoff(smoke):
     frags = _spread_frags(cfg, ["fe0", "fe1"], n_per_fe=1)
     plan = GraftPlanner(book).plan(frags)
     ex = GraftExecutor(plan, params, cfg)
-    fleet = GraftFleet(ex, n_frontends=2, book=book).start()
+    fleet = GraftFleet(ex, n_frontends=2, book=book,
+                       clock=FakeClock()).start()
     try:
         f = frags[0]
         owner = fleet.route(f.client)
@@ -237,10 +240,8 @@ def test_fleet_cross_frontend_result_handoff(smoke):
         req = ServeRequest(client=f.client, tokens=rng.randint(
             0, cfg.vocab_size, 16).astype(np.int32))
         rid = fleet.submit(req, f.p, 80.0)
-        deadline = time.monotonic() + 60.0
-        while len(owner.driver(key).batcher) < 1:
-            assert time.monotonic() < deadline, "request never queued"
-            time.sleep(0.01)
+        wait_until(lambda: len(owner.driver(key).batcher) >= 1,
+                   desc="request to queue on the paused batcher")
         assert fleet.registry[rid] is owner
         # simulate the OTHER front-end's flush producing this result:
         # drain the item and push its final-stage output through dispatch
@@ -440,6 +441,113 @@ def test_fleet_shed_policy_is_fleet_global(smoke):
             assert pol.shed_frac(f.client) > 0
     finally:
         fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_uplink_queue_backlog_sheds_at_ingest_not_flush(smoke):
+    """THE queue-depth regression (ROADMAP follow-up): a request joining
+    an uplink-bound backlog — serialized hop time already queued at its
+    entry pool — must be provably blown AT INGEST and shed at the door,
+    not admitted and caught at batch close. Exact-boundary admits are
+    preserved: a budget exactly equal to the estimate is feasible.
+
+    Driven on a fake clock: exec EWMAs collapse to 0 after warmup (the
+    injectable perf clock never advances), so the estimate is the pure
+    uplink arithmetic the test computes from the same helpers."""
+    from repro.core import Fragment
+    from repro.serving import ServeRequest
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    clock = FakeClock()
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="q0")]
+    pol = ShedPolicy(budget_frac=1.0, window=16)
+    ex, server = _server(smoke, frags, shed_policy=pol, clock=clock)
+    try:
+        rng = np.random.RandomState(0)
+        toks = lambda: rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+        warm = ServeRequest(client="q0", tokens=toks())
+        server.submit(warm, 0, 1e6)              # pays the jit compiles
+        assert server.join(timeout=300.0)
+        key = ex.chain_keys("q0")[0]
+        drv = server.driver(key)
+        assert drv.est_cost_ms() == 0.0          # fake perf clock: EWMA 0
+
+        server._uplink_ewma["q0"] = 300.0        # synthetic slow uplink
+        drv.batcher.pause()
+        r1 = ServeRequest(client="q0", tokens=toks())
+        server.submit(r1, 0, 1e6)                # feasible: joins the queue
+        wait_until(lambda: len(drv.batcher) == 1,
+                   desc="backlog request to queue")
+        assert drv.batcher.pending_hop_ms == 300.0
+
+        # what ingest must now charge a newcomer: its own uplink + the
+        # backlog's serialized uplink (+ 0-cost batches ahead)
+        est = remaining_cost_ms([drv.est_cost_ms()], 0, hop_ms=300.0) \
+            + drv.batcher.pending_hop_ms
+        r2 = ServeRequest(client="q0", tokens=toks())
+        server.submit(r2, 0, est - 1.0)          # provably blown -> door
+        wait_until(lambda: server.stats["shed_ingest"] == 1,
+                   desc="uplink-bound request to shed at ingest")
+        assert server.stats["shed_flush"] == 0 and server.stats["batches"] == 1
+        r3 = ServeRequest(client="q0", tokens=toks())
+        server.submit(r3, 0, est)                # exact boundary: admit
+        wait_until(lambda: len(drv.batcher) == 2,
+                   desc="boundary request to be admitted")
+        assert server.stats["shed_ingest"] == 1
+
+        drv.batcher.resume()
+        assert server.join(timeout=300.0)
+        rep = server.report()
+        assert rep["served"] == 3 and rep["shed"] == 1
+        assert r2.result is None
+        check_against_monolithic(cfg, params,
+                                 [(warm, 0), (r1, 0), (r3, 0)])
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_inflight_uplink_batch_charged_at_ingest(smoke):
+    """The batch a driver is ALREADY pushing (popped, so invisible to
+    the queue) counts against ingest admission via ``busy_until_ms`` —
+    before the fix an uplink-bound pool looked idle exactly while it was
+    sleeping through transfers, and the shed landed late at flush."""
+    from repro.core import Fragment
+    from repro.serving import ServeRequest
+    cfg, book, params = smoke
+    clock = FakeClock()
+    frags = [Fragment(cfg.name, 0, 80.0, 30.0, client="b0")]
+    pol = ShedPolicy(budget_frac=1.0, window=16)
+    ex, server = _server(smoke, frags, shed_policy=pol, clock=clock)
+    try:
+        rng = np.random.RandomState(1)
+        toks = lambda: rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+        warm = ServeRequest(client="b0", tokens=toks())
+        server.submit(warm, 0, 1e6)
+        assert server.join(timeout=300.0)
+        key = ex.chain_keys("b0")[0]
+        drv = server.driver(key)
+        server._uplink_ewma["b0"] = 0.0          # isolate the busy charge
+
+        drv.batcher.pause()                      # freeze the empty pool
+        drv.busy_until_ms = 400.0                # mid-transfer batch
+        hopeless_req = ServeRequest(client="b0", tokens=toks())
+        server.submit(hopeless_req, 0, 399.0)    # blown by the busy batch
+        wait_until(lambda: server.stats["shed_ingest"] == 1,
+                   desc="busy-pool request to shed at ingest")
+        assert server.stats["shed_flush"] == 0
+        boundary = ServeRequest(client="b0", tokens=toks())
+        server.submit(boundary, 0, 400.0)        # exact boundary: admit
+        wait_until(lambda: len(drv.batcher) == 1,
+                   desc="boundary request to be admitted")
+        drv.busy_until_ms = 0.0
+        drv.batcher.resume()
+        assert server.join(timeout=300.0)
+        rep = server.report()
+        assert rep["served"] == 2 and rep["shed"] == 1
+        assert hopeless_req.result is None and boundary.result is not None
+    finally:
+        server.stop(drain=False, timeout=5.0)
         ex.close()
 
 

@@ -150,6 +150,103 @@ def test_placement_never_overflows(frags):
 
 # ------------------------------------------------------------- sharding fit
 
+# ------------------------------------------------------- frame codec
+
+CODEC_DTYPES = ["float32", "float16", "float64", "int8", "int16", "int32",
+                "int64", "uint8", "uint16", "uint32", "uint64", "bool",
+                "complex64", "complex128"]
+
+
+@given(dtype=st.sampled_from(CODEC_DTYPES),
+       shape=st.lists(st.integers(0, 5), min_size=0, max_size=4),
+       seed=st.integers(0, 2**31 - 1),
+       fortran=st.booleans())
+@settings(max_examples=80, deadline=None)
+def test_frame_codec_roundtrips_hostile_arrays(dtype, shape, seed, fortran):
+    """Any dtype x any shape (incl. 0-d, empty dims, Fortran order)
+    round-trips the wire framing bit-exactly."""
+    from repro.serving.transport import decode_frame, encode_frame
+    rng = np.random.RandomState(seed)
+    a = np.asarray(rng.randn(*shape) * 100).astype(dtype)
+    if fortran and a.ndim >= 2:
+        a = np.asfortranarray(a)
+    out = decode_frame(encode_frame({"x": a, "n": seed}))
+    assert out["n"] == seed
+    assert out["x"].dtype == a.dtype and out["x"].shape == a.shape
+    assert np.array_equal(out["x"], a, equal_nan=True)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       cut=st.floats(0.0, 1.0, exclude_max=True))
+@settings(max_examples=60, deadline=None)
+def test_frame_codec_truncation_raises_typed(seed, cut):
+    """EVERY proper prefix of a valid frame raises TruncatedFrameError —
+    a dead peer can never silently short-read."""
+    from repro.serving.transport import (TruncatedFrameError, decode_frame,
+                                         encode_frame)
+    rng = np.random.RandomState(seed)
+    wire = encode_frame({"x": rng.randn(rng.randint(1, 64))
+                         .astype(np.float32)})
+    with pytest.raises(TruncatedFrameError):
+        decode_frame(wire[:int(len(wire) * cut)])
+
+
+@given(blob=st.binary(min_size=0, max_size=256))
+@settings(max_examples=80, deadline=None)
+def test_frame_codec_garbage_raises_typed_never_hangs(blob):
+    """Arbitrary bytes on the wire — garbage length prefixes (oversized
+    allocations refused before the body read), undecodable bodies, bogus
+    ndarray envelopes — raise the ONE typed FrameError family instead of
+    leaking msgpack/numpy internals or hanging ``_read_exact``."""
+    from repro.serving.transport import FrameError, decode_frame
+    try:
+        decode_frame(blob, max_frame_bytes=1 << 16)
+    except FrameError:        # includes TruncatedFrameError
+        pass                  # typed: exactly what peers can catch
+
+
+@given(seed=st.integers(0, 2**31 - 1), pos=st.integers(8, 511),
+       flip=st.integers(1, 255))
+@settings(max_examples=60, deadline=None)
+def test_frame_codec_bitflip_typed_or_exact(seed, pos, flip):
+    """A corrupted body either still decodes (the flip missed anything
+    load-bearing) or raises the typed FrameError — never an untyped
+    crash, never a hang."""
+    from repro.serving.transport import FrameError, decode_frame, encode_frame
+    rng = np.random.RandomState(seed)
+    wire = bytearray(encode_frame({"x": rng.randn(8, 8).astype(np.float32),
+                                   "tag": "t"}))
+    pos = 8 + pos % (len(wire) - 8)          # keep the length prefix intact
+    wire[pos] ^= flip
+    try:
+        decode_frame(bytes(wire))
+    except FrameError:
+        pass
+
+
+@given(dtype=st.sampled_from(["float32", "int64"]),
+       nbytes_factor=st.floats(1.01, 8.0))
+@settings(max_examples=30, deadline=None)
+def test_frame_codec_oversized_refused_both_ends(dtype, nbytes_factor):
+    from repro.serving.transport import (FrameError, TruncatedFrameError,
+                                         decode_frame, encode_frame)
+    cap = 4096
+    n = int(cap * nbytes_factor) // np.dtype(dtype).itemsize + 1
+    msg = {"x": np.zeros(n, dtype=dtype)}
+    with pytest.raises(FrameError):
+        encode_frame(msg, max_frame_bytes=cap)
+    wire = encode_frame(msg)
+    try:
+        decode_frame(wire, max_frame_bytes=cap)
+        assert False, "oversized frame accepted"
+    except TruncatedFrameError:
+        assert False, "refusal must precede the body read"
+    except FrameError:
+        pass
+
+
+# ------------------------------------------------------- sharding fit
+
 @given(st.lists(st.integers(1, 9), min_size=1, max_size=4), st.integers(0, 3))
 @settings(max_examples=50, deadline=None)
 def test_fit_spec_always_divisible(dims, which):

@@ -2,13 +2,16 @@
 SocketTransport + worker subprocesses must be numerically identical to
 the monolithic fragment run — including across a mid-run apply_plan()
 where surviving workers keep their process (pid) and compiled program
-(compile count)."""
+(compile count), and in the multi-host shape (explicit advertise host,
+pluggable launcher, per-front-end channels)."""
+import sys
+
 import numpy as np
 import pytest
 
 from repro.core import Fragment, GraftPlanner
 from repro.serving import SocketTransport
-from repro.serving.remote import RemoteExecutor
+from repro.serving.remote import RemoteExecutor, SRC_ROOT, SSHLauncher
 from repro.serving.smoke import (check_against_monolithic, smoke_requests,
                                  smoke_setup)
 
@@ -92,6 +95,70 @@ def test_remote_executor_equivalence_across_replan(setup):
         assert d2.is_identity
         assert ex.stats["pools_created"] == before["pools_created"]
         assert ex.worker_pids() == pids2
+
+
+def test_remote_multihost_dialback_launcher_and_channels(setup):
+    """The multi-host shape of the remote data path: workers started by
+    a launcher (here the ssh stub behind a local shim), dialing back to
+    an EXPLICIT advertise host; per-front-end channels reach the same
+    worker; pid + compile count stay stable across a replan."""
+    import os
+    cfg, book, params = setup
+    planner = GraftPlanner(book)
+    # "ssh" shim: drop the host argument, run the remote argv locally —
+    # the handshake on the wire is exactly the multi-host one
+    shim = (sys.executable, "-c",
+            "import subprocess, sys; sys.exit(subprocess.call(sys.argv[2:]))")
+    launcher = SSHLauncher("worker-host-0", python=sys.executable,
+                           pythonpath=SRC_ROOT, ssh=shim)
+    frags1 = [Fragment(cfg.name, 0, 60.0, 30.0, client="m0"),
+              Fragment(cfg.name, 1, 70.0, 30.0, client="m1")]
+    with RemoteExecutor(planner.plan(frags1), params, cfg,
+                        transport=SocketTransport(),
+                        advertise_host="127.0.0.1",
+                        launcher=launcher) as ex:
+        # every worker was told to dial the ADVERTISED address and was
+        # started through the launcher's ssh-shaped argv
+        for key, w in ex._workers.items():
+            assert w.connect_str.startswith("127.0.0.1:")
+            assert w.launcher is launcher
+            argv = w.launcher.argv(w.connect_str, 64)
+            assert argv[len(shim)] == "worker-host-0"
+            assert "repro.serving.remote" in argv
+        pids1 = ex.worker_pids()
+        assert os.getpid() not in pids1.values()
+
+        reqs = smoke_requests(cfg, frags1, seed=21)
+        ex.serve(reqs)
+        check_against_monolithic(cfg, params, reqs)
+        compiles1 = {k: s["n_compiles"] for k, s in ex.pool_stats().items()}
+
+        # a per-front-end channel is a SEPARATE lane to the SAME worker
+        key = ex.chain_keys("m0")[0]
+        lane = ex.open_handle(key)
+        assert lane is not ex.handle(key)
+        assert lane.channel is not ex.handle(key).channel
+        assert int(lane.stats()["pid"]) == pids1[key]
+        lane.close()
+
+        # replan: surviving ssh-launched workers keep pid AND program
+        frags2 = frags1 + [Fragment(cfg.name, 1, 50.0, 30.0, client="m2")]
+        diff = ex.apply_plan(planner.plan(frags2))
+        pids2 = ex.worker_pids()
+        survivors = set(pids1) & set(pids2)
+        assert survivors
+        for k in survivors:
+            assert pids2[k] == pids1[k], f"worker for {k} restarted"
+        reqs2 = smoke_requests(cfg, frags1, seed=21)
+        ex.serve(reqs2)
+        check_against_monolithic(cfg, params, reqs2)
+        compiles2 = {k: s["n_compiles"] for k, s in ex.pool_stats().items()}
+        kept = {a.key for a in diff.by_kind("keep")} & set(compiles1)
+        assert kept
+        for k in kept:
+            assert compiles2[k] == compiles1[k], \
+                f"kept pool {k} recompiled across the multi-host replan"
+        assert ex.respawn_log == []          # no worker ever died here
 
 
 def test_remote_worker_shutdown_on_pool_removal(setup):

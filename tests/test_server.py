@@ -7,11 +7,11 @@ rerouted, never dropped), and the wall-clock serve loop completing a
 timer-driven replan mid-traffic.
 """
 import dataclasses
-import time
 
 import numpy as np
 import pytest
 
+from conftest import FakeClock, wait_until
 from repro.serving.batcher import (BatchItem, MicroBatcher,
                                    flush_deadline_ms, remaining_cost_ms)
 
@@ -194,23 +194,22 @@ def test_server_reroutes_requests_queued_on_removed_pool(smoke):
     """THE drain edge case: requests sitting in a pool's batcher while a
     concurrent apply_plan removes that pool must be rerouted (here: the
     client leaves the plan entirely, so they finish via the in-process
-    fallback) — completed exactly, never dropped."""
+    fallback) — completed exactly, never dropped. Runs on a fake clock
+    so no flush deadline can fire behind the pause."""
     from repro.core import Fragment, GraftPlanner
     from repro.serving.smoke import check_against_monolithic
     cfg, book, params = smoke
     planner = GraftPlanner(book)
     frags1 = [Fragment(cfg.name, 0, 80.0, 30.0, client="c0"),
               Fragment(cfg.name, 1, 60.0, 30.0, client="c1")]
-    ex, server = _server(smoke, frags1)
+    ex, server = _server(smoke, frags1, clock=FakeClock())
     try:
         victim_key = ex.chain_keys("c1")[0]
         server.driver(victim_key).batcher.pause()   # pin c1's requests
         reqs = _submit_all(server, cfg, [frags1[1]],
                            np.random.RandomState(1), n_per_client=3)
-        deadline = time.monotonic() + 60.0
-        while len(server.driver(victim_key).batcher) < len(reqs):
-            assert time.monotonic() < deadline, "requests never queued"
-            time.sleep(0.01)
+        wait_until(lambda: len(server.driver(victim_key).batcher)
+                   >= len(reqs), desc="requests to queue on the victim")
         # c1 departs; its pool is removed WHILE its requests are queued
         diff = server.apply(planner.plan([frags1[0]]))
         assert any(a.key == victim_key for a in diff.by_kind("remove"))
