@@ -56,3 +56,89 @@ def run(rows: Rows, *, quick=False) -> None:
     rows.add("kernels/wkv6_token_scan", us_s, "impl=lax.scan_per_token")
     rows.add("kernels/wkv6_chunked", us_k,
              f"impl=matmul_chunks;vs_scan={us_s/us_k:.2f}x")
+
+    run_fragment(rows, quick=quick)
+
+
+def _length_mixes(rng, *, n_rounds: int, max_batch: int, lens) -> list:
+    """Deterministic ragged traffic: per round, a batch of random sizes
+    with lengths drawn from ``lens``."""
+    return [[int(rng.choice(lens)) for _ in range(rng.randint(1, max_batch + 1))]
+            for _ in range(n_rounds)]
+
+
+def run_fragment(rows: Rows, *, quick=False) -> None:
+    """Ragged fragment execution on the serving hot path: the packed
+    (cu_seqlens) FragmentInstance vs the pad-to-bucket baseline over the
+    SAME mixed-length traffic. Derives the gated keys
+    ``fragment_exec_ms`` (packed wall clock per round),
+    ``padding_waste_frac`` and ``recompile_count`` (both per variant —
+    the gate tracks the packed ones)."""
+    from repro import models as M
+    from repro.configs import get_smoke_config
+    from repro.core.plandiff import PoolSpec
+    from repro.serving.executor import FragmentInstance, ServeRequest
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    L = M.n_fragment_units(cfg)
+    max_batch = 4
+    lens = (8, 12, 16, 24)
+    n_rounds = 4 if quick else 12
+    spec = PoolSpec(key=(cfg.name, 0, L), share=100, batch=max_batch,
+                    n_instances=1)
+
+    for packed in (False, True):
+        rng = np.random.RandomState(7)        # identical traffic per variant
+        mixes = _length_mixes(rng, n_rounds=n_rounds, max_batch=max_batch,
+                              lens=lens)
+        inst = FragmentInstance(params, cfg, spec, packed=packed)
+
+        def round_(mix):
+            for i, S in enumerate(mix):
+                req = ServeRequest(client=f"c{i}", tokens=rng.randint(
+                    0, cfg.vocab_size, S).astype(np.int32))
+                inst.submit(req, jnp.asarray(req.tokens))
+            for _, y in inst.flush():
+                np.asarray(y)                 # block: count the full round
+
+        t_warm0 = time.perf_counter()
+        for mix in mixes:                      # cold pass: all compiles land
+            round_(mix)
+        warm_ms = (time.perf_counter() - t_warm0) * 1e3
+        t0 = time.perf_counter()
+        for mix in mixes:                      # warm pass: steady-state wall
+            round_(mix)
+        exec_ms = (time.perf_counter() - t0) * 1e3 / n_rounds
+        waste = inst.pad_tokens / max(inst.real_tokens + inst.pad_tokens, 1)
+        name = "packed" if packed else "padded"
+        rows.add(f"kernels/fragment/{name}", exec_ms * 1e3,
+                 f"fragment_exec_ms={exec_ms:.3f};"
+                 f"padding_waste_frac={waste:.4f};"
+                 f"recompile_count={inst.n_compiles};"
+                 f"cold_ms={warm_ms:.1f};rounds={n_rounds}")
+
+
+def main(argv=None) -> int:
+    """CLI for CI smokes: ``python -m benchmarks.bench_kernels --quick
+    --only fragment`` runs one packed mixed-length batch through the
+    real FragmentInstance so kernel-wiring breakage fails the blocking
+    tier, not the slow one."""
+    import argparse
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_kernels")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="'fragment' runs just the ragged-execution bench")
+    args = ap.parse_args(argv)
+    rows = Rows()
+    print("name,us_per_call,derived")
+    if args.only == "fragment":
+        run_fragment(rows, quick=args.quick)
+    else:
+        run(rows, quick=args.quick)
+    rows.emit()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

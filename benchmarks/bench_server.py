@@ -29,12 +29,20 @@ import numpy as np
 from benchmarks.common import Rows
 
 
-def _waves(cfg, frags, rng, n):
+LENS = (8, 12, 16, 24)      # ragged traffic: every wave mixes lengths
+
+
+def _waves(cfg, frags, rng, n, *, wave0=0):
+    """Mixed-length request waves. Length assignment is deterministic in
+    (wave, client) so the lock-step and pipelined phases face identical
+    ragged traffic — only the execution strategy differs."""
     from repro.serving import ServeRequest
     out = []
-    for _ in range(n):
-        out += [(ServeRequest(client=f.client, tokens=rng.randint(
-            0, cfg.vocab_size, 16).astype(np.int32)), f.p) for f in frags]
+    for w in range(n):
+        for i, f in enumerate(frags):
+            S = LENS[(wave0 + w + i) % len(LENS)]
+            out.append((ServeRequest(client=f.client, tokens=rng.randint(
+                0, cfg.vocab_size, S).astype(np.int32)), f.p))
     return out
 
 
@@ -49,18 +57,43 @@ def _shaped(frags):
 
 
 def _prewarm(ex, cfg, rng, max_batch):
-    """Compile every (pool, batch) shape up front so neither path pays a
-    mid-measurement jit trace."""
+    """Compile every (pool, length-bucket, batch) shape up front so
+    neither path pays a mid-measurement jit trace. Uniform batches of
+    each traffic length cover all the padded seq/batch buckets AND all
+    the packed token buckets the mixed waves can produce."""
     from repro.serving import ServeRequest
+    from repro.serving.batcher import token_bucket
     for key in list(ex.pool_specs()):
         boundary = key[1]
-        req = ServeRequest(client="_warm", tokens=rng.randint(
-            0, cfg.vocab_size, 16).astype(np.int32))
-        payload = ex.mobile_part(req, boundary)
         h = ex.handle(key)
-        for b in range(1, max_batch + 1):
-            h.execute([(ex.next_rid(), "_warm", payload, None)
-                       for _ in range(b)])
+        for S in LENS:
+            req = ServeRequest(client="_warm", tokens=rng.randint(
+                0, cfg.vocab_size, S).astype(np.int32))
+            payload = ex.mobile_part(req, boundary)
+            for b in range(1, max_batch + 1):
+                h.execute([(ex.next_rid(), "_warm", payload, None)
+                           for _ in range(b)])
+        if getattr(ex, "packed", False):
+            # packed programs key on the TOTAL-token bucket, and the
+            # pipelined batcher can close any mix: warm every bucket
+            # reachable from this traffic with one exact-length single
+            buckets = sorted({token_bucket(t) for t in range(
+                min(LENS), max_batch * max(LENS) + 1)})
+            for T in buckets:
+                req = ServeRequest(client="_warm", tokens=rng.randint(
+                    0, cfg.vocab_size, T).astype(np.int32))
+                payload = ex.mobile_part(req, boundary)
+                h.execute([(ex.next_rid(), "_warm", payload, None)])
+
+
+def _pack_stats(ex) -> dict:
+    """Aggregate padding/compile counters across an executor's pools."""
+    st = ex.pool_stats().values()
+    real = sum(s["real_tokens"] for s in st)
+    pad = sum(s["pad_tokens"] for s in st)
+    comp = sum(s["n_compiles"] for s in st)
+    return {"real": real, "pad": pad, "compiles": comp,
+            "waste": pad / max(real + pad, 1)}
 
 
 def run(rows: Rows, *, quick=False) -> None:
@@ -82,9 +115,12 @@ def run(rows: Rows, *, quick=False) -> None:
     plan = mixed_depth_plan(cfg, book, frags, s=1, batch=4)
     rng = np.random.RandomState(0)
 
-    # ---- lock-step baseline: serve() one wave at a time -----------------
+    # ---- lock-step baseline: serve() one wave at a time, pad-to-bucket --
+    # packed=False: the per-request padding baseline the packed path is
+    # gated against (padding_waste_frac / recompile_count).
     lock_times = []
-    with GraftExecutor(plan, params, cfg, transport=_shaped(frags)) as ex:
+    with GraftExecutor(plan, params, cfg, transport=_shaped(frags),
+                       packed=False) as ex:
         _prewarm(ex, cfg, rng, max_batch=len(frags))
         for _ in range(2):                      # warm the serve() path too
             ex.serve(_waves(cfg, frags, rng, 1))
@@ -95,10 +131,12 @@ def run(rows: Rows, *, quick=False) -> None:
             for w in range(waves):
                 ex.serve(reqs[w * per_wave:(w + 1) * per_wave])
             lock_times.append(time.perf_counter() - t0)
+        padded_stats = _pack_stats(ex)
 
-    # ---- pipelined: every wave in flight across pool drivers ------------
+    # ---- pipelined: every wave in flight across pool drivers, packed ----
     pipe_times = []
-    ex2 = GraftExecutor(plan, params, cfg, transport=_shaped(frags))
+    ex2 = GraftExecutor(plan, params, cfg, transport=_shaped(frags),
+                        packed=True)
     _prewarm(ex2, cfg, rng, max_batch=len(frags))
     server = GraftServer(ex2, book=book).start()
     try:
@@ -147,6 +185,18 @@ def run(rows: Rows, *, quick=False) -> None:
                  f"p50_ms={rep['p50_ms']:.2f};p99_ms={rep['p99_ms']:.2f};"
                  f"attainment={rep['attainment']:.3f};"
                  f"mean_batch={rep['mean_batch']:.2f};n={rep['served']}")
+
+        # ---- packing efficiency: ragged vs pad-to-bucket ----------------
+        # Same mixed-length traffic through both executors; the packed
+        # row carries the gated keys. Counters are whole-run (prewarm
+        # included): recompile_count IS the count of distinct shapes the
+        # pool programs ever traced.
+        packed_stats = _pack_stats(ex2)
+        for name, st in (("padded", padded_stats), ("packed", packed_stats)):
+            rows.add(f"server/packing/{name}", st["waste"] * 1e6,
+                     f"padding_waste_frac={st['waste']:.4f};"
+                     f"recompile_count={st['compiles']};"
+                     f"real_tokens={st['real']};pad_tokens={st['pad']}")
     finally:
         server.stop(drain=False, timeout=5.0)
         ex2.close()

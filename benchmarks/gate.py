@@ -43,7 +43,7 @@ import io
 import json
 import sys
 
-DEFAULT_ONLY = "incremental,controller,transport,server"
+DEFAULT_ONLY = "incremental,controller,transport,server,kernels"
 DEFAULT_TOL = 0.20
 
 
@@ -110,11 +110,25 @@ def extract_metrics(rows: list) -> dict:
             # per-front-end vs shared worker channels (recorded, not
             # gated: worker-subprocess wall clock on shared runners)
             metrics["fleet_remote_channel_ratio"] = d["p99_ratio"]
+        elif name == "kernels/fragment/packed":
+            # ragged fragment execution on the serving hot path: packed
+            # wall clock per mixed-length round (micro-bench scale)
+            metrics["fragment_exec_ms"] = d["fragment_exec_ms"]
+        elif name == "server/packing/packed":
+            # end-to-end packing efficiency of the serving runtime —
+            # the two counters the ISSUE gates strictly below the
+            # pad-to-bucket baseline row (recorded alongside)
+            metrics["padding_waste_frac"] = d["padding_waste_frac"]
+            metrics["recompile_count"] = d["recompile_count"]
+        elif name == "server/packing/padded":
+            metrics["padded_waste_frac"] = d["padding_waste_frac"]
+            metrics["padded_recompile_count"] = d["recompile_count"]
     return metrics
 
 
 GATED_PREFIXES = ("planner_latency_us/", "slo_attainment/")
-GATED_KEYS = ("server_p99_ms",)
+GATED_KEYS = ("server_p99_ms", "fragment_exec_ms", "padding_waste_frac",
+              "recompile_count")
 
 
 def _gated(key: str) -> bool:
@@ -152,6 +166,32 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
                 failures.append(
                     f"{key}: {cur:.2f} ms vs baseline {base:.2f} ms "
                     f"(>{wide:.0%} slower)")
+        elif key == "fragment_exec_ms":
+            # packed-round wall clock: micro-bench on shared runners —
+            # same wide band as server_p99_ms, catches step functions
+            # (packing silently off, per-depth recompiles back)
+            wide = 2.5 * tol
+            if cur > base * (1 + wide):
+                failures.append(
+                    f"{key}: {cur:.3f} ms vs baseline {base:.3f} ms "
+                    f"(>{wide:.0%} slower)")
+        elif key == "padding_waste_frac":
+            # a FRACTION of a deterministic traffic mix, not wall clock:
+            # additive band. +0.05 absolute means the bucket policy or
+            # the tail-pad accounting changed, not runner noise.
+            if cur > base + 0.05:
+                failures.append(
+                    f"{key}: {cur:.4f} vs baseline {base:.4f} "
+                    f"(> +0.05 absolute)")
+        elif key == "recompile_count":
+            # distinct traced shapes over a deterministic run: integer,
+            # near-deterministic. Small slack (+2) for batch-close
+            # timing races in the pipelined phase; anything above means
+            # the compile-cache keying regressed.
+            if cur > base * (1 + tol) + 2:
+                failures.append(
+                    f"{key}: {cur:.0f} compiles vs baseline {base:.0f} "
+                    f"(> base*(1+{tol:.0%})+2)")
         # other metrics: recorded, not gated
     return failures
 

@@ -9,6 +9,9 @@
 #   ./scripts/ci.sh --bench-gate   # quick benches -> BENCH_ci.json, fail on
 #                                  # >20% planner-latency / SLO-attainment
 #                                  # regression vs benchmarks/baseline.json
+#   ./scripts/ci.sh --write-baseline  # refresh benchmarks/baseline.json on a
+#                                  # quiet machine (run at the commit being
+#                                  # blessed, eyeball the diff, check it in)
 #   ./scripts/ci.sh --remote-smoke # multi-host-shaped serve loop: 2 front-ends
 #                                  # over the SOCKET executor (worker
 #                                  # subprocesses dialing back to
@@ -18,9 +21,14 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+if [[ "${1:-}" == "--write-baseline" ]]; then
+    python -m benchmarks.gate --write-baseline
+    exit $?
+fi
+
 if [[ "${1:-}" == "--bench-gate" ]]; then
     python -m benchmarks.gate \
-        --only incremental,controller,transport,server,fleet,fleet_remote \
+        --only incremental,controller,transport,server,fleet,fleet_remote,kernels \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
     exit $?
 fi
@@ -48,12 +56,14 @@ if [[ "${1:-}" != "--tests" ]]; then
     python -m repro.launch.serve --serve-loop --execute inprocess \
         --serve-seconds 2 --clients 2 --frontends 2
     # BLOCKING bench gate on the fast suites: planner latency, controller
-    # SLO attainment, and the server_p99_ms serving-runtime tail (the
-    # slow transport/fleet benches stay in the non-blocking --bench-gate
-    # job; missing non-gated baseline keys do not fail a subset run).
+    # SLO attainment, the server_p99_ms serving-runtime tail, and the
+    # ragged-execution keys (fragment_exec_ms / padding_waste_frac /
+    # recompile_count from the kernels + server packing rows). The slow
+    # transport/fleet benches stay in the non-blocking --bench-gate job;
+    # missing non-gated baseline keys do not fail a subset run.
     # Wider tolerance than the trend-tracking job: a blocking gate on a
     # small shared runner must only trip on step-function regressions.
-    python -m benchmarks.gate --only incremental,controller,server \
+    python -m benchmarks.gate --only incremental,controller,server,kernels \
         --tolerance 0.35 \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
 fi

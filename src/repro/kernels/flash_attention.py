@@ -27,9 +27,14 @@ DEFAULT_BQ = 256
 DEFAULT_BK = 256
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                 scale: float, causal: bool, window: int,
-                 bq: int, bk: int, n_kv: int):
+def _attn_kernel(*refs, scale: float, causal: bool, window: int,
+                 bq: int, bk: int, n_kv: int, has_seg: bool = False):
+    if has_seg:
+        (q_ref, k_ref, v_ref, sq_ref, sk_ref,
+         o_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+        sq_ref = sk_ref = None
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -64,6 +69,10 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             mask &= kpos <= qpos
         if window:
             mask &= (qpos - kpos) < window
+        if has_seg:
+            sq = sq_ref[0, :]                          # (bq,) int32
+            sk = sk_ref[0, :]                          # (bk,) int32
+            mask &= sq[:, None] == sk[None, :]
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]                                # (bq, 1)
@@ -85,7 +94,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "scale", "block_q", "block_k", "interpret"))
-def flash_attention(q: Array, k: Array, v: Array, *,
+def flash_attention(q: Array, k: Array, v: Array,
+                    segment_ids: Optional[Array] = None, *,
                     causal: bool = True, window: int = 0,
                     scale: Optional[float] = None,
                     block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
@@ -93,6 +103,10 @@ def flash_attention(q: Array, k: Array, v: Array, *,
     """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd).
 
     Positions are implicit (q token i is global position i) — the prefill case.
+
+    segment_ids (B, S) int32 (self-attention, Sq == Sk): sequence-packed
+    batches — scores are masked to segment equality so packed requests
+    never attend across each other. Pad tokens carry their own id.
     """
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
@@ -109,15 +123,27 @@ def flash_attention(q: Array, k: Array, v: Array, *,
     grid = (B, H, Sq // bq, Sk // bk)
     group = H // KV
 
+    has_seg = segment_ids is not None
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // group, j, 0)),
+        pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // group, j, 0)),
+    ]
+    operands = [qt, kt, vt]
+    if has_seg:
+        assert Sq == Sk, "segment_ids require self-attention (Sq == Sk)"
+        seg = segment_ids.astype(jnp.int32)
+        # the same (B, S) array feeds a q-block view and a k-block view
+        in_specs += [pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
+                     pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j))]
+        operands += [seg, seg]
+
     out = pl.pallas_call(
         functools.partial(_attn_kernel, scale=scale, causal=causal,
-                          window=window, bq=bq, bk=bk, n_kv=KV),
+                          window=window, bq=bq, bk=bk, n_kv=KV,
+                          has_seg=has_seg),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // group, j, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // group, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
         scratch_shapes=[
@@ -126,5 +152,5 @@ def flash_attention(q: Array, k: Array, v: Array, *,
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(qt, kt, vt)
+    )(*operands)
     return out.transpose(0, 2, 1, 3)

@@ -60,19 +60,32 @@ def _resolve(impl: Optional[str]) -> str:
 def attention(q: Array, k: Array, v: Array, *,
               causal: bool = True, window: int = 0,
               scale: Optional[float] = None,
+              seg_ids: Optional[Array] = None,
               impl: Optional[str] = None) -> Array:
-    """Prefill/training attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
+    """Prefill/training attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd).
+
+    seg_ids (B, S) int32: sequence-packing segment mask for ragged
+    batches (``models.packed``) — attention stays within segments.
+    """
     impl = _resolve(impl)
     if impl == "naive":
         return _ref.ref_attention(q, k, v, causal=causal, window=window,
+                                  seg_q=seg_ids, seg_kv=seg_ids,
                                   scale=scale)
     if impl == "reference":
         return _ref.chunked_attention(q, k, v, causal=causal, window=window,
-                                      scale=scale)
+                                      seg_ids=seg_ids, scale=scale)
     interp = impl == "pallas_interpret"
     Sq, Sk = q.shape[1], k.shape[1]
     bq = _pick_block(Sq, 256)
     bk = _pick_block(Sk, 256)
+    if seg_ids is not None:
+        # packed serving path: forward-only flash kernel with the segment
+        # mask (the custom_vjp trainable variant has no segment operand —
+        # packed execution is inference, nothing differentiates it)
+        return flash_attention(q, k, v, seg_ids, causal=causal,
+                               window=window, scale=scale,
+                               block_q=bq, block_k=bk, interpret=interp)
     # the trainable (custom_vjp) variant so jax.grad flows through the
     # Pallas fwd/bwd kernels rather than failing to differentiate pallas_call
     from repro.kernels.flash_attention_bwd import flash_attention_trainable

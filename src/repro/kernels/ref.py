@@ -55,9 +55,18 @@ def _mask(q_pos: Array, kv_pos: Array, *, causal: bool, window: int) -> Array:
 def ref_attention(q: Array, k: Array, v: Array, *,
                   q_pos: Optional[Array] = None,
                   kv_pos: Optional[Array] = None,
+                  seg_q: Optional[Array] = None,
+                  seg_kv: Optional[Array] = None,
                   causal: bool = True, window: int = 0,
                   scale: Optional[float] = None) -> Array:
-    """Naive full-materialisation attention — the oracle."""
+    """Naive full-materialisation attention — the oracle.
+
+    seg_q/seg_kv (B, Sq)/(B, Sk) int32: sequence-packing segment ids —
+    attention is confined to seg_q == seg_kv. Positions stay GLOBAL
+    packed coordinates: with contiguous segments, global causal/window
+    distances inside a segment equal the within-segment ones, so only
+    RoPE (applied by the caller) needs per-segment positions.
+    """
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     if q_pos is None:
@@ -66,7 +75,10 @@ def ref_attention(q: Array, k: Array, v: Array, *,
         kv_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
     scale = scale if scale is not None else hd ** -0.5
     s = _gqa_scores(q, k) * scale                       # (B,H,Sq,Sk) fp32
-    m = _mask(q_pos, kv_pos, causal=causal, window=window)[:, None]
+    m = _mask(q_pos, kv_pos, causal=causal, window=window)
+    if seg_q is not None:
+        m &= seg_q[:, :, None] == seg_kv[:, None, :]
+    m = m[:, None]
     s = jnp.where(m, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     # rows with no valid kv produce uniform junk; zero them for determinism
@@ -80,6 +92,7 @@ def ref_attention(q: Array, k: Array, v: Array, *,
 def chunked_attention(q: Array, k: Array, v: Array, *,
                       q_pos: Optional[Array] = None,
                       kv_pos: Optional[Array] = None,
+                      seg_ids: Optional[Array] = None,
                       causal: bool = True, window: int = 0,
                       scale: Optional[float] = None,
                       q_chunk: int = 1024) -> Array:
@@ -87,31 +100,51 @@ def chunked_attention(q: Array, k: Array, v: Array, *,
 
     Peak score memory is (B, H, q_chunk, Sk) instead of (B, H, Sq, Sk).
     Used as the model-side attention on CPU and in the dry-run.
+    seg_ids (B, S): self-attention segment mask for packed batches.
     """
     B, Sq, H, hd = q.shape
     if Sq <= q_chunk:
         return ref_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                             seg_q=seg_ids, seg_kv=seg_ids,
                              causal=causal, window=window, scale=scale)
     if q_pos is None:
         q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
     if kv_pos is None:
         kv_pos = jnp.broadcast_to(jnp.arange(k.shape[1], dtype=jnp.int32)[None],
                                   (B, k.shape[1]))
+    seg_kv = seg_ids
     pad = (-Sq) % q_chunk
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=0)
+        if seg_ids is not None:
+            # pad q rows with a segment id no kv row carries: fully
+            # masked rows, zeroed by the oracle's all-masked guard
+            seg_ids = jnp.pad(seg_ids, ((0, 0), (0, pad)),
+                              constant_values=-2)
     n = q.shape[1] // q_chunk
     qs = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
     qp = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
 
-    def body(carry, xs):
-        qc, qpc = xs
-        o = ref_attention(qc, k, v, q_pos=qpc, kv_pos=kv_pos,
-                          causal=causal, window=window, scale=scale)
-        return carry, o
+    if seg_ids is None:
+        def body(carry, xs):
+            qc, qpc = xs
+            o = ref_attention(qc, k, v, q_pos=qpc, kv_pos=kv_pos,
+                              causal=causal, window=window, scale=scale)
+            return carry, o
 
-    _, outs = jax.lax.scan(body, None, (qs, qp))
+        _, outs = jax.lax.scan(body, None, (qs, qp))
+    else:
+        sq = seg_ids.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            qc, qpc, sqc = xs
+            o = ref_attention(qc, k, v, q_pos=qpc, kv_pos=kv_pos,
+                              seg_q=sqc, seg_kv=seg_kv,
+                              causal=causal, window=window, scale=scale)
+            return carry, o
+
+        _, outs = jax.lax.scan(body, None, (qs, qp, sq))
     out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n * q_chunk, H, hd)
     return out[:, :Sq]
 

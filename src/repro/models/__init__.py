@@ -4,11 +4,15 @@ from repro.models.transformer import (
     embed_tokens, unembed,
 )
 from repro.models.decode import init_cache, prefill, decode_step, cache_len_for
+from repro.models.packed import (is_packable, pack_segments,
+                                 packed_fragment_fn, run_fragment_packed)
 from repro.models.stubs import extras_shapes, make_extras
 
 __all__ = [
     "init_params", "forward", "fragment_forward", "run_fragment",
     "n_fragment_units", "embed_tokens", "unembed",
     "init_cache", "prefill", "decode_step", "cache_len_for",
+    "is_packable", "pack_segments", "packed_fragment_fn",
+    "run_fragment_packed",
     "extras_shapes", "make_extras",
 ]

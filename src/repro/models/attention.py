@@ -67,10 +67,14 @@ def attn_forward(p: dict, cfg: ModelConfig, x: Array, *,
                  window: int = 0, causal: bool = True,
                  positions: Optional[Array] = None,
                  kv_src: Optional[Array] = None,
+                 seg_ids: Optional[Array] = None,
                  return_kv: bool = False):
     """Full-sequence attention (training / prefill / fragment execution).
 
     kv_src: source sequence for cross-attention (no RoPE applied on cross).
+    seg_ids: (B, S) int32 segment ids for sequence-packed batches — tokens
+    only attend within their segment (pass packed per-segment positions
+    too so RoPE restarts at each boundary).
     return_kv: also return the (rope'd) k, v — used by prefill to fill caches.
     """
     from repro.distributed.actspec import constrain_batch
@@ -87,7 +91,8 @@ def attn_forward(p: dict, cfg: ModelConfig, x: Array, *,
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
     o = ops.attention(q, k, v, causal=causal and not cross,
-                      window=0 if cross else window)
+                      window=0 if cross else window,
+                      seg_ids=None if cross else seg_ids)
     out = o.reshape(B, S, -1) @ p["wo"]
     if return_kv:
         return out, (k, v)

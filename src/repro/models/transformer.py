@@ -118,8 +118,15 @@ def init_params(key, cfg: ModelConfig) -> dict:
 def block_forward(p: dict, cfg: ModelConfig, x: Array, *,
                   window: int = 0, causal: bool = True,
                   memory: Optional[Array] = None,
-                  kind: str = "self") -> tuple[Array, Array]:
-    """One block, full sequence. Returns (x, moe_aux)."""
+                  kind: str = "self",
+                  seg_ids: Optional[Array] = None,
+                  positions: Optional[Array] = None) -> tuple[Array, Array]:
+    """One block, full sequence. Returns (x, moe_aux).
+
+    seg_ids/positions (B, S) carry the sequence-packed layout
+    (``models.packed``): attention is masked to segment boundaries and
+    RoPE restarts per segment. None = the ordinary unpacked batch.
+    """
     aux = jnp.zeros((), jnp.float32)
     if cfg.family == "ssm":
         y, _, _ = rwkv_mod.time_mix_forward(
@@ -137,7 +144,8 @@ def block_forward(p: dict, cfg: ModelConfig, x: Array, *,
             * nn.apply_mlp(p["mlp"], cfg, h)
         return x, aux
     h = nn.apply_norm(p["ln1"], cfg, x)
-    y = attn.attn_forward(p["attn"], cfg, h, window=window, causal=causal)
+    y = attn.attn_forward(p["attn"], cfg, h, window=window, causal=causal,
+                          positions=positions, seg_ids=seg_ids)
     if cfg.family == "hybrid":
         y = 0.5 * (y + ssm_mod.ssm_forward(p["ssm"], cfg, h))
     x = x + y
@@ -156,14 +164,17 @@ def block_forward(p: dict, cfg: ModelConfig, x: Array, *,
 def stack_forward(blocks: PyTree, cfg: ModelConfig, x: Array, *,
                   window: int = 0, causal: bool = True,
                   memory: Optional[Array] = None, kind: str = "self",
-                  remat: bool = False) -> tuple[Array, Array]:
+                  remat: bool = False,
+                  seg_ids: Optional[Array] = None,
+                  positions: Optional[Array] = None) -> tuple[Array, Array]:
     """scan blocks over the leading layer axis. Returns (x, total_moe_aux)."""
     from repro.distributed.actspec import constrain
 
     def body(carry, p_l):
         h, aux = carry
         h, a = block_forward(p_l, cfg, h, window=window, causal=causal,
-                             memory=memory, kind=kind)
+                             memory=memory, kind=kind,
+                             seg_ids=seg_ids, positions=positions)
         return (constrain(h), aux + a), None
 
     fn = _maybe_remat(body, remat)

@@ -48,6 +48,8 @@ class BatchItem:
     enqueued_ms: float = 0.0
     hop_charge_ms: float = 0.0       # uplink time this item will serialize
                                      # on the pool's channel (stage 0 only)
+    n_tokens: int = 0                # sequence length of the payload (what
+                                     # a token-budget batch close counts)
 
 
 @dataclass
@@ -56,6 +58,7 @@ class BatcherStats:
     n_items: int = 0
     closed_full: int = 0             # batches closed by max_batch
     closed_deadline: int = 0         # batches closed by flush-deadline expiry
+    closed_tokens: int = 0           # batches closed by the token budget
     batch_sizes: deque = field(     # recent sizes only; totals above
         default_factory=lambda: deque(maxlen=MAX_BATCH_SIZE_SAMPLES))
 
@@ -73,15 +76,21 @@ class MicroBatcher:
     requests are waiting on it).
     """
 
-    def __init__(self, max_batch: int = 1):
+    def __init__(self, max_batch: int = 1, *, max_tokens: int = 0):
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._heap: list = []                    # (flush_ms, seq, item)
         self._seq = itertools.count()
         self._max_batch = max(int(max_batch), 1)
+        # token budget: 0 disables. When set, a batch also closes once the
+        # queued items' summed ``n_tokens`` reaches the budget — the close
+        # policy for packed (ragged) pools, where the cost of a batch is
+        # its token count, not its request count.
+        self._max_tokens = max(int(max_tokens), 0)
         self._stopped = False
         self._paused = False                     # test hook: hold batches
         self._pending_hop_ms = 0.0               # sum of queued hop charges
+        self._pending_tokens = 0                 # sum of queued n_tokens
         self.stats = BatcherStats()
 
     # ------------------------------------------------------------ intake
@@ -89,6 +98,7 @@ class MicroBatcher:
         with self._cond:
             heapq.heappush(self._heap, (item.flush_ms, next(self._seq), item))
             self._pending_hop_ms += item.hop_charge_ms
+            self._pending_tokens += item.n_tokens
             self._cond.notify_all()
 
     def put_many(self, items) -> None:
@@ -97,6 +107,7 @@ class MicroBatcher:
                 heapq.heappush(self._heap,
                                (item.flush_ms, next(self._seq), item))
                 self._pending_hop_ms += item.hop_charge_ms
+                self._pending_tokens += item.n_tokens
             self._cond.notify_all()
 
     @property
@@ -112,28 +123,46 @@ class MicroBatcher:
         if self._paused or not self._heap:
             return False
         return (len(self._heap) >= self._max_batch
+                or (self._max_tokens
+                    and self._pending_tokens >= self._max_tokens)
                 or self._heap[0][0] <= now_ms)
 
     def pop_ready(self, now_ms: float) -> list:
         """Close and return one batch if the policy says so, else [].
 
-        A batch closes when ``max_batch`` items are queued OR the
-        earliest flush deadline has passed; items leave in EDF order.
+        A batch closes when ``max_batch`` items are queued, the token
+        budget is reached (``max_tokens`` > 0), OR the earliest flush
+        deadline has passed; items leave in EDF order. A token-budget
+        close also bounds the batch it pops: items are taken until the
+        budget would be exceeded (always at least one), so a burst of
+        long sequences cannot close into one oversized program call.
         """
         with self._cond:
             if not self._ready_locked(now_ms):
                 return []
             by_full = len(self._heap) >= self._max_batch
-            batch = [heapq.heappop(self._heap)[2]
-                     for _ in range(min(self._max_batch, len(self._heap)))]
+            by_tokens = bool(self._max_tokens
+                             and self._pending_tokens >= self._max_tokens)
+            batch, tokens = [], 0
+            while self._heap and len(batch) < self._max_batch:
+                nxt = self._heap[0][2]
+                if (self._max_tokens and batch
+                        and tokens + nxt.n_tokens > self._max_tokens):
+                    break
+                batch.append(heapq.heappop(self._heap)[2])
+                tokens += nxt.n_tokens
             self._pending_hop_ms -= sum(it.hop_charge_ms for it in batch)
+            self._pending_tokens -= tokens
             if not self._heap:
                 self._pending_hop_ms = 0.0       # no queue, no drift
+                self._pending_tokens = 0
             self.stats.n_batches += 1
             self.stats.n_items += len(batch)
             self.stats.batch_sizes.append(len(batch))
             if by_full:
                 self.stats.closed_full += 1
+            elif by_tokens:
+                self.stats.closed_tokens += 1
             else:
                 self.stats.closed_deadline += 1
             return batch
@@ -189,6 +218,7 @@ class MicroBatcher:
         with self._cond:
             out = [heapq.heappop(self._heap)[2] for _ in range(len(self._heap))]
             self._pending_hop_ms = 0.0
+            self._pending_tokens = 0
             return out
 
     def next_flush_ms(self) -> Optional[float]:
@@ -216,6 +246,42 @@ def bucket_size(n: int, max_batch: int) -> int:
     while b < n:
         b <<= 1
     return min(b, cap)
+
+
+def seq_bucket(n_tokens: int, *, floor: int = 8) -> int:
+    """Sequence-length bucket: the smallest power of two >= ``n_tokens``
+    (>= ``floor``). The pad-to-bucket fallback path pads each payload's
+    token axis to this bucket before stacking, so a pool serving mixed
+    lengths sees O(log(max_len)) distinct sequence shapes instead of one
+    re-trace per length the traffic happens to produce."""
+    n = max(int(n_tokens), 1)
+    b = max(int(floor), 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
+def token_bucket(n_tokens: int, *, floor: int = 8, step: int = 16) -> int:
+    """Packed-buffer bucket: total token target for a sequence-packed
+    batch. Totals at or under ``floor`` get the floor bucket (a lone
+    short request must not double its cost); everything else rounds UP
+    to the next multiple of ``step``. The packed path concatenates
+    heterogeneous-length payloads along the token axis and pads ONLY
+    the tail up to this bucket, so waste is bounded by ``step - 1``
+    tokens *per flush* no matter how the batch mixes — strictly tighter
+    than per-request pad-to-bucket, whose waste scales with the batch.
+    Multiples (not powers of two like :func:`seq_bucket`) keep that
+    bound flat as totals grow, and the distinct-shape count stays at
+    ``~max_total/step + 1`` — below the padded path's seq-buckets x
+    batch-buckets product — because totals are capped by the pool's
+    batch times the max request length. There is no batch cap: the
+    budget is tokens, not rows."""
+    n = max(int(n_tokens), 1)
+    f = max(int(floor), 1)
+    if n <= f:
+        return f
+    s = max(int(step), 1)
+    return ((n + s - 1) // s) * s
 
 
 def hopeless(now_ms: float, deadline_ms: float,

@@ -42,8 +42,10 @@ from repro.core.planner import ExecutionPlan
 from repro.core.placement import MOVE, migrate, place_pools
 from repro.core.plandiff import diff_plans, plan_pools, PlanDiff, PoolSpec
 from repro.core.repartition import pool_key
-from repro.models import run_fragment
-from repro.serving.batcher import bucket_size
+from repro.models import n_fragment_units, run_fragment
+from repro.models.packed import (is_packable, pack_segments,
+                                 packed_fragment_fn)
+from repro.serving.batcher import bucket_size, seq_bucket, token_bucket
 from repro.serving.simulator import _routing
 from repro.serving.transport import (Channel, InProcessTransport, Transport,
                                      error_reply)
@@ -67,6 +69,26 @@ def pool_endpoint(key: tuple) -> str:
     return f"pool/{model}/{start}-{end}"
 
 
+def _extras_sig(extras: Optional[dict]) -> tuple:
+    """Batchability signature of a request's extras: keys AND array
+    shapes/dtypes. Requests batch together only when their extras are
+    layout-compatible — and the compile-count key includes this, so
+    extras-shape churn is counted as the retrace it really causes."""
+    if not extras:
+        return ()
+    return tuple(sorted((k, tuple(np.shape(v)), str(np.asarray(v).dtype))
+                        for k, v in extras.items()))
+
+
+def _jit_cache_size(fn) -> Optional[int]:
+    """Number of compiled entries in a jitted function's cache, or None
+    when the jax version doesn't expose it."""
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return None
+
+
 class FragmentInstance:
     """One stage pool: jitted fragment program + a batching queue.
 
@@ -77,7 +99,8 @@ class FragmentInstance:
     """
 
     def __init__(self, params, cfg: ModelConfig, spec: PoolSpec,
-                 *, pad_buckets: bool = True, chips=None):
+                 *, pad_buckets: bool = True, packed: bool = True,
+                 chips=None):
         self.cfg = cfg
         self.key = spec.key
         self.start, self.end = spec.start, spec.end
@@ -87,6 +110,11 @@ class FragmentInstance:
         # contract is uniform: batch 0 <=> intake refused
         self.draining = spec.batch == 0
         self.pad_buckets = pad_buckets
+        # sequence-packed ragged execution for batchable families; the
+        # pad-to-bucket path stays the fallback for extras-carrying and
+        # grouping-sensitive configs (models.packed.is_packable)
+        self.packed = packed and is_packable(cfg)
+        self._units = n_fragment_units(cfg)
         self.chips: list = list(chips) if chips else []   # placement binding
         self._fn = jax.jit(functools.partial(
             run_fragment, cfg=cfg, start=spec.start, end=spec.end))
@@ -94,6 +122,8 @@ class FragmentInstance:
         self.queue: list = []
         self.n_batches = 0
         self.n_compiles = 0
+        self.real_tokens = 0          # payload tokens actually requested
+        self.pad_tokens = 0           # bucket-padding tokens executed
         self._shapes_seen: set = set()
 
     def retarget(self, spec: PoolSpec) -> None:
@@ -115,33 +145,119 @@ class FragmentInstance:
         Batch is clamped to >= 1 here so a zero/negative batch can never
         spin the dequeue loop without making progress.
 
-        Partial batches are padded to power-of-two buckets (capped at the
-        planned batch) by replicating the last payload; pad rows are
-        sliced off before results leave the pool. The jitted program then
-        sees at most ~log2(batch)+1 shapes instead of one re-trace per
-        queue length — what keeps replans from churning the compile
-        cache (``pad_buckets=False`` restores the exact-shape behavior).
+        Each chunk is grouped by extras signature (keys + array
+        shapes/dtypes): requests with differing extras NEVER share an
+        execution — each group runs under its own stacked extras.
+
+        Packable groups (``self.packed``) run sequence-packed: payloads
+        concatenate along the token axis with segment boundaries, only
+        the tail pads to a quantized token bucket (``token_bucket``),
+        and ONE depth-keyed compiled program serves every batch mix.
+        The rest
+        take the pad-to-bucket path: each payload pads to its
+        power-of-two sequence bucket, same-shape payloads stack, and the
+        batch pads to a power-of-two bucket (capped at the planned
+        batch) by replicating the last row; pad rows/tokens are sliced
+        off before results leave the pool (``pad_buckets=False``
+        restores exact shapes on both paths).
         """
         out = []
         step = max(self.batch, 1)
         while self.queue:
             chunk = self.queue[:step]
             del self.queue[:step]
-            payloads = [p for _, p in chunk]
-            if self.pad_buckets:
-                tgt = bucket_size(len(chunk), step)
-                payloads.extend(payloads[-1:] * (tgt - len(chunk)))
-            stacked = jnp.stack(payloads)
-            extras = chunk[0][0].extras
-            shape = (stacked.shape, tuple(sorted(extras)) if extras else ())
-            if shape not in self._shapes_seen:
-                self._shapes_seen.add(shape)
-                self.n_compiles += 1          # new trace for this shape
-            y = self._fn(self._params, inputs=stacked, extras=extras)
-            self.n_batches += 1
-            for i, (req, _) in enumerate(chunk):
-                out.append((req, y[i]))
+            groups: dict = {}
+            for req, payload in chunk:
+                groups.setdefault(_extras_sig(req.extras), []).append(
+                    (req, payload))
+            for sig, grp in groups.items():
+                if self.packed and not sig:
+                    out.extend(self._run_packed(grp))
+                else:
+                    out.extend(self._run_padded(sig, grp))
         return out
+
+    def _call_counted(self, fn, *args, shape_key, **kwargs):
+        """Invoke a jitted program, counting ACTUAL compile events via
+        the jit cache-size delta (falls back to first-sighting of the
+        full shape key — which includes extras shapes/dtypes — when the
+        jax version hides the cache)."""
+        before = _jit_cache_size(fn)
+        y = fn(*args, **kwargs)
+        after = _jit_cache_size(fn)
+        if before is not None and after is not None:
+            self.n_compiles += max(after - before, 0)
+            self._shapes_seen.add(shape_key)
+        elif shape_key not in self._shapes_seen:
+            self._shapes_seen.add(shape_key)
+            self.n_compiles += 1
+        return y
+
+    def _run_packed(self, grp: list) -> list:
+        """Sequence-packed execution of one extras-free group."""
+        payloads = [jnp.asarray(p) for _, p in grp]
+        lengths = [int(p.shape[0]) for p in payloads]
+        total = sum(lengths)
+        T = token_bucket(total) if self.pad_buckets else total
+        seg, pos, cu = pack_segments(lengths, T)
+        cat = jnp.concatenate(payloads, axis=0)
+        if T > total:
+            cat = jnp.pad(cat, ((0, T - total),) + ((0, 0),) * (cat.ndim - 1))
+        fn = packed_fragment_fn(self.cfg, self.end - self.start,
+                                self.start == 0, self.end == self._units)
+        y = self._call_counted(
+            fn, self._params, cat[None], jnp.asarray(seg)[None],
+            jnp.asarray(pos)[None], np.int32(self.start),
+            shape_key=("packed", tuple(cat.shape), str(cat.dtype)))
+        self.n_batches += 1
+        self.real_tokens += total
+        self.pad_tokens += T - total
+        return [(req, y[0, int(cu[i]):int(cu[i + 1])])
+                for i, (req, _) in enumerate(grp)]
+
+    def _run_padded(self, sig: tuple, grp: list) -> list:
+        """Pad-to-bucket execution of one extras-signature group, with
+        per-request extras stacked along the batch axis (never the first
+        request's extras applied to everyone)."""
+        by_shape: dict = {}
+        for req, payload in grp:
+            p = jnp.asarray(payload)
+            S = int(p.shape[0])
+            Sp = seq_bucket(S) if self.pad_buckets else S
+            by_shape.setdefault((Sp,) + tuple(p.shape[1:]), []).append(
+                (req, p, S))
+        out = []
+        for shp, items in by_shape.items():
+            Sp = shp[0]
+            padded = [jnp.pad(p, ((0, Sp - S),) + ((0, 0),) * (p.ndim - 1))
+                      if Sp != S else p for _, p, S in items]
+            n = len(padded)
+            tgt = bucket_size(n, max(self.batch, 1)) if self.pad_buckets \
+                else n
+            padded.extend(padded[-1:] * (tgt - n))
+            stacked = jnp.stack(padded)
+            extras = self._stack_extras([r.extras for r, _, _ in items], tgt)
+            y = self._call_counted(
+                self._fn, self._params, inputs=stacked, extras=extras,
+                shape_key=(tuple(stacked.shape), str(stacked.dtype), sig))
+            self.n_batches += 1
+            real = sum(S for _, _, S in items)
+            self.real_tokens += real
+            self.pad_tokens += tgt * Sp - real
+            out.extend((req, y[i, :S] if Sp != S else y[i])
+                       for i, (req, _, S) in enumerate(items))
+        return out
+
+    @staticmethod
+    def _stack_extras(extras_list: list, tgt: int) -> Optional[dict]:
+        """Stack per-request extras along the batch axis (replicating the
+        last request's extras for batch-bucket pad rows). All entries in
+        a group share one extras signature, so shapes line up."""
+        if not extras_list or not extras_list[0]:
+            return None
+        rows = list(extras_list) + [extras_list[-1]] * (tgt - len(extras_list))
+        return {k: jnp.concatenate([jnp.asarray(e[k]) for e in rows], axis=0)
+                for k in extras_list[0]}
 
 
 class PoolService:
@@ -210,6 +326,9 @@ class PoolService:
                     "queue_len": len(inst.queue),
                     "n_batches": inst.n_batches,
                     "n_compiles": inst.n_compiles,
+                    "real_tokens": inst.real_tokens,
+                    "pad_tokens": inst.pad_tokens,
+                    "packed": inst.packed,
                     "chips": list(inst.chips),
                     "draining": inst.draining}
         raise ValueError(f"unknown pool op {op!r}")
@@ -243,15 +362,21 @@ class PoolHandle:
         return self._check(reply)
 
     def submit(self, req_id: int, client: str, payload,
-               extras: Optional[dict] = None) -> tuple:
-        """Enqueue one payload; returns the measured (nbytes, ms) hop."""
+               extras: Optional[dict] = None) -> Optional[tuple]:
+        """Enqueue one payload; returns the measured (nbytes, ms) hop,
+        or None when the channel produced no sample for this request —
+        callers must SKIP recording then, never log a phantom (0, 0.0)
+        observation (which would seed the controller's bandwidth EWMA
+        with an infinite-bandwidth first contact)."""
         msg = {"op": "submit", "req_id": req_id, "client": client,
                "payload": np.asarray(payload), "extras": extras}
         with self._lock:
             reply = self.channel.request(msg)
             sample = self.channel.stats.samples[-1] \
-                if self.channel.stats.samples else (0.0, 0, 0.0)
+                if self.channel.stats.samples else None
         self._check(reply)
+        if sample is None:
+            return None
         _, nbytes, ms = sample
         return nbytes, ms
 
@@ -299,9 +424,11 @@ class GraftExecutor:
     with full wire framing)."""
 
     def __init__(self, plan: ExecutionPlan, params, cfg: ModelConfig,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None, *,
+                 packed: bool = True):
         self.cfg = cfg
         self.params = params
+        self.packed = packed
         self.transport = transport if transport is not None \
             else InProcessTransport()
         self._handles: dict[tuple, PoolHandle] = {}
@@ -324,7 +451,8 @@ class GraftExecutor:
     def _spawn_pool(self, spec: PoolSpec) -> PoolHandle:
         """Create a pool and return its handle. RemoteExecutor overrides
         this to spawn a worker subprocess instead."""
-        svc = PoolService(FragmentInstance(self.params, self.cfg, spec))
+        svc = PoolService(FragmentInstance(self.params, self.cfg, spec,
+                                           packed=self.packed))
         name = pool_endpoint(spec.key)
         self.transport.serve(name, svc.handle)
         return PoolHandle(spec.key, self.transport.connect(name))
@@ -464,9 +592,10 @@ class GraftExecutor:
             self._by_rid[rid] = req
             stage_of[rid] = 0
             chain = self._chains[req.client]
-            nbytes, ms = chain[0].submit(rid, req.client, payload,
-                                         extras=self._wire_extras(req))
-            self.uplink.append((req.client, nbytes, ms))
+            sample = chain[0].submit(rid, req.client, payload,
+                                     extras=self._wire_extras(req))
+            if sample is not None:          # unmeasured hop: record nothing
+                self.uplink.append((req.client, sample[0], sample[1]))
         # run chains to completion (stages are a DAG of depth <= 2). A
         # flush can return requests from OTHER chains whose earlier stage
         # fed this pool (a shared pool is depth 0 for anchor clients but

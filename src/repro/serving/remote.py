@@ -190,6 +190,7 @@ def _worker_loop(conn: socket.socket, connect_addr=None,
                                 n_instances=msg["n_instances"])
                 state.service = PoolService(
                     FragmentInstance(msg["params"], cfg, spec,
+                                     packed=bool(msg.get("packed", True)),
                                      chips=msg.get("chips")))
                 reply = {"ok": True, "pid": os.getpid()}
             except Exception as e:
@@ -512,10 +513,10 @@ class WorkerProc:
 
     # ------------------------------------------------------------- init
     def init(self, cfg_bytes: bytes, params_np, spec: PoolSpec,
-             chips=None) -> None:
+             chips=None, packed: bool = True) -> None:
         with self._lock:
             self._init_args = {"cfg": cfg_bytes, "params": params_np,
-                               "spec": spec,
+                               "spec": spec, "packed": bool(packed),
                                "chips": [int(c) for c in (chips or [])]}
             self._init_locked()
 
@@ -525,7 +526,8 @@ class WorkerProc:
         reply = self._main_raw.request({
             "op": "init", "cfg": a["cfg"], "params": a["params"],
             "key": list(spec.key), "share": spec.share, "batch": spec.batch,
-            "n_instances": spec.n_instances, "chips": a["chips"]})
+            "n_instances": spec.n_instances, "chips": a["chips"],
+            "packed": a.get("packed", True)})
         if not reply.get("ok"):
             raise RuntimeError(f"worker init for {spec.key} failed: "
                                f"{reply.get('error')}")
@@ -693,7 +695,8 @@ class RemoteExecutor(GraftExecutor):
                  advertise_host: str = "127.0.0.1",
                  launcher: Union[WorkerLauncher, Callable, None] = None,
                  per_frontend_channels: bool = True,
-                 max_respawns: int = 3, respawn_backoff_s: float = 0.05):
+                 max_respawns: int = 3, respawn_backoff_s: float = 0.05,
+                 packed: bool = True):
         self._workers: dict[tuple, WorkerProc] = {}
         self._cfg_bytes = pickle.dumps(cfg)
         self._params_np = _np_tree(params)
@@ -712,7 +715,7 @@ class RemoteExecutor(GraftExecutor):
                 f"wrapped in ShapedTransport), got {type(base).__name__}")
         self._shaper = tp if isinstance(tp, ShapedTransport) else None
         self._max_frame = base.max_frame_bytes
-        super().__init__(plan, params, cfg, transport=tp)
+        super().__init__(plan, params, cfg, transport=tp, packed=packed)
 
     def _launcher_for(self, key: tuple) -> Optional[WorkerLauncher]:
         if self._launcher is None or isinstance(self._launcher,
@@ -733,7 +736,7 @@ class RemoteExecutor(GraftExecutor):
             # birth (placement is transitioned before _deploy spawns);
             # the initial deploy binds right after packing instead
             w.init(self._cfg_bytes, self._params_np, spec,
-                   chips=self.chips_of(spec.key))
+                   chips=self.chips_of(spec.key), packed=self.packed)
         except Exception:
             w.shutdown()                 # the spawned proc must not leak
             raise

@@ -125,7 +125,8 @@ class PoolDriver(threading.Thread):
                          name=f"pool-driver-{key[0]}-{key[1]}-{key[2]}")
         self.server = server
         self.key = key
-        self.batcher = MicroBatcher(max_batch=max(spec.batch, 1))
+        self.batcher = MicroBatcher(max_batch=max(spec.batch, 1),
+                                    max_tokens=server.token_budget)
         self.model_est_ms = server._model_stage_cost(spec)
         self.exec_ewma_ms: Optional[float] = None   # measured batch wall
         self.busy_until_ms = 0.0     # estimated end of the batch in flight
@@ -188,6 +189,7 @@ class GraftServer:
                  ingest_threads: Optional[int] = None,
                  shed_policy: Optional[ShedPolicy] = None,
                  flush_safety_frac: float = 0.15,
+                 token_budget: int = 0,
                  name: str = "graft",
                  clock: Optional[Callable[[], float]] = None,
                  ctl_lock: Optional[threading.Lock] = None,
@@ -200,6 +202,10 @@ class GraftServer:
         self.cfg = executor.cfg
         self.name = name
         self.hop_default_ms = hop_default_ms
+        # token-budget-aware batching: > 0 closes a pool's batch when its
+        # pending payload TOKENS reach the budget, so packed buffers stay
+        # inside one compile bucket instead of growing with queue depth
+        self.token_budget = max(int(token_budget), 0)
         self._period_ms = getattr(controller, "control_period_ms", 250.0)
         self.waiting_grace_ms = waiting_grace_ms \
             if waiting_grace_ms is not None else 4.0 * self._period_ms
@@ -550,7 +556,8 @@ class GraftServer:
                     rid=rid, client=st.req.client, payload=payload,
                     flush_ms=now, deadline_ms=st.deadline_ms,
                     extras=self._wire_extras(st.req), boundary=key[1],
-                    enqueued_ms=now))
+                    enqueued_ms=now,
+                    n_tokens=int(np.shape(payload)[0])))
             return
         now = self.now_ms()
         # only stage 0 still faces the client uplink; deeper stages ride
@@ -568,7 +575,8 @@ class GraftServer:
             flush_ms=flush, deadline_ms=st.deadline_ms,
             extras=self._wire_extras(st.req), boundary=key[1],
             enqueued_ms=now,
-            hop_charge_ms=hop if st.stage == 0 else 0.0))
+            hop_charge_ms=hop if st.stage == 0 else 0.0,
+            n_tokens=int(np.shape(payload)[0])))
 
     # ------------------------------------------------------------ execute
     def _run_batch(self, driver: PoolDriver, batch: list):
@@ -623,10 +631,15 @@ class GraftServer:
                                       it, st, self.now_ms(),
                                       extra_ms=companions)):
                     continue
-                nbytes, ms = handle.submit(it.rid, it.client, it.payload,
-                                           extras=it.extras)
-                self.executor.record_uplink(it.client, nbytes, ms)
-                self._note_uplink(it.client, ms)
+                sample = handle.submit(it.rid, it.client, it.payload,
+                                       extras=it.extras)
+                if sample is not None:
+                    # no channel sample => nothing to record: a phantom
+                    # (0, 0.0) would seed the controller's bandwidth
+                    # estimate with an infinite-bandwidth observation
+                    nbytes, ms = sample
+                    self.executor.record_uplink(it.client, nbytes, ms)
+                    self._note_uplink(it.client, ms)
             if stage0:
                 t0 = self._perf()
                 results += handle.flush()

@@ -571,10 +571,13 @@ def test_pad_to_bucket_bounds_compile_count(smoke):
                             jnp.asarray(tok))
             inst.flush()
 
-    padded = FragmentInstance(params, cfg, spec)          # default: on
+    # packed=False pins the padded-batch path this test is about; the
+    # packed default buckets by token count instead of batch size
+    padded = FragmentInstance(params, cfg, spec, packed=False)
     feed(padded, [3, 4, 2, 3, 1])
     assert padded.n_compiles == 3                          # {4, 2, 1}
-    exact = FragmentInstance(params, cfg, spec, pad_buckets=False)
+    exact = FragmentInstance(params, cfg, spec, pad_buckets=False,
+                             packed=False)
     feed(exact, [3, 4, 2, 3, 1])
     assert exact.n_compiles == 4                           # {3, 4, 2, 1}
 
@@ -588,7 +591,7 @@ def test_pad_to_bucket_survives_replan_retarget(smoke):
     from repro.serving.executor import FragmentInstance, ServeRequest
     cfg, book, params = smoke
     spec = PoolSpec(key=(cfg.name, 0, 2), share=50, batch=4, n_instances=1)
-    inst = FragmentInstance(params, cfg, spec)
+    inst = FragmentInstance(params, cfg, spec, packed=False)
     tok = np.zeros(16, np.int32)
 
     def feed(sizes):
