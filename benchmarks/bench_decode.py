@@ -1,0 +1,170 @@
+"""Decode serving: continuous batching vs waved close-on-flush.
+
+Both phases run the SAME burst of autoregressive streams through the
+event-driven server over one full-range pool with a paged KV arena —
+the only difference is admission policy:
+
+  * **continuous** — ``decode_continuous=True``: new streams join the
+    RUNNING decode batch at step boundaries, the moment a slot (and KV
+    blocks) free up. TTFT is bounded by one step + one solo prefill.
+  * **waved** — ``decode_continuous=False``: a new wave is admitted only
+    once the previous batch fully drains, so a stream arriving just
+    after a wave starts waits out every resident stream's full decode.
+
+The headline derived keys — ``ttft_ms`` / ``tpot_ms`` /
+``kv_block_util_frac`` on the ``decode/serve/continuous`` row — are
+extracted by ``benchmarks.gate`` and BLOCK in ``scripts/ci.sh`` once
+baselined. The win condition the gate protects: continuous beats waved
+on TTFT at equal-or-better tokens/s.
+
+A third row exercises the arena's cross-request prefix sharing: the
+same prompt decoded back-to-back must hit the retained block index
+instead of re-prefilling.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+
+
+def _run_phase(cfg, book, params, frags, *, continuous: bool,
+               n_requests: int, seq_len: int, lens: tuple) -> dict:
+    from repro.serving.executor import GraftExecutor, ServeRequest
+    from repro.serving.server import GraftServer
+    from repro.serving.transport import InProcessTransport
+    from repro.serving.smoke import decode_plan
+
+    plan = decode_plan(cfg, book, frags, batch=4)
+    ex = GraftExecutor(plan, params, cfg, transport=InProcessTransport(),
+                       decode_ctx=64, kv_blocks=96, kv_block_tokens=4)
+    server = GraftServer(ex, book=book,
+                         decode_continuous=continuous).start()
+    rng = np.random.RandomState(7)
+    util_samples: list = []
+    stop_polling = threading.Event()
+
+    def poll_util():
+        # the deploy handle is a separate channel from the driver's, and
+        # PoolService serializes dispatch, so polling mid-run is safe
+        while not stop_polling.is_set():
+            for s in ex.pool_stats().values():
+                kv = s.get("kv")
+                if kv and kv["free_blocks"] < kv["n_blocks"]:
+                    util_samples.append(kv["util_frac"])
+            time.sleep(0.01)
+
+    try:
+        # warmup: pay the solo-prefill + batched-step compiles off-clock
+        w = ServeRequest(client=frags[0].client,
+                         tokens=rng.randint(0, cfg.vocab_size,
+                                            seq_len).astype(np.int32),
+                         max_new_tokens=2, tpot_budget_ms=1e6)
+        server.submit(w, 0, 1e6)
+        assert server.join(timeout=600.0)
+        mark = server.mark()
+        poller = threading.Thread(target=poll_util, daemon=True)
+        poller.start()
+        t0 = time.monotonic()
+        for i in range(n_requests):
+            f = frags[i % len(frags)]
+            # varied decode lengths are the point: slots free at different
+            # steps, so continuous admission can backfill mid-batch while
+            # waved admission must wait for the longest stream
+            req = ServeRequest(client=f.client,
+                               tokens=rng.randint(0, cfg.vocab_size,
+                                                  seq_len).astype(np.int32),
+                               max_new_tokens=int(lens[i % len(lens)]),
+                               tpot_budget_ms=1e6)
+            server.submit(req, 0, 1e6)
+            time.sleep(0.012)
+        assert server.join(timeout=600.0), "decode bench never drained"
+        wall_s = time.monotonic() - t0
+        stop_polling.set()
+        recs = [r for r in server.records(since=mark) if r.get("decode")]
+    finally:
+        stop_polling.set()
+        server.stop(drain=False, timeout=10.0)
+        ex.close()
+    ttft = np.array([r["ttft_ms"] for r in recs])
+    tpot = np.array([r["tpot_ms"] for r in recs if r["n_tokens"] > 1]
+                    or [0.0])
+    toks = int(sum(r["n_tokens"] for r in recs))
+    return {
+        "n": len(recs),
+        "wall_s": wall_s,
+        "ttft_ms": float(np.mean(ttft)),
+        "ttft_p99_ms": float(np.percentile(ttft, 99)),
+        "tpot_ms": float(np.mean(tpot)),
+        "toks_s": toks / max(wall_s, 1e-9),
+        "kv_block_util_frac": float(np.mean(util_samples))
+        if util_samples else 0.0,
+    }
+
+
+def _prefix_reuse(cfg, book, params, frags, *, seq_len: int) -> dict:
+    """Same prompt, back-to-back streams: the second admission must hit
+    the retained prefix index instead of re-prefilling."""
+    from repro.serving.executor import GraftExecutor
+    from repro.serving.transport import InProcessTransport
+    from repro.serving.smoke import decode_plan
+
+    plan = decode_plan(cfg, book, frags, batch=2)
+    ex = GraftExecutor(plan, params, cfg, transport=InProcessTransport(),
+                       decode_ctx=64, kv_blocks=32, kv_block_tokens=4)
+    try:
+        key = next(iter(ex.pool_specs()))
+        handle = ex.handle(key)
+        rng = np.random.RandomState(11)
+        toks = rng.randint(0, cfg.vocab_size, seq_len).astype(np.int32)
+        sig = (cfg.name, 0, 0)
+        for rid in (1, 2):
+            r = handle.decode_admit(rid, "c0", toks, 3, sig=sig)
+            assert r["admitted"]
+            while True:
+                rep = handle.decode_step()
+                if any(ev.get("done") for ev in rep["events"]):
+                    break
+        kv = handle.stats()["kv"]
+    finally:
+        ex.close()
+    return kv
+
+
+def run(rows: Rows, quick: bool = False) -> None:
+    from repro.serving.smoke import smoke_fragments, smoke_setup
+
+    seq_len = 12
+    lens = (3, 5, 8, 12) if quick else (3, 5, 8, 12, 16, 20)
+    n_requests = 10 if quick else 16
+    cfg, book, params = smoke_setup(seq_len=seq_len, seed=0)
+    frags = smoke_fragments(cfg, 3, seed=0)
+
+    results = {}
+    for mode, continuous in (("continuous", True), ("waved", False)):
+        t0 = time.perf_counter()
+        r = _run_phase(cfg, book, params, frags, continuous=continuous,
+                       n_requests=n_requests, seq_len=seq_len, lens=lens)
+        results[mode] = r
+        rows.add(f"decode/serve/{mode}",
+                 (time.perf_counter() - t0) * 1e6 / max(r["n"], 1),
+                 f"ttft_ms={r['ttft_ms']:.2f}"
+                 f";ttft_p99_ms={r['ttft_p99_ms']:.2f}"
+                 f";tpot_ms={r['tpot_ms']:.2f}"
+                 f";toks_s={r['toks_s']:.1f}"
+                 f";kv_block_util_frac={r['kv_block_util_frac']:.4f}"
+                 f";n={r['n']}")
+    c, w = results["continuous"], results["waved"]
+    rows.add("decode/win", 0.0,
+             f"ttft_ratio={c['ttft_ms'] / max(w['ttft_ms'], 1e-9):.3f}"
+             f";toks_ratio={c['toks_s'] / max(w['toks_s'], 1e-9):.3f}")
+
+    kv = _prefix_reuse(cfg, book, params, frags, seq_len=seq_len)
+    rows.add("decode/prefix/reuse", 0.0,
+             f"prefix_hits={kv['prefix_hits']}"
+             f";prefix_tokens_reused={kv['prefix_tokens_reused']}"
+             f";evictions={kv['evictions']}"
+             f";cow_copies={kv['cow_copies']}")

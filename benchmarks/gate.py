@@ -21,6 +21,13 @@ are *blocking*):
                                gained the key (PR 4) — ``scripts/ci.sh``
                                runs this gate in the default (blocking)
                                job.
+  * ``ttft_ms`` / ``tpot_ms`` / ``kv_block_util_frac`` — decode serving
+                               (``benchmarks/bench_decode.py``,
+                               continuous-batching phase): first-token
+                               and per-token wall clock gate like
+                               server_p99_ms (wide band); arena
+                               utilization gates on an absolute DROP
+                               (lower = block accounting leak).
 
 Everything else (controller replan latency, transport hop/serialize,
 warm-vs-cold replan wall times, server makespan ratio, fleet scale-out
@@ -43,7 +50,7 @@ import io
 import json
 import sys
 
-DEFAULT_ONLY = "incremental,controller,transport,server,kernels"
+DEFAULT_ONLY = "incremental,controller,transport,server,kernels,decode"
 DEFAULT_TOL = 0.20
 
 
@@ -123,12 +130,27 @@ def extract_metrics(rows: list) -> dict:
         elif name == "server/packing/padded":
             metrics["padded_waste_frac"] = d["padding_waste_frac"]
             metrics["padded_recompile_count"] = d["recompile_count"]
+        elif name == "decode/serve/continuous":
+            # the decode serving headline: continuous-batching TTFT/TPOT
+            # and paged-arena utilization — BLOCKING once baselined
+            metrics["ttft_ms"] = d["ttft_ms"]
+            metrics["tpot_ms"] = d["tpot_ms"]
+            metrics["kv_block_util_frac"] = d["kv_block_util_frac"]
+            metrics["decode_toks_s"] = d["toks_s"]
+        elif name == "decode/serve/waved":
+            # close-on-flush baseline: recorded for the win ratio
+            metrics["decode_waved_ttft_ms"] = d["ttft_ms"]
+            metrics["decode_waved_toks_s"] = d["toks_s"]
+        elif name == "decode/prefix/reuse":
+            metrics["decode_prefix_tokens_reused"] = \
+                d["prefix_tokens_reused"]
     return metrics
 
 
 GATED_PREFIXES = ("planner_latency_us/", "slo_attainment/")
 GATED_KEYS = ("server_p99_ms", "fragment_exec_ms", "padding_waste_frac",
-              "recompile_count")
+              "recompile_count", "ttft_ms", "tpot_ms",
+              "kv_block_util_frac")
 
 
 def _gated(key: str) -> bool:
@@ -175,6 +197,24 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
                 failures.append(
                     f"{key}: {cur:.3f} ms vs baseline {base:.3f} ms "
                     f"(>{wide:.0%} slower)")
+        elif key in ("ttft_ms", "tpot_ms"):
+            # decode serving wall-clock tails: same wide band as
+            # server_p99_ms — catches step functions (continuous
+            # admission lost, a compile back on the step loop), not
+            # shared-runner jitter
+            wide = 2.5 * tol
+            if cur > base * (1 + wide):
+                failures.append(
+                    f"{key}: {cur:.2f} ms vs baseline {base:.2f} ms "
+                    f"(>{wide:.0%} slower)")
+        elif key == "kv_block_util_frac":
+            # arena utilization is a fraction of deterministic traffic:
+            # additive band, LOWER is worse (blocks held but empty —
+            # a leak in free/retain accounting)
+            if cur < base - 0.08:
+                failures.append(
+                    f"{key}: {cur:.4f} vs baseline {base:.4f} "
+                    f"(> -0.08 absolute drop)")
         elif key == "padding_waste_frac":
             # a FRACTION of a deterministic traffic mix, not wall clock:
             # additive band. +0.05 absolute means the bucket policy or
@@ -277,6 +317,12 @@ def main(argv=None) -> int:
     if srv:
         print("  server: " + "  ".join(
             f"{k[7:]}={v:.4g}" for k, v in sorted(srv.items())))
+    dec = {k: v for k, v in metrics.items()
+           if k in ("ttft_ms", "tpot_ms", "kv_block_util_frac",
+                    "decode_toks_s", "decode_waved_ttft_ms")}
+    if dec:
+        print("  decode: " + "  ".join(
+            f"{k}={v:.4g}" for k, v in sorted(dec.items())))
     if failures:
         print("BENCH GATE FAILED:", file=sys.stderr)
         for fmsg in failures:

@@ -23,7 +23,8 @@ def main(argv=None) -> None:
                             bench_massive, bench_overhead, bench_slo,
                             bench_energy, bench_kernels, bench_incremental,
                             bench_calibration, bench_controller,
-                            bench_transport, bench_server, bench_fleet)
+                            bench_transport, bench_server, bench_fleet,
+                            bench_decode)
     suites = {
         "calibration": bench_calibration.run, # Table 2 anchors
         "resource": bench_resource.run,       # Table 3 / Fig 7
@@ -43,6 +44,7 @@ def main(argv=None) -> None:
         "server": bench_server.run,           # event-driven serving runtime
         "fleet": bench_fleet.run,             # multi-front-end scale-out
         "fleet_remote": bench_fleet.run_remote,  # per-FE worker channels
+        "decode": bench_decode.run,           # paged-KV continuous batching
     }
     only = set(args.only.split(",")) if args.only else None
     rows = Rows()

@@ -16,6 +16,10 @@
 #                                  # over the SOCKET executor (worker
 #                                  # subprocesses dialing back to
 #                                  # --advertise-host 127.0.0.1)
+#   ./scripts/ci.sh --decode-smoke # BLOCKING: in-process continuous-batching
+#                                  # decode loop over the paged KV arena;
+#                                  # every stream's tokens checked against the
+#                                  # unbatched reference (exit 1 on mismatch)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -28,8 +32,27 @@ fi
 
 if [[ "${1:-}" == "--bench-gate" ]]; then
     python -m benchmarks.gate \
-        --only incremental,controller,transport,server,fleet,fleet_remote,kernels \
+        --only incremental,controller,transport,server,fleet,fleet_remote,kernels,decode \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
+    exit $?
+fi
+
+if [[ "${1:-}" == "--decode-smoke" ]]; then
+    python - <<'EOF'
+import sys
+from repro.serving.smoke import run_decode_smoke
+
+report = run_decode_smoke(log=lambda *a: print(*a, flush=True))
+ok = report["numerics_ok"] and report["numerics_checked"] > 0
+dec = report.get("decode", {})
+print(f"[decode-smoke] attainment={dec.get('attainment', 0.0):.2f} "
+      f"checked={report['numerics_checked']}")
+if not ok:
+    print(f"[decode-smoke] FAIL: "
+          f"{report.get('numerics_error', 'no streams completed')}",
+          file=sys.stderr)
+sys.exit(0 if ok else 1)
+EOF
     exit $?
 fi
 
@@ -55,15 +78,19 @@ if [[ "${1:-}" != "--tests" ]]; then
     # fleet topology: two front-ends over one executor, same loop
     python -m repro.launch.serve --serve-loop --execute inprocess \
         --serve-seconds 2 --clients 2 --frontends 2
+    # the decode serving path must stay token-exact vs the unbatched
+    # reference: continuous batching + paged KV, checked in-process
+    "$0" --decode-smoke
     # BLOCKING bench gate on the fast suites: planner latency, controller
-    # SLO attainment, the server_p99_ms serving-runtime tail, and the
+    # SLO attainment, the server_p99_ms serving-runtime tail, the
     # ragged-execution keys (fragment_exec_ms / padding_waste_frac /
-    # recompile_count from the kernels + server packing rows). The slow
+    # recompile_count from the kernels + server packing rows), and the
+    # decode keys (ttft_ms / tpot_ms / kv_block_util_frac). The slow
     # transport/fleet benches stay in the non-blocking --bench-gate job;
     # missing non-gated baseline keys do not fail a subset run.
     # Wider tolerance than the trend-tracking job: a blocking gate on a
     # small shared runner must only trip on step-function regressions.
-    python -m benchmarks.gate --only incremental,controller,server,kernels \
+    python -m benchmarks.gate --only incremental,controller,server,kernels,decode \
         --tolerance 0.35 \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
 fi

@@ -3,7 +3,8 @@ from repro.models.transformer import (
     init_params, forward, fragment_forward, run_fragment, n_fragment_units,
     embed_tokens, unembed,
 )
-from repro.models.decode import init_cache, prefill, decode_step, cache_len_for
+from repro.models.decode import (init_cache, prefill, decode_step,
+                                 cache_len_for, decode_window)
 from repro.models.packed import (is_packable, pack_segments,
                                  packed_fragment_fn, run_fragment_packed)
 from repro.models.stubs import extras_shapes, make_extras
@@ -12,6 +13,7 @@ __all__ = [
     "init_params", "forward", "fragment_forward", "run_fragment",
     "n_fragment_units", "embed_tokens", "unembed",
     "init_cache", "prefill", "decode_step", "cache_len_for",
+    "decode_window",
     "is_packable", "pack_segments", "packed_fragment_fn",
     "run_fragment_packed",
     "extras_shapes", "make_extras",

@@ -23,11 +23,31 @@ from repro.models.transformer import embed_tokens, unembed, encode_audio
 Array = jax.Array
 
 
+# hybrid models carry O(1) recurrent state (ssm_scan) for long-range
+# context, so their attention branch only ever needs a bounded local
+# window — but configs that leave sliding_window unset used to fall
+# through to the full-seq_len KV branch and allocate an unbounded cache.
+HYBRID_DEFAULT_WINDOW = 1024
+
+
+def decode_window(cfg: ModelConfig) -> int:
+    """Effective attention window for decode caches, sized from FAMILY,
+    not just the sliding_window knob: ssm (rwkv) carries no KV at all;
+    hybrid defaults to a bounded local window because its scan state
+    covers the long range. 0 means unwindowed (full causal KV)."""
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.sliding_window or HYBRID_DEFAULT_WINDOW
+    return cfg.sliding_window or 0
+
+
 def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
     if cfg.family == "ssm":
         return 0
-    if cfg.sliding_window:
-        return min(seq_len, cfg.sliding_window)
+    W = decode_window(cfg)
+    if W:
+        return min(seq_len, W)
     return seq_len
 
 
@@ -104,7 +124,7 @@ def _block_decode(p: dict, cfg: ModelConfig, x: Array, c: dict,
     scales = (c["k_scale"], c["v_scale"]) if "k_scale" in c else None
     y, new_c["k"], new_c["v"], new_scales = attn.attn_decode(
         p["attn"], cfg, h, c["k"], c["v"], pos, kv_pos,
-        window=cfg.sliding_window, scales=scales)
+        window=decode_window(cfg), scales=scales)
     if new_scales is not None:
         new_c["k_scale"], new_c["v_scale"] = new_scales
     if cfg.family == "hybrid":
@@ -151,7 +171,7 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict, tokens: Array
     kv_pos = cache.get("kv_pos")
     if kv_pos is not None and kv_pos.shape[1] > 0:
         kv_pos = attn.update_kv_pos(kv_pos, pos, kv_pos.shape[1],
-                                    cfg.sliding_window)
+                                    decode_window(cfg))
 
     lkeys = _layer_cache_keys(cfg)
 
@@ -242,7 +262,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
         cache["pos"] = jnp.full((B,), S, jnp.int32)
         return unembed(params, cfg, x), cache
 
-    W = cfg.sliding_window
+    W = decode_window(cfg)
     quant = (cfg.kv_cache_dtype or cfg.dtype) == "int8"
 
     def capture(k, v):

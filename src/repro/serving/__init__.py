@@ -15,6 +15,7 @@ from repro.serving.remote import (RemoteExecutor, SSHLauncher,
 from repro.serving.controller import ServingController, Estimate
 from repro.serving.batcher import (BatchItem, MicroBatcher, ShedPolicy,
                                    bucket_size)
+from repro.serving.kvcache import KVCacheOOM, PagedKVCache
 from repro.serving.server import GraftServer, run_serve_loop
 from repro.serving.fleet import GraftFleet, rendezvous_route
 
@@ -25,6 +26,7 @@ __all__ = [
     "WorkerLauncher", "SubprocessLauncher", "SSHLauncher",
     "WorkerDiedError", "ServingController", "Estimate",
     "BatchItem", "MicroBatcher", "ShedPolicy", "bucket_size",
+    "PagedKVCache", "KVCacheOOM",
     "GraftServer", "run_serve_loop", "GraftFleet", "rendezvous_route",
     "Transport", "InProcessTransport", "SocketTransport", "ShapedTransport",
     "LinkShape", "TransferStats", "FrameError", "TruncatedFrameError",

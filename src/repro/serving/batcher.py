@@ -50,6 +50,12 @@ class BatchItem:
                                      # on the pool's channel (stage 0 only)
     n_tokens: int = 0                # sequence length of the payload (what
                                      # a token-budget batch close counts)
+    # -- decode (autoregressive) requests only --
+    decode: bool = False             # route to the pool's decode batch
+    max_new: int = 0                 # decode length budget (tokens to emit)
+    ttft_deadline_ms: float = 0.0    # absolute first-token deadline;
+                                     # deadline_ms then bounds the LAST token
+    tpot_budget_ms: float = 0.0      # per-token budget after the first
 
 
 @dataclass
@@ -59,6 +65,8 @@ class BatcherStats:
     closed_full: int = 0             # batches closed by max_batch
     closed_deadline: int = 0         # batches closed by flush-deadline expiry
     closed_tokens: int = 0           # batches closed by the token budget
+    taken: int = 0                   # items pulled by take() into a running
+                                     # decode batch (continuous admission)
     batch_sizes: deque = field(     # recent sizes only; totals above
         default_factory=lambda: deque(maxlen=MAX_BATCH_SIZE_SAMPLES))
 
@@ -166,6 +174,28 @@ class MicroBatcher:
             else:
                 self.stats.closed_deadline += 1
             return batch
+
+    def take(self, k: int) -> list:
+        """Pull up to ``k`` queued items RIGHT NOW, in EDF order,
+        bypassing the batch-close policy. This is iteration-level
+        (continuous) admission: a running decode batch calls it at every
+        step boundary to backfill slots vacated by finished sequences,
+        instead of waiting for the queue to close a whole new batch.
+        Respects ``pause()`` (the test hook holds decode admission too).
+        """
+        with self._cond:
+            if self._paused or k <= 0:
+                return []
+            out = []
+            while self._heap and len(out) < k:
+                out.append(heapq.heappop(self._heap)[2])
+            self._pending_hop_ms -= sum(it.hop_charge_ms for it in out)
+            self._pending_tokens -= sum(it.n_tokens for it in out)
+            if not self._heap:
+                self._pending_hop_ms = 0.0
+                self._pending_tokens = 0
+            self.stats.taken += len(out)
+            return out
 
     def wait_for_work(self, now_ms: float, *,
                       max_wait_ms: float = 100.0) -> None:
@@ -339,39 +369,75 @@ class ShedPolicy:
             h = self._hist.get(client)
             return (sum(h) / len(h)) if h else 0.0
 
-    def should_shed(self, client: str) -> bool:
+    # feasibility predicates live ON the policy so callers have one
+    # surface for "is it blown / may I shed it"; the module-level
+    # ``hopeless`` stays as an alias for the one-shot form.
+    @staticmethod
+    def hopeless(now_ms: float, deadline_ms: float,
+                 est_remaining_ms: float) -> bool:
+        """One-shot requests: see module-level :func:`hopeless`."""
+        return hopeless(now_ms, deadline_ms, est_remaining_ms)
+
+    @staticmethod
+    def hopeless_decode(now_ms: float, ttft_deadline_ms: float,
+                        est_ttft_ms: float, deadline_ms: float,
+                        est_tpot_ms: float, tokens_left: int) -> bool:
+        """Decode requests are provably blown on EITHER deadline: the
+        projected first/next token misses ``ttft_deadline_ms``, or the
+        projected last token — first-token time plus ``est_tpot_ms`` per
+        remaining token — misses the absolute ``deadline_ms``. Mid-decode
+        callers pass ``est_ttft_ms`` as the time to the *next* token and
+        ``ttft_deadline_ms = now + tpot budget`` (the per-token deadline
+        the stream must keep). Strict comparisons, like :func:`hopeless`:
+        landing exactly on a boundary is feasible."""
+        if now_ms + est_ttft_ms > ttft_deadline_ms:
+            return True
+        total = est_ttft_ms + est_tpot_ms * max(int(tokens_left) - 1, 0)
+        return now_ms + total > deadline_ms
+
+    def should_shed(self, client: str, charge: int = 1) -> bool:
         """Called ONLY for a provably-blown request. True => shed it
         (recorded). False => the budget is spent, the request must be
         admitted (recorded; the caller marks it exempt from any later
         checkpoint).
 
         A shed is allowed only if the window INCLUDING this shed stays
-        within budget: ``(sheds + 1) / (n + 1) <= budget_frac``. The
-        projected form makes the boundary cases exact — 1.0 may shed
+        within budget: ``(sheds + charge) / (n + charge) <= budget_frac``.
+        The projected form makes the boundary cases exact — 1.0 may shed
         every hopeless request, 0.0 sheds none — with no empty-window
         special case (a client with no admitted history cannot be shed
-        unless the budget is total)."""
+        unless the budget is total).
+
+        ``charge`` weights the decision by the work being dropped —
+        decode requests pass their REMAINING decode length, so shedding
+        a 40-tokens-to-go stream spends 40x the budget of a one-shot
+        and a client's shed budget bounds dropped *tokens*, not dropped
+        request count."""
+        charge = max(int(charge), 1)
         with self._lock:
             h = self._hist.get(client)
             if h is None:
                 h = self._hist[client] = deque(maxlen=self.window)
-            if (sum(h) + 1) / (len(h) + 1) > self.budget_frac:
+            c = min(charge, self.window)
+            if (sum(h) + c) / (len(h) + c) > self.budget_frac:
                 h.append(False)                    # budget spent: must admit
                 self.stats["budget_admits"] += 1
                 self.stats["admitted"] += 1
                 return False
-            h.append(True)
+            h.extend([True] * c)
             self.stats["shed"] += 1
             return True
 
-    def note_admitted(self, client: str) -> None:
+    def note_admitted(self, client: str, weight: int = 1) -> None:
         """One feasible request admitted at ingest — its window entry
-        (what pays the budget down while the system keeps up)."""
+        (what pays the budget down while the system keeps up). Decode
+        admissions pass their decode length as ``weight`` so budget
+        paydown matches the token-weighted charge on the shed side."""
         with self._lock:
             h = self._hist.get(client)
             if h is None:
                 h = self._hist[client] = deque(maxlen=self.window)
-            h.append(False)
+            h.extend([False] * min(max(int(weight), 1), self.window))
             self.stats["admitted"] += 1
 
 

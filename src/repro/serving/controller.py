@@ -47,13 +47,14 @@ class ClientWindow:
     budgets: deque = field(default_factory=deque)     # (t_ms, budget_ms)
     lat: deque = field(default_factory=deque)         # (t_ms, lat/budget)
     sheds: deque = field(default_factory=deque)       # t_ms (dropped reqs)
+    tpot: deque = field(default_factory=deque)        # (t_ms, tpot/budget)
     p: int = 0                                        # latest partition point
 
     def prune(self, horizon_ms: float) -> None:
         for dq in (self.arrivals, self.sheds):
             while dq and dq[0] < horizon_ms:
                 dq.popleft()
-        for dq in (self.bw, self.budgets, self.lat):
+        for dq in (self.bw, self.budgets, self.lat, self.tpot):
             while dq and dq[0][0] < horizon_ms:
                 dq.popleft()
 
@@ -69,6 +70,7 @@ class Estimate:
     risk: float                                       # lat/budget percentile
     bw_slope: float = 0.0                             # bytes/s per ms (trend)
     shed_frac: float = 0.0                            # dropped / offered
+    tpot_risk: float = 0.0                            # tpot/budget percentile
     from_prior: bool = False                          # cold-start seeded
 
 
@@ -185,6 +187,20 @@ class ServingController:
         if budget_ms > 0:
             w.lat.append((now_ms, server_latency_ms / budget_ms))
 
+    def observe_decode(self, now_ms: float, client: str, ttft_ms: float,
+                       tpot_ms: float, ttft_budget_ms: float,
+                       tpot_budget_ms: float) -> None:
+        """One finished decode stream. TTFT rides the normal ``lat``
+        window via :meth:`observe_done` (the caller reports it there);
+        this adds the per-token side — normalized TPOT feeds the
+        ``decode_slo`` trigger so a pool whose step time creeps toward
+        the per-token budget forces a replan before streams start
+        missing their ABSOLUTE deadlines."""
+        w = self._clients.get(client)
+        if w is None or tpot_budget_ms <= 0:
+            return
+        w.tpot.append((now_ms, tpot_ms / tpot_budget_ms))
+
     # ---------------------------------------------------------- estimates
     def _bw_slope(self, w: ClientWindow) -> float:
         """Linear bandwidth trend over the window (bytes/s per ms); 0
@@ -216,12 +232,16 @@ class ServingController:
             bw = float(np.mean([v for _, v in w.bw])) if w.bw else 0.0
             risk = float(np.percentile([r for _, r in w.lat],
                                        self.risk_pct)) if w.lat else 0.0
+            tpot_risk = float(np.percentile([r for _, r in w.tpot],
+                                            self.risk_pct)) if w.tpot \
+                else 0.0
             out[name] = Estimate(model=w.model, p=w.p, rate=rate,
                                  budget_ms=budget, bw=bw, risk=risk,
                                  bw_slope=self._bw_slope(w),
                                  shed_frac=min(
                                      len(w.sheds) / max(len(w.arrivals), 1),
-                                     1.0))
+                                     1.0),
+                                 tpot_risk=tpot_risk)
         # cold-start overlay: while a client's window is near-empty, the
         # fleet's DECLARED rate/budget speak for it (bounding the first
         # ticks' estimation error) — the window takes over once it holds
@@ -270,6 +290,11 @@ class ServingController:
                     trig.append("rate_drift")
             if e.risk > self.risk_threshold:
                 trig.append("slo_risk")
+            # per-token latency creeping toward the TPOT budget: the
+            # decode batch is too deep (or the pool too slow) for the
+            # streams it carries
+            if e.tpot_risk > self.risk_threshold:
+                trig.append("decode_slo")
             # the runtime is dropping this client's requests: the current
             # allocation provably lacks capacity for the offered load —
             # replan (arrival windows already count shed requests, so the

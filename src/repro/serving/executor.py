@@ -43,9 +43,12 @@ from repro.core.placement import MOVE, migrate, place_pools
 from repro.core.plandiff import diff_plans, plan_pools, PlanDiff, PoolSpec
 from repro.core.repartition import pool_key
 from repro.models import n_fragment_units, run_fragment
+from repro.models.decode import (cache_len_for, decode_step, init_cache,
+                                 prefill)
 from repro.models.packed import (is_packable, pack_segments,
                                  packed_fragment_fn)
 from repro.serving.batcher import bucket_size, seq_bucket, token_bucket
+from repro.serving.kvcache import KVCacheOOM, PagedKVCache
 from repro.serving.simulator import _routing
 from repro.serving.transport import (Channel, InProcessTransport, Transport,
                                      error_reply)
@@ -57,6 +60,10 @@ class ServeRequest:
     tokens: np.ndarray                   # (S,) int32
     extras: Optional[dict] = None
     result: Optional[np.ndarray] = None
+    # -- decode (autoregressive) requests only --
+    max_new_tokens: int = 0              # > 0 marks a decode request
+    tpot_budget_ms: float = 0.0          # per-token SLO after the first
+    out_tokens: Optional[list] = None    # generated token ids on completion
 
 
 class PoolDrainingError(RuntimeError):
@@ -80,6 +87,14 @@ def _extras_sig(extras: Optional[dict]) -> tuple:
                         for k, v in extras.items()))
 
 
+def _sig_tuple(x):
+    """Recursively re-tuple a fragment signature that crossed msgpack
+    (which decodes tuples as lists) so it is hashable again."""
+    if isinstance(x, (list, tuple)):
+        return tuple(_sig_tuple(e) for e in x)
+    return x
+
+
 def _jit_cache_size(fn) -> Optional[int]:
     """Number of compiled entries in a jitted function's cache, or None
     when the jax version doesn't expose it."""
@@ -100,7 +115,8 @@ class FragmentInstance:
 
     def __init__(self, params, cfg: ModelConfig, spec: PoolSpec,
                  *, pad_buckets: bool = True, packed: bool = True,
-                 chips=None):
+                 chips=None, decode_ctx: int = 0, kv_blocks: int = 64,
+                 kv_block_tokens: int = 16):
         self.cfg = cfg
         self.key = spec.key
         self.start, self.end = spec.start, spec.end
@@ -125,6 +141,22 @@ class FragmentInstance:
         self.real_tokens = 0          # payload tokens actually requested
         self.pad_tokens = 0           # bucket-padding tokens executed
         self._shapes_seen: set = set()
+        # -- decode (autoregressive) serving state, built lazily on the
+        # first admission so one-shot pools pay nothing --
+        self.decode_ctx = int(decode_ctx)
+        self.kv_blocks = int(kv_blocks)
+        self.kv_block_tokens = int(kv_block_tokens)
+        self.kv: Optional[PagedKVCache] = None
+        self._dc: Optional[dict] = None       # dense batched decode cache
+        self._dstep = None                    # jitted batched decode_step
+        self._slots: list = []                # per-row sequence state
+        self.decode_admits = 0
+        self.decode_steps = 0
+        self.decode_tokens = 0                # admission firsts + step emits
+        # cross-request prefix sharing reconstructs a prompt's KV from the
+        # paged arena alone, which only the attention-only families allow
+        # (hybrid's ssm scan state is per-sequence and not paged)
+        self._kv_share = cfg.family in ("dense", "moe")
 
     def retarget(self, spec: PoolSpec) -> None:
         """Adopt a new pool shape; the block range — hence the compiled
@@ -259,6 +291,207 @@ class FragmentInstance:
         return {k: jnp.concatenate([jnp.asarray(e[k]) for e in rows], axis=0)
                 for k in extras_list[0]}
 
+    # ------------------------------------------------------ decode serving
+    @property
+    def can_decode(self) -> bool:
+        """Decode runs on pools holding the FULL block range (the cache
+        spans every layer), for families whose per-row cache state copies
+        cleanly between a solo admission cache and the batched one
+        (dense/moe/hybrid — vlm/audio need extras, ssm has no KV), with a
+        context that fits the dense cache without ring wraparound so
+        cache slot == absolute position and arena extraction is exact."""
+        return (self.decode_ctx > 0 and self.start == 0
+                and self.end == self._units
+                and self.cfg.family in ("dense", "moe", "hybrid")
+                and cache_len_for(self.cfg, self.decode_ctx)
+                == self.decode_ctx)
+
+    def _ensure_decode(self) -> None:
+        if self._dc is not None:
+            return
+        B = max(self.batch, 1)
+        self.kv = PagedKVCache(self.kv_blocks, self.kv_block_tokens,
+                               n_layers=self.cfg.n_layers,
+                               n_kv_heads=self.cfg.n_kv_heads,
+                               head_dim=self.cfg.head_dim_)
+        self._dc = init_cache(self.cfg, B, self.decode_ctx)
+        self._slots = [None] * B
+        cfg = self.cfg
+        self._dstep = jax.jit(
+            lambda params, cache, toks: decode_step(params, cfg, cache,
+                                                    toks))
+
+    @staticmethod
+    def _row_axis(key: str) -> int:
+        """Batch axis of a decode-cache entry: per-row vectors lead with
+        it; layer-stacked tensors carry it second."""
+        return 0 if key in ("pos", "kv_pos") else 1
+
+    def _copy_row(self, dst: dict, src: dict, i: int) -> dict:
+        """Write the B=1 cache ``src`` into row ``i`` of batched ``dst``."""
+        out = {}
+        for k, v in dst.items():
+            if self._row_axis(k) == 0:
+                out[k] = v.at[i].set(src[k][0])
+            else:
+                out[k] = v.at[:, i].set(src[k][:, 0])
+        return out
+
+    def _solo_prefill(self, rid: int, toks: np.ndarray, n_shared: int):
+        """B=1 prompt processing for one admission: gather the shared
+        prefix KV from the paged arena (keeping at least the LAST prompt
+        token to recompute, so a fully-shared prompt still yields first-
+        token logits), step the remainder, and return the first generated
+        token, the cache row, and the arena-bound suffix KV."""
+        cfg, S = self.cfg, int(toks.shape[0])
+        pop = min(n_shared, S - 1)            # prefix positions gathered
+        if pop == 0:
+            logits, c1 = prefill(self._params, cfg, jnp.asarray(toks)[None],
+                                 cache_seq=self.decode_ctx)
+        else:
+            c1 = init_cache(cfg, 1, self.decode_ctx)
+            k, v = self.kv.gather(rid, pop)   # (pop, L, KV, hd)
+            kk = jnp.asarray(k).transpose(1, 0, 2, 3)[:, None]
+            vv = jnp.asarray(v).transpose(1, 0, 2, 3)[:, None]
+            c1["k"] = c1["k"].at[:, :, :pop].set(kk.astype(c1["k"].dtype))
+            c1["v"] = c1["v"].at[:, :, :pop].set(vv.astype(c1["v"].dtype))
+            c1["kv_pos"] = c1["kv_pos"].at[0, :pop].set(
+                jnp.arange(pop, dtype=jnp.int32))
+            c1["pos"] = jnp.full((1,), pop, jnp.int32)
+            logits = None
+            for t in toks[pop:]:
+                logits, c1 = self._dstep(
+                    self._params, c1, jnp.asarray([[int(t)]], jnp.int32))
+        first = int(jnp.argmax(logits[0, -1]))
+        sl = np.arange(n_shared, S)           # arena-bound suffix positions
+        k_np = np.asarray(c1["k"], np.float32)
+        v_np = np.asarray(c1["v"], np.float32)
+        ks = k_np[:, 0, sl].transpose(1, 0, 2, 3)
+        vs = v_np[:, 0, sl].transpose(1, 0, 2, 3)
+        return first, c1, ks, vs
+
+    def decode_admit(self, rid: int, client: str, tokens, max_new: int,
+                     sig: tuple) -> dict:
+        """Admit one sequence into the continuous decode batch: paged-KV
+        admission (with prefix sharing), solo prefill of the prompt, row
+        copy into a free batch slot. Produces the FIRST generated token —
+        TTFT is measured to this reply. Refusals are soft (``admitted``
+        False with a reason) so the driver can fall back or retry."""
+        if self.draining:
+            raise PoolDrainingError(
+                f"pool {self.key} is draining (batch=0): enqueue refused")
+        if not self.can_decode:
+            return {"admitted": False, "reason": "not_decode_capable"}
+        self._ensure_decode()
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        S = int(toks.shape[0])
+        max_new = max(int(max_new), 1)
+        if S + max_new > self.decode_ctx:
+            return {"admitted": False, "reason": "ctx_overflow"}
+        try:
+            slot = self._slots.index(None)
+        except ValueError:
+            return {"admitted": False, "reason": "no_slot"}
+        if not self.kv.has_room(S + max_new):
+            return {"admitted": False, "reason": "kv_oom"}
+        key = tuple(sig) if self._kv_share else ("solo", rid)
+        try:
+            n_shared = self.kv.begin(rid, key, toks)
+        except KVCacheOOM:
+            return {"admitted": False, "reason": "kv_oom"}
+        first, c1, ks, vs = self._solo_prefill(rid, toks, n_shared)
+        self.kv.write_prompt_kv(rid, ks, vs)
+        done = max_new == 1
+        if done:
+            self.kv.finish(rid, retain=self._kv_share)
+        else:
+            self._dc = self._copy_row(self._dc, c1, slot)
+            self._slots[slot] = {"rid": rid, "client": client,
+                                 "max_new": max_new, "n_gen": 1,
+                                 "last": first, "out": [first],
+                                 "prompt_len": S}
+        self.decode_admits += 1
+        self.decode_tokens += 1
+        return {"admitted": True, "tok": first, "done": done,
+                "n_shared": n_shared,
+                "tokens": [first] if done else None}
+
+    def decode_step_batch(self) -> dict:
+        """ONE iteration of the continuous decode batch: every resident
+        sequence advances a token; finished sequences free their KV
+        blocks and vacate their slot WITHOUT stalling the rest. Returns
+        per-sequence events plus slot occupancy so the driver knows how
+        many admissions it can pull at this step boundary."""
+        active = [i for i, s in enumerate(self._slots) if s]
+        if not active:
+            return {"events": [], "active": 0,
+                    "free_slots": len(self._slots)}
+        B = len(self._slots)
+        toks = np.zeros((B, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self._slots[i]["last"]
+        pos_before = np.asarray(self._dc["pos"])
+        logits, self._dc = self._call_counted(
+            self._dstep, self._params, self._dc,
+            jnp.asarray(toks), shape_key=("decode", B))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        k_np = np.asarray(self._dc["k"], np.float32)
+        v_np = np.asarray(self._dc["v"], np.float32)
+        events = []
+        for i in active:
+            s = self._slots[i]
+            p = int(pos_before[i])            # slot == position (can_decode)
+            ev = {"rid": s["rid"], "client": s["client"]}
+            try:
+                self.kv.append(s["rid"], int(toks[i, 0]),
+                               k_np[:, i, p], v_np[:, i, p])
+            except KVCacheOOM:
+                # admission reserved nothing: under pressure a boundary
+                # alloc can fail mid-stream — surface it as a forced
+                # finish so the server sheds instead of wedging the batch
+                self.kv.release(s["rid"])
+                self._slots[i] = None
+                ev.update(done=True, oom=True, n_gen=s["n_gen"],
+                          tokens=list(s["out"]))
+                events.append(ev)
+                continue
+            tok = int(nxt[i])
+            s["out"].append(tok)
+            s["last"] = tok
+            s["n_gen"] += 1
+            done = s["n_gen"] >= s["max_new"]
+            ev.update(tok=tok, done=done, n_gen=s["n_gen"])
+            if done:
+                ev["tokens"] = list(s["out"])
+                self.kv.finish(s["rid"], retain=self._kv_share)
+                self._slots[i] = None
+            events.append(ev)
+        self.decode_steps += 1
+        self.decode_tokens += len(active)
+        return {"events": events,
+                "active": sum(1 for s in self._slots if s),
+                "free_slots": sum(1 for s in self._slots if s is None)}
+
+    def decode_abort(self, rid: int) -> bool:
+        """Evict one resident sequence (mid-decode shed): free its KV
+        blocks without retention, vacate the slot."""
+        for i, s in enumerate(self._slots):
+            if s and s["rid"] == rid:
+                self.kv.release(rid)
+                self._slots[i] = None
+                return True
+        return False
+
+    @property
+    def decode_active(self) -> int:
+        return sum(1 for s in self._slots if s)
+
+    @property
+    def decode_free_slots(self) -> int:
+        if self._dc is None:
+            return max(self.batch, 1) if self.can_decode else 0
+        return sum(1 for s in self._slots if s is None)
+
 
 class PoolService:
     """Server-side adapter: transport messages -> FragmentInstance ops.
@@ -321,6 +554,16 @@ class PoolService:
             # chips actually changed.
             inst.chips = [int(c) for c in msg["chips"]]
             return {"ok": True}
+        if op == "dadmit":
+            r = inst.decode_admit(msg["req_id"], msg["client"],
+                                  np.asarray(msg["tokens"], np.int32),
+                                  msg["max_new"],
+                                  _sig_tuple(msg.get("sig") or ()))
+            return {"ok": True, **r}
+        if op == "dstep":
+            return {"ok": True, **inst.decode_step_batch()}
+        if op == "dabort":
+            return {"ok": True, "aborted": inst.decode_abort(msg["req_id"])}
         if op == "stats":
             return {"ok": True, "pid": os.getpid(),
                     "queue_len": len(inst.queue),
@@ -330,7 +573,12 @@ class PoolService:
                     "pad_tokens": inst.pad_tokens,
                     "packed": inst.packed,
                     "chips": list(inst.chips),
-                    "draining": inst.draining}
+                    "draining": inst.draining,
+                    "decode_active": inst.decode_active,
+                    "decode_admits": inst.decode_admits,
+                    "decode_steps": inst.decode_steps,
+                    "decode_tokens": inst.decode_tokens,
+                    "kv": inst.kv.stats() if inst.kv else None}
         raise ValueError(f"unknown pool op {op!r}")
 
 
@@ -399,6 +647,25 @@ class PoolHandle:
         return [(r["req_id"], np.asarray(r["payload"]))
                 for r in reply["results"]]
 
+    def decode_admit(self, req_id: int, client: str, tokens,
+                     max_new: int, sig: tuple = ()) -> dict:
+        """Admit one sequence into the pool's continuous decode batch;
+        the reply carries the FIRST generated token (or a soft refusal
+        with ``admitted`` False and a reason)."""
+        return self._call({"op": "dadmit", "req_id": req_id,
+                           "client": client,
+                           "tokens": np.asarray(tokens, np.int32),
+                           "max_new": int(max_new), "sig": list(sig)})
+
+    def decode_step(self) -> dict:
+        """Advance the decode batch one iteration; returns events plus
+        slot occupancy."""
+        return self._call({"op": "dstep"})
+
+    def decode_abort(self, req_id: int) -> bool:
+        return bool(self._call({"op": "dabort",
+                                "req_id": req_id}).get("aborted"))
+
     def retarget(self, spec: PoolSpec) -> None:
         self._call({"op": "retarget", "key": list(spec.key),
                     "share": spec.share, "batch": spec.batch,
@@ -425,10 +692,25 @@ class GraftExecutor:
 
     def __init__(self, plan: ExecutionPlan, params, cfg: ModelConfig,
                  transport: Optional[Transport] = None, *,
-                 packed: bool = True):
+                 packed: bool = True, decode_ctx: int = 0,
+                 kv_blocks: int = 64, kv_block_tokens: int = 16,
+                 decode_disagg: bool = False):
         self.cfg = cfg
         self.params = params
         self.packed = packed
+        # decode_ctx > 0 makes full-range pools decode-capable: each owns
+        # a paged KV arena of kv_blocks x kv_block_tokens token slots
+        self.decode_ctx = int(decode_ctx)
+        self.kv_blocks = int(kv_blocks)
+        self.kv_block_tokens = int(kv_block_tokens)
+        if decode_disagg:
+            # prefill/decode pool disaggregation (prefill pools handing
+            # KV blocks to decode pools over transport, expressed as plan
+            # diffs) is stubbed pending the transport KV-handoff item —
+            # the flag exists so callers can already plumb the intent
+            raise NotImplementedError(
+                "prefill/decode pool disaggregation is stubbed: the "
+                "single-pool continuous decode batch is the current path")
         self.transport = transport if transport is not None \
             else InProcessTransport()
         self._handles: dict[tuple, PoolHandle] = {}
@@ -451,8 +733,10 @@ class GraftExecutor:
     def _spawn_pool(self, spec: PoolSpec) -> PoolHandle:
         """Create a pool and return its handle. RemoteExecutor overrides
         this to spawn a worker subprocess instead."""
-        svc = PoolService(FragmentInstance(self.params, self.cfg, spec,
-                                           packed=self.packed))
+        svc = PoolService(FragmentInstance(
+            self.params, self.cfg, spec, packed=self.packed,
+            decode_ctx=self.decode_ctx, kv_blocks=self.kv_blocks,
+            kv_block_tokens=self.kv_block_tokens))
         name = pool_endpoint(spec.key)
         self.transport.serve(name, svc.handle)
         return PoolHandle(spec.key, self.transport.connect(name))
@@ -523,11 +807,14 @@ class GraftExecutor:
         diff = diff_plans(self._pools, plan_pools(new_plan))
         removed = diff.by_kind("remove")
         for a in removed:                      # validate before mutating
-            q = self._handles[a.key].queue_len()
-            if q:
+            s = self._handles[a.key].stats()
+            q = int(s["queue_len"])
+            dec = int(s.get("decode_active", 0) or 0)
+            if q or dec:
                 raise RuntimeError(
-                    f"cannot remove pool {a.key}: {q} queued requests — "
-                    f"drain with serve() before apply_plan()")
+                    f"cannot remove pool {a.key}: {q} queued requests, "
+                    f"{dec} resident decode streams — drain before "
+                    f"apply_plan()")
         for a in removed:
             self._retire_pool(self._handles.pop(a.key))
             self._bound.pop(a.key, None)

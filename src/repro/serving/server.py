@@ -115,6 +115,15 @@ class _InFlight:
     rerouted: int = 0
     local: bool = False              # finished by the in-process fallback
     shed_exempt: bool = False        # budget-forced admit: never shed later
+    # -- decode (autoregressive) requests only --
+    decode: bool = False
+    max_new: int = 0                 # decode length budget
+    tpot_ms: float = 0.0             # per-token budget after the first
+    ttft_deadline_ms: float = 0.0    # first token must land by here;
+                                     # deadline_ms then bounds the last
+    t_first_ms: float = 0.0          # when the first token was emitted
+    n_gen: int = 0                   # tokens emitted so far
+    decode_retries: int = 0          # soft admission refusals seen
 
 
 class PoolDriver(threading.Thread):
@@ -132,6 +141,12 @@ class PoolDriver(threading.Thread):
         self.busy_until_ms = 0.0     # estimated end of the batch in flight
         self.stop_flag = False
         self.n_batches = 0
+        # continuous-batching decode session (mirror of the pool's slot
+        # occupancy — authoritative counts come back on every step reply)
+        self.decode_free = max(spec.batch, 1)
+        self.decode_active = 0
+        self.decode_resident: dict[int, str] = {}    # rid -> client
+        self.decode_step_ewma: Optional[float] = None
 
     def est_cost_ms(self) -> float:
         """Per-batch cost estimate: measured EWMA once the pool has run,
@@ -144,25 +159,48 @@ class PoolDriver(threading.Thread):
         self.exec_ewma_ms = wall_ms if e is None else 0.8 * e + 0.2 * wall_ms
         self.n_batches += 1
 
+    def tpot_est_ms(self) -> float:
+        """Measured per-decode-step wall EWMA; before any step has run,
+        fall back to the stage cost model (a decode step is at most one
+        full forward of the pool's range)."""
+        return self.decode_step_ewma if self.decode_step_ewma is not None \
+            else max(self.model_est_ms, 1.0)
+
+    def note_decode_step(self, wall_ms: float) -> None:
+        e = self.decode_step_ewma
+        self.decode_step_ewma = wall_ms if e is None \
+            else 0.8 * e + 0.2 * wall_ms
+
     def run(self):
         srv = self.server
         while True:
             if self.stop_flag or self.batcher.stopped:
                 return
-            batch, foreign = None, None
+            batch, foreign, stepped = None, None, False
             with srv._rw.read():
                 if self.stop_flag:
                     return
-                batch = self.batcher.pop_ready(srv.now_ms())
-                if batch:
+                if self.decode_active:
+                    # a decode batch is resident: advance it one token.
+                    # One step per lock acquisition — a replan (writer)
+                    # interleaves between steps, never waits out a full
+                    # decode stream
+                    stepped = True
                     try:
-                        foreign = srv._run_batch(self, batch)
+                        foreign = srv._decode_tick(self)
                     except Exception:
-                        # the driver thread must NEVER die with work
-                        # outstanding: salvage the popped batch so
-                        # join() can't strand, then keep serving
                         traceback.print_exc()
-                        srv._salvage(batch)
+                else:
+                    batch = self.batcher.pop_ready(srv.now_ms())
+                    if batch:
+                        try:
+                            foreign = srv._run_batch(self, batch)
+                        except Exception:
+                            # the driver thread must NEVER die with work
+                            # outstanding: salvage the popped batch so
+                            # join() can't strand, then keep serving
+                            traceback.print_exc()
+                            srv._salvage(batch)
             # fleet mode: a shared pool's flush can return requests OWNED
             # BY ANOTHER FRONT-END — hand them over OUTSIDE our read
             # section (the receiving server takes its own lock; nesting
@@ -172,7 +210,7 @@ class PoolDriver(threading.Thread):
                     srv.foreign_router(foreign)
                 except Exception:
                     traceback.print_exc()
-            if not batch:
+            if not batch and not stepped:
                 self.batcher.wait_for_work(srv.now_ms())
 
 
@@ -195,7 +233,9 @@ class GraftServer:
                  ctl_lock: Optional[threading.Lock] = None,
                  external_control: bool = False,
                  registry: Optional[dict] = None,
-                 foreign_router: Optional[Callable] = None):
+                 foreign_router: Optional[Callable] = None,
+                 decode_continuous: bool = True,
+                 tpot_default_ms: float = 50.0):
         self.executor = executor
         self.controller = controller
         self.book = book
@@ -206,6 +246,11 @@ class GraftServer:
         # pending payload TOKENS reach the budget, so packed buffers stay
         # inside one compile bucket instead of growing with queue depth
         self.token_budget = max(int(token_budget), 0)
+        # decode serving: continuous admits new requests into a RUNNING
+        # decode batch at step boundaries; False degrades to the "waved"
+        # baseline (a new wave only starts once the batch fully drains)
+        self.decode_continuous = decode_continuous
+        self.tpot_default_ms = float(tpot_default_ms)
         self._period_ms = getattr(controller, "control_period_ms", 250.0)
         self.waiting_grace_ms = waiting_grace_ms \
             if waiting_grace_ms is not None else 4.0 * self._period_ms
@@ -263,7 +308,9 @@ class GraftServer:
         self.stats = {"replans_applied": 0, "timer_replans": 0,
                       "rerouted": 0, "local_finishes": 0,
                       "waited": 0, "batches": 0,
-                      "shed_ingest": 0, "shed_flush": 0}
+                      "shed_ingest": 0, "shed_flush": 0,
+                      "shed_decode": 0, "decode_served": 0,
+                      "decode_tokens": 0, "decode_local": 0}
         self._t0 = time.monotonic()
 
     # -------------------------------------------------------------- clock
@@ -362,6 +409,9 @@ class GraftServer:
                     self._done_cond.notify_all()
 
     def _ingest_one(self, rid, req, p, budget_ms, t_submit):
+        if getattr(req, "max_new_tokens", 0) > 0:
+            self._ingest_decode(rid, req, budget_ms, t_submit)
+            return
         t_mob0 = self.now_ms()
         payload = self.executor.mobile_part(req, p)   # jitted per p
         now = self.now_ms()
@@ -394,6 +444,113 @@ class GraftServer:
             self._waiting.append((rid, payload, now))
         self.stats["waited"] += 1
         self._kick.set()
+
+    # ----------------------------------------------------- decode ingest
+    def _ingest_decode(self, rid, req, budget_ms, t_submit):
+        """Autoregressive ingest: no mobile part (the device ships raw
+        token ids; the full-range pool owns the KV cache), and a two-part
+        deadline contract — the first token must land within ``budget_ms``
+        (TTFT), then every further token earns one TPOT budget, so
+        ``deadline_ms`` bounds the LAST token."""
+        now = self.now_ms()
+        max_new = max(int(req.max_new_tokens), 1)
+        tpot = float(req.tpot_budget_ms) if req.tpot_budget_ms > 0 \
+            else self.tpot_default_ms
+        st = _InFlight(req=req, p=0, budget_ms=budget_ms,
+                       t_submit_ms=t_submit, t_arrive_ms=t_submit,
+                       deadline_ms=t_submit + budget_ms
+                       + tpot * (max_new - 1),
+                       decode=True, max_new=max_new, tpot_ms=tpot,
+                       ttft_deadline_ms=t_submit + budget_ms)
+        if self.controller is not None:
+            with self._ctl_lock:
+                self.controller.observe_arrival(now, req.client,
+                                                self.cfg.name, 0, budget_ms)
+        self._inflight[rid] = st
+        with self._rw.read():
+            chain = self._decode_chain(req.client)
+            if chain is not None:
+                st.chain = chain
+                if self._shed_decode_at_ingest(rid, st, now):
+                    return
+                self._enqueue_decode(rid, st)
+                return
+        # no decode-capable pool routed for this client: decode in-process
+        # (numerically identical) so generative traffic never strands
+        self._decode_local(rid, st, np.asarray(req.tokens))
+
+    def _decode_chain(self, client: str) -> Optional[list]:
+        """Decode needs ONE pool spanning the whole model — the paged
+        cache lives pool-side, so a multi-stage chain (or a pool that
+        starts past block 0) cannot own the sequence."""
+        chain = self._routes.get(client)
+        if not chain or len(chain) != 1:
+            return None
+        from repro.models import n_fragment_units
+        key = chain[0]
+        if key[1] != 0 or key[2] != n_fragment_units(self.cfg):
+            return None
+        return list(chain)
+
+    def _decode_sig(self, st: _InFlight) -> tuple:
+        """Prefix-sharing key: the planner's reuse signature of the
+        fragment this request came from, so requests the plan treats as
+        the same workload share prompt KV blocks."""
+        from repro.core.fragment import Fragment
+        from repro.core.reuse import fragment_signature
+        quantum = getattr(getattr(self.controller, "planner", None),
+                          "budget_quantum_ms", 5.0)
+        frag = Fragment(model=self.cfg.name, p=0, t=st.budget_ms, q=0.0,
+                        client=st.req.client)
+        return fragment_signature(frag, quantum)
+
+    def _shed_decode_at_ingest(self, rid: int, st: _InFlight,
+                               now: float) -> bool:
+        """Admission control for decode requests: provably blown when
+        either the FIRST token cannot meet the TTFT deadline or the
+        stream cannot finish by the absolute deadline at the pool's
+        measured step rate. The shed budget is charged the REMAINING
+        decode length — dropping a 64-token stream costs 64 admission
+        slots, not 1. Returns True when shed."""
+        if self.shed_policy is None:
+            return False
+        drv = self._drivers.get(st.chain[0])
+        est_first = self._est_remaining_ms(st, at_stage=0,
+                                           include_backlog=True, now=now)
+        tpot_est = drv.tpot_est_ms() if drv is not None \
+            else self.hop_default_ms
+        blown = ShedPolicy.hopeless_decode(now, st.ttft_deadline_ms,
+                                           est_first, st.deadline_ms,
+                                           tpot_est, st.max_new)
+        if not blown:
+            self.shed_policy.note_admitted(st.req.client, weight=st.max_new)
+            return False
+        if not self.shed_policy.should_shed(st.req.client,
+                                            charge=st.max_new):
+            st.shed_exempt = True                  # budget-forced admit
+            return False
+        self._shed(rid, st, "decode")
+        return True
+
+    def _enqueue_decode(self, rid: int, st: _InFlight) -> None:
+        """Queue a decode request on its pool's batcher (caller holds the
+        read lock). ``flush_ms`` is NOW: admission is iteration-level —
+        the driver pulls decode items at step boundaries via ``take()``,
+        so there is nothing to gain by holding the batch open."""
+        key = st.chain[0]
+        drv = self._drivers.get(key)
+        toks = np.asarray(st.req.tokens, np.int32).reshape(-1)
+        if drv is None or drv.stop_flag:
+            self._decode_local(rid, st, toks)
+            return
+        now = self.now_ms()
+        drv.batcher.put(BatchItem(
+            rid=rid, client=st.req.client, payload=toks,
+            flush_ms=now, deadline_ms=st.deadline_ms,
+            boundary=0, enqueued_ms=now, n_tokens=int(toks.shape[0]),
+            decode=True, max_new=st.max_new,
+            ttft_deadline_ms=st.ttft_deadline_ms,
+            tpot_budget_ms=st.tpot_ms))
 
     # ------------------------------------------------------------ routing
     def _wire_extras(self, req: ServeRequest) -> Optional[dict]:
@@ -533,7 +690,7 @@ class GraftServer:
             "rid": rid, "client": st.req.client, "p": st.p,
             "latency_ms": t - st.t_arrive_ms, "budget_ms": st.budget_ms,
             "ok": False, "shed": True, "rerouted": st.rerouted,
-            "local": st.local, "t_done_ms": t})
+            "local": st.local, "decode": st.decode, "t_done_ms": t})
         if self.controller is not None:
             with self._ctl_lock:
                 self.controller.observe_shed(t, st.req.client)
@@ -586,6 +743,16 @@ class GraftServer:
         Returns results owned by another front-end (fleet mode) for the
         caller to dispatch outside the lock, or None."""
         handle = self._pool_handle(driver.key)
+        # decode items reach pop_ready only while the pool has NO running
+        # decode batch (the driver switches to _decode_tick otherwise):
+        # admit them here, then run any remaining one-shot items normally
+        decode_items = [it for it in batch if it.decode]
+        if decode_items:
+            for it in decode_items:
+                self._decode_admit(driver, handle, it)
+            batch = [it for it in batch if not it.decode]
+            if not batch:
+                return None
         now = self.now_ms()
         stage0, later = [], []
         for it in batch:
@@ -688,6 +855,204 @@ class GraftServer:
                 foreign.append((rid, y))
         return foreign
 
+    # ----------------------------------------------------- decode execute
+    def _decode_tick(self, driver: PoolDriver):
+        """One iteration of a pool's continuous decode batch (read lock
+        held): pull queued admissions at the step boundary, advance every
+        resident sequence one token, retire finished streams, and abort
+        streams whose remaining tokens provably cannot meet the absolute
+        deadline (shed charge = remaining decode length). With
+        ``decode_continuous`` off this degrades to the waved baseline:
+        new admissions wait until the whole batch drains."""
+        handle = self._pool_handle(driver.key)
+        foreign = None
+        if driver.decode_free > 0 and (self.decode_continuous
+                                       or driver.decode_active == 0):
+            items = driver.batcher.take(driver.decode_free)
+            oneshot = [it for it in items if not it.decode]
+            for it in items:
+                if it.decode:
+                    self._decode_admit(driver, handle, it)
+            if oneshot:
+                # a mixed pool: taken one-shot items run as a normal
+                # batch between decode steps
+                foreign = self._run_batch(driver, oneshot)
+        if driver.decode_active == 0:
+            return foreign
+        t0 = self._perf()
+        rep = handle.decode_step()
+        driver.note_decode_step(self._perf() - t0)
+        now = self.now_ms()
+        for ev in rep.get("events", []):
+            st = self._inflight.get(ev["rid"])
+            if st is None:
+                continue
+            st.n_gen = int(ev.get("n_gen", st.n_gen))
+            if not ev.get("done"):
+                continue
+            driver.decode_resident.pop(ev["rid"], None)
+            if ev.get("oom"):
+                # the arena ran out mid-stream and the pool force-closed
+                # the sequence — account it as a shed, not a completion
+                self._shed(ev["rid"], st, "decode")
+            else:
+                self._complete_decode(ev["rid"], st, ev["tokens"])
+        driver.decode_active = int(rep.get("active", 0))
+        driver.decode_free = int(rep.get("free_slots", driver.decode_free))
+        self._shed_mid_decode(driver, handle, now)
+        return foreign
+
+    def _decode_admit(self, driver: PoolDriver, handle, item: BatchItem):
+        """Admit one queued decode request into the pool's running batch
+        (read lock held). The admit reply carries the FIRST generated
+        token, so TTFT stamps here."""
+        st = self._inflight.get(item.rid)
+        if st is None:
+            return
+        now = self.now_ms()
+        if self.shed_policy is not None and not st.shed_exempt:
+            blown = ShedPolicy.hopeless_decode(
+                now, st.ttft_deadline_ms, driver.est_cost_ms(),
+                st.deadline_ms, driver.tpot_est_ms(), st.max_new)
+            if blown:
+                if self.shed_policy.should_shed(item.client,
+                                                charge=st.max_new):
+                    self._shed(item.rid, st, "decode")
+                    return
+                st.shed_exempt = True
+        try:
+            t0 = self._perf()
+            r = handle.decode_admit(item.rid, item.client, item.payload,
+                                    st.max_new, sig=self._decode_sig(st))
+            admit_ms = self._perf() - t0
+        except PoolDrainingError:
+            self._reroute_item(item)
+            return
+        except Exception:
+            traceback.print_exc()
+            self._decode_local(item.rid, st, item.payload)
+            return
+        if not r.get("admitted"):
+            # soft refusal: slots/blocks are full right now (retry at a
+            # later step boundary, bounded) — or the pool cannot decode
+            # at all, which no retry fixes
+            if r.get("reason") == "not_decode_capable" \
+                    or st.decode_retries >= 2:
+                self._decode_local(item.rid, st, item.payload)
+            else:
+                st.decode_retries += 1
+                driver.batcher.put(item)
+            return
+        driver.note_exec(admit_ms)       # prefill cost feeds est_cost_ms
+        st.t_first_ms = self.now_ms()
+        st.n_gen = 1
+        if r.get("done"):
+            self._complete_decode(item.rid, st, r["tokens"])
+            return
+        driver.decode_active += 1
+        driver.decode_free = max(driver.decode_free - 1, 0)
+        driver.decode_resident[item.rid] = item.client
+
+    def _shed_mid_decode(self, driver: PoolDriver, handle,
+                         now: float) -> None:
+        """Post-step sweep: a resident stream whose remaining tokens
+        provably miss the absolute deadline at the measured step rate is
+        aborted — its slot and KV blocks go to streams that can still
+        win. Charge = tokens NOT delivered."""
+        if self.shed_policy is None or not driver.decode_resident:
+            return
+        tpot = driver.tpot_est_ms()
+        for rid in list(driver.decode_resident):
+            st = self._inflight.get(rid)
+            if st is None or st.shed_exempt:
+                continue
+            left = st.max_new - st.n_gen
+            if left <= 0:
+                continue
+            # rolling per-token deadline: the NEXT token must land within
+            # one TPOT budget, the LAST within the absolute deadline
+            if not ShedPolicy.hopeless_decode(
+                    now, now + st.tpot_ms, tpot, st.deadline_ms,
+                    tpot, left):
+                continue
+            if not self.shed_policy.should_shed(st.req.client,
+                                                charge=left):
+                st.shed_exempt = True
+                continue
+            try:
+                handle.decode_abort(rid)
+            except Exception:
+                traceback.print_exc()
+            driver.decode_resident.pop(rid, None)
+            driver.decode_active = max(driver.decode_active - 1, 0)
+            driver.decode_free += 1
+            self._shed(rid, st, "decode")
+
+    def _complete_decode(self, rid: int, st: _InFlight, tokens) -> None:
+        toks = [int(t) for t in tokens]
+        st.req.out_tokens = toks
+        st.req.result = np.asarray(toks, np.int32)
+        self._inflight.pop(rid, None)
+        if self.registry is not None:
+            self.registry.pop(rid, None)
+        t_done = self.now_ms()
+        ttft = st.t_first_ms - st.t_arrive_ms
+        n = max(len(toks), 1)
+        tpot = (t_done - st.t_first_ms) / (n - 1) if n > 1 else 0.0
+        ok = st.t_first_ms <= st.ttft_deadline_ms \
+            and t_done <= st.deadline_ms
+        self.stats["decode_served"] += 1
+        self.stats["decode_tokens"] += n
+        self._push_record({
+            "rid": rid, "client": st.req.client, "p": st.p,
+            "latency_ms": t_done - st.t_arrive_ms,
+            "budget_ms": st.budget_ms, "ok": ok, "shed": False,
+            "rerouted": st.rerouted, "local": st.local,
+            "decode": True, "n_tokens": n, "ttft_ms": ttft,
+            "tpot_ms": tpot, "t_done_ms": t_done})
+        if self.controller is not None:
+            with self._ctl_lock:
+                # TTFT is the decode analogue of one-shot latency: it is
+                # what the request's ``budget_ms`` bounds
+                self.controller.observe_done(t_done, st.req.client, ttft,
+                                             budget_ms=st.budget_ms)
+                if hasattr(self.controller, "observe_decode"):
+                    self.controller.observe_decode(
+                        t_done, st.req.client, ttft, tpot,
+                        st.budget_ms, st.tpot_ms)
+
+    def _decode_local(self, rid: int, st: _InFlight, tokens) -> None:
+        """Escape hatch mirroring :meth:`_finish_local`: greedy-decode
+        the whole request in-process with the server's own parameters —
+        same numbers as the pool path, no cache manager."""
+        import jax.numpy as jnp
+
+        from repro.models.decode import decode_step, prefill
+        st.local = True
+        self.stats["decode_local"] += 1
+        try:
+            toks = np.asarray(tokens, np.int32).reshape(-1)
+            ctx = int(toks.shape[0]) + st.max_new
+            logits, cache = prefill(self.executor.params, self.cfg,
+                                    jnp.asarray(toks)[None],
+                                    extras=st.req.extras, cache_seq=ctx)
+            out = [int(jnp.argmax(logits[0, -1]))]
+            if st.t_first_ms == 0.0:
+                st.t_first_ms = self.now_ms()
+            st.n_gen = 1
+            while len(out) < st.max_new:
+                logits, cache = decode_step(
+                    self.executor.params, self.cfg, cache,
+                    jnp.asarray([[out[-1]]], jnp.int32))
+                out.append(int(jnp.argmax(logits[0, -1])))
+                st.n_gen = len(out)
+            self._complete_decode(rid, st, out)
+        except Exception:
+            # even the fallback failed: retire as a shed so join() never
+            # strands on a decode request
+            traceback.print_exc()
+            self._shed(rid, st, "decode")
+
     def _pool_handle(self, key: tuple):
         """This server's own channel to pool ``key`` (opened lazily).
         Per-front-end channels let two front-ends' uplink submits to the
@@ -768,6 +1133,19 @@ class GraftServer:
         the client's new chain if one exists, else finish locally."""
         st = self._inflight.get(item.rid)
         if st is None:
+            return
+        if item.decode:
+            # decode re-homing: only another full-range pool will do;
+            # otherwise the local fallback keeps the stream exact
+            chain = self._decode_chain(item.client)
+            st.rerouted += 1
+            self.stats["rerouted"] += 1
+            if chain is not None:
+                st.chain = chain
+                st.stage = 0
+                self._enqueue_decode(item.rid, st)
+            else:
+                self._decode_local(item.rid, st, item.payload)
             return
         chain = self._routes.get(item.client)
         if chain:
@@ -982,6 +1360,10 @@ class GraftServer:
             "waited": self.stats["waited"],
             "shed_ingest": self.stats["shed_ingest"],
             "shed_flush": self.stats["shed_flush"],
+            "shed_decode": self.stats["shed_decode"],
+            "decode_served": self.stats["decode_served"],
+            "decode_tokens": self.stats["decode_tokens"],
+            "decode_local": self.stats["decode_local"],
             "mean_batch": float(np.mean(batch_sizes)) if batch_sizes
             else 0.0,
             "n_stage_pools": len(drivers),
@@ -1022,7 +1404,7 @@ def summarize_records(recs: list) -> dict:
         }
     lat = np.array([r["latency_ms"] for r in admitted]) if admitted \
         else np.array([0.0])
-    return {
+    out = {
         "served": len(admitted),
         "offered": len(recs),
         "shed": len(recs) - len(admitted),
@@ -1032,6 +1414,21 @@ def summarize_records(recs: list) -> dict:
         "p99_ms": float(np.percentile(lat, 99)),
         "clients": clients,
     }
+    dec = [r for r in admitted if r.get("decode")]
+    if dec:
+        ttft = np.array([r["ttft_ms"] for r in dec])
+        tpots = np.array([r["tpot_ms"] for r in dec
+                          if r.get("n_tokens", 1) > 1] or [0.0])
+        out["decode"] = {
+            "n": len(dec),
+            "tokens": int(sum(r.get("n_tokens", 1) for r in dec)),
+            "attainment": float(np.mean([r["ok"] for r in dec])),
+            "ttft_p50_ms": float(np.percentile(ttft, 50)),
+            "ttft_p99_ms": float(np.percentile(ttft, 99)),
+            "tpot_p50_ms": float(np.percentile(tpots, 50)),
+            "tpot_p99_ms": float(np.percentile(tpots, 99)),
+        }
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -115,3 +115,119 @@ def check_against_monolithic(cfg, params, reqs, *, atol=5e-5, rtol=1e-3):
         want, _ = M.forward(params, cfg, np.asarray(req.tokens)[None])
         np.testing.assert_allclose(req.result, np.asarray(want[0]),
                                    atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# decode smoke: paged-KV continuous batching vs the unbatched reference
+# ---------------------------------------------------------------------------
+
+def decode_plan(cfg, book, frags, *, batch: int = 4):
+    """Single full-range pool — the decode topology (the paged cache
+    lives pool-side, so decode needs one pool spanning the model)."""
+    flat = [dataclasses.replace(f, p=0) for f in frags]
+    return mixed_depth_plan(cfg, book, flat, s=0, batch=batch)
+
+
+def reference_decode(cfg, params, tokens, max_new: int) -> list:
+    """Unbatched greedy decode: prefill + one token at a time, no cache
+    manager — THE numerics the serving path must reproduce exactly."""
+    import jax.numpy as jnp
+    from repro.models.decode import decode_step, prefill
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    ctx = int(toks.shape[0]) + max_new
+    logits, cache = prefill(params, cfg, jnp.asarray(toks)[None],
+                            cache_seq=ctx)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    while len(out) < max_new:
+        logits, cache = decode_step(params, cfg, cache,
+                                    jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def check_decode_against_reference(cfg, params, served: list) -> None:
+    """``served``: [(ServeRequest, max_new), ...] with ``out_tokens``
+    filled in. Greedy decode must match the reference token-for-token."""
+    for req, max_new in served:
+        want = reference_decode(cfg, params, req.tokens, max_new)
+        got = list(req.out_tokens or [])
+        assert got == want, (
+            f"decode mismatch for {req.client}: served {got} != "
+            f"reference {want}")
+
+
+def run_decode_smoke(*, arch: str = DEFAULT_ARCH, n_clients: int = 3,
+                     n_requests: int = 12, seq_len: int = 12,
+                     max_new: int = 5, decode_ctx: int = 64,
+                     seed: int = 0, budget_ms: float = 4000.0,
+                     tpot_ms: float = 2000.0, log=None) -> dict:
+    """Blocking CI smoke: run the event-driven server's continuous-
+    batching decode path end-to-end in-process and check every stream's
+    tokens against the unbatched reference. Returns the server report
+    (with ``numerics_ok``); raises on a stranded run."""
+    import time
+
+    from repro.serving.executor import GraftExecutor, ServeRequest
+    from repro.serving.server import GraftServer
+    from repro.serving.transport import InProcessTransport
+
+    say = log if log is not None else (lambda *_: None)
+    cfg, book, params = smoke_setup(arch, seq_len=seq_len, seed=seed)
+    frags = smoke_fragments(cfg, n_clients, rate=30.0, seed=seed)
+    plan = decode_plan(cfg, book, frags, batch=max(n_clients, 2))
+    # small blocks so the smoke prompts span FULL blocks — the prefix
+    # index only shares full (or clean-partial) blocks, so default-sized
+    # blocks would swallow the whole prompt into one unshareable partial
+    ex = GraftExecutor(plan, params, cfg, transport=InProcessTransport(),
+                       decode_ctx=decode_ctx, kv_block_tokens=4)
+    server = GraftServer(ex, book=book).start()
+    served: list = []
+    say(f"[decode-smoke] {cfg.name}: {n_requests} streams x {max_new} "
+        f"tokens over {n_clients} clients, decode_ctx={decode_ctx}")
+    t0 = time.monotonic()
+    try:
+        for i in range(n_requests):
+            f = frags[i % len(frags)]
+            # half the streams share a per-client prompt (exercises the
+            # paged cache's prefix sharing), half are fresh
+            if i % 2 == 0:
+                crng = np.random.RandomState(seed * 131 + i)
+                toks = crng.randint(0, cfg.vocab_size,
+                                    seq_len).astype(np.int32)
+            else:
+                crng = np.random.RandomState(seed * 977
+                                             + (i % len(frags)))
+                toks = crng.randint(0, cfg.vocab_size,
+                                    seq_len).astype(np.int32)
+            req = ServeRequest(client=f.client, tokens=toks,
+                               max_new_tokens=max_new,
+                               tpot_budget_ms=tpot_ms)
+            server.submit(req, 0, budget_ms)
+            served.append((req, max_new))
+            time.sleep(0.01)
+        if not server.join(timeout=600.0):
+            raise RuntimeError("decode smoke never drained")
+        report = server.report()
+        kv = {}
+        for s in ex.pool_stats().values():
+            if s.get("kv"):
+                kv = s["kv"]
+    finally:
+        server.stop(drain=False, timeout=10.0)
+        ex.close()
+    report["wall_s"] = time.monotonic() - t0
+    done = [(r, m) for r, m in served if r.out_tokens is not None]
+    try:
+        check_decode_against_reference(cfg, params, done)
+        report["numerics_ok"] = True
+    except AssertionError as e:
+        report["numerics_ok"] = False
+        report["numerics_error"] = str(e)[:500]
+    report["numerics_checked"] = len(done)
+    report["kv"] = kv
+    say(f"[decode-smoke] served={report['decode_served']} "
+        f"local={report['decode_local']} "
+        f"prefix_hits={kv.get('prefix_hits', 0)} "
+        f"numerics_ok={report['numerics_ok']} "
+        f"({report['wall_s']:.1f}s)")
+    return report

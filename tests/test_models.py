@@ -244,3 +244,56 @@ def test_expert_parallel_multi_shard_subprocess():
                          text=True, timeout=300,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))
     assert out.returncode == 0 and "EP-OK" in out.stdout, out.stderr[-2000:]
+
+
+# ------------------------------------------- decode cache sizing (families)
+
+def test_cache_len_for_family_sizing():
+    """Regression: cache sizing must come from the FAMILY, not the raw
+    sliding_window field. An ssm model holds no KV cache even when its
+    config declares a window; a hybrid model without a declared window
+    still gets a BOUNDED cache (the default hybrid window), never a
+    cache that grows with the full sequence."""
+    import dataclasses
+    from repro.models.decode import (HYBRID_DEFAULT_WINDOW, cache_len_for,
+                                     decode_window)
+    ssm = get_smoke_config("rwkv6-7b")
+    assert decode_window(ssm) == 0
+    assert cache_len_for(ssm, 4096) == 0
+    # even with a (nonsensical) declared window, ssm caches nothing
+    ssm_w = dataclasses.replace(ssm, sliding_window=128)
+    assert cache_len_for(ssm_w, 4096) == 0
+
+    hyb = get_smoke_config("hymba-1.5b")           # declares a window
+    assert decode_window(hyb) == hyb.sliding_window
+    assert cache_len_for(hyb, 4096) == hyb.sliding_window
+    # hybrid WITHOUT a declared window: bounded by the family default,
+    # not unbounded full-seq
+    hyb0 = dataclasses.replace(hyb, sliding_window=0)
+    assert decode_window(hyb0) == HYBRID_DEFAULT_WINDOW
+    assert cache_len_for(hyb0, 100_000) == HYBRID_DEFAULT_WINDOW
+    assert cache_len_for(hyb0, 16) == 16
+
+    dense = get_smoke_config("qwen2-0.5b")         # unwindowed dense
+    assert decode_window(dense) == 0
+    assert cache_len_for(dense, 4096) == 4096
+
+
+def test_hybrid_no_window_decode_matches_forward():
+    """Regression companion: a hybrid arch with sliding_window unset must
+    still decode exactly (bounded cache, seq well under the default
+    window)."""
+    import dataclasses
+    cfg = get_smoke_config("hymba-1.5b")
+    cfg = dataclasses.replace(cfg, sliding_window=0)
+    params = M.init_params(KEY, cfg)
+    B, S, n_new = 1, 8, 3
+    toks = jax.random.randint(KEY, (B, S + n_new), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, toks)
+    _, cache = M.prefill(params, cfg, toks[:, :S], cache_seq=S + n_new)
+    for i in range(n_new):
+        ld, cache = M.decode_step(params, cfg, cache,
+                                  toks[:, S + i:S + i + 1])
+        np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                                   np.asarray(full[:, S + i], np.float32),
+                                   atol=5e-5, rtol=1e-3)
