@@ -37,10 +37,13 @@ def run(rows: Rows, *, quick=False) -> None:
     us_n = _time(naive, q, k, v)
     us_c = _time(chunked, q, k, v)
     flops = 4 * B * S * S * H * hd / 2
+    toks = B * S                          # tokens attended per call
     rows.add("kernels/attn_naive", us_n,
-             f"gflops_s={flops/us_n/1e3:.1f}")
+             f"gflops_s={flops/us_n/1e3:.1f};"
+             f"tokens_s={toks/us_n*1e6:.0f}")
     rows.add("kernels/attn_chunked", us_c,
-             f"gflops_s={flops/us_c/1e3:.1f};vs_naive={us_n/us_c:.2f}x")
+             f"gflops_s={flops/us_c/1e3:.1f};"
+             f"tokens_s={toks/us_c*1e6:.0f};vs_naive={us_n/us_c:.2f}x")
 
     T, Hh, hdd = (256, 2, 32) if quick else (1024, 4, 64)
     r = jax.random.normal(key, (B, T, Hh, hdd)) * 0.5
@@ -53,9 +56,12 @@ def run(rows: Rows, *, quick=False) -> None:
     f_chnk = jax.jit(lambda *a: ref.chunked_wkv6(*a))
     us_s = _time(f_scan, r, kk, vv, w, u, s0)
     us_k = _time(f_chnk, r, kk, vv, w, u, s0)
-    rows.add("kernels/wkv6_token_scan", us_s, "impl=lax.scan_per_token")
+    wkv_toks = B * T
+    rows.add("kernels/wkv6_token_scan", us_s,
+             f"impl=lax.scan_per_token;tokens_s={wkv_toks/us_s*1e6:.0f}")
     rows.add("kernels/wkv6_chunked", us_k,
-             f"impl=matmul_chunks;vs_scan={us_s/us_k:.2f}x")
+             f"impl=matmul_chunks;tokens_s={wkv_toks/us_k*1e6:.0f};"
+             f"vs_scan={us_s/us_k:.2f}x")
 
     run_fragment(rows, quick=quick)
 
@@ -109,13 +115,16 @@ def run_fragment(rows: Rows, *, quick=False) -> None:
         t0 = time.perf_counter()
         for mix in mixes:                      # warm pass: steady-state wall
             round_(mix)
-        exec_ms = (time.perf_counter() - t0) * 1e3 / n_rounds
+        warm_s = time.perf_counter() - t0
+        exec_ms = warm_s * 1e3 / n_rounds
         waste = inst.pad_tokens / max(inst.real_tokens + inst.pad_tokens, 1)
+        real_toks = sum(sum(mix) for mix in mixes)
         name = "packed" if packed else "padded"
         rows.add(f"kernels/fragment/{name}", exec_ms * 1e3,
                  f"fragment_exec_ms={exec_ms:.3f};"
                  f"padding_waste_frac={waste:.4f};"
                  f"recompile_count={inst.n_compiles};"
+                 f"tokens_s={real_toks/max(warm_s, 1e-9):.0f};"
                  f"cold_ms={warm_ms:.1f};rounds={n_rounds}")
 
 

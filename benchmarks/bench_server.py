@@ -86,6 +86,17 @@ def _prewarm(ex, cfg, rng, max_batch):
                 h.execute([(ex.next_rid(), "_warm", payload, None)])
 
 
+def _paced_round(server, cfg, frags, rng, n_paced):
+    """One paced round at realistic budgets; returns the round's report."""
+    mark = server.mark()
+    for _ in range(n_paced):
+        for req, p in _waves(cfg, frags, rng, 1):
+            server.submit(req, p, budget_ms=80.0)
+        time.sleep(0.02)
+    server.join(timeout=300.0)
+    return server.report(since=mark)
+
+
 def _pack_stats(ex) -> dict:
     """Aggregate padding/compile counters across an executor's pools."""
     st = ex.pool_stats().values()
@@ -100,6 +111,7 @@ def run(rows: Rows, *, quick=False) -> None:
     from repro.core import Fragment
     from repro.serving import GraftExecutor, GraftServer
     from repro.serving.smoke import mixed_depth_plan, smoke_setup
+    from repro.serving.telemetry import Telemetry
 
     # 4-block reduced model so the aligned topology has real depth:
     # p=0 clients run align [0,1) -> shared [1,4); p=1 clients go direct
@@ -139,6 +151,7 @@ def run(rows: Rows, *, quick=False) -> None:
                         packed=True)
     _prewarm(ex2, cfg, rng, max_batch=len(frags))
     server = GraftServer(ex2, book=book).start()
+    server_on = None                  # telemetry-enabled twin, started later
     try:
         for req, p in _waves(cfg, frags, rng, 2):          # warm the path
             server.submit(req, p, budget_ms=0.0)
@@ -163,24 +176,55 @@ def run(rows: Rows, *, quick=False) -> None:
                  f"ms={pipe_ms:.2f};ratio={ratio:.2f};"
                  f"mean_batch={server.report()['mean_batch']:.2f}")
 
-        # ---- paced phase at realistic budgets: the latency/p99 key ------
-        # best-of-rounds: the paced p99 is a gated (blocking) metric, and
-        # a single round's tail on a small shared box is dominated by
-        # scheduler noise — the minimum across rounds is what the
-        # runtime can actually do
+        # ---- the cost of observability. "Cheap enough to leave on" is a
+        # gated claim, not a hope: a SECOND server over the same warm
+        # executor runs with a live registry and every request span-
+        # sampled, and its throughput-mode makespan is compared against
+        # the plain server's. Budget-0 makespan is the right meter:
+        # paced-mode latency at realistic budgets is dominated by
+        # deadline-alignment luck (±30% round-to-round — far above any
+        # 5% gate), while min-of-interleaved-rounds makespan converges
+        # on the true floor, where a constant per-request cost shows
+        # directly. Off/on rounds alternate order so machine-load drift
+        # hits both variants equally.
+        tel = Telemetry(process="bench", trace=True)
+        server_on = GraftServer(ex2, book=book, telemetry=tel).start()
+        for req, p in _waves(cfg, frags, rng, 2):      # warm its drivers
+            server_on.submit(req, p, budget_ms=0.0)
+        server_on.join(timeout=300.0)
+        # makespan rounds are ~0.1 s each — take plenty: the min of many
+        # interleaved rounds pins each variant's floor to well under the
+        # 5% ceiling's resolution, where a min-of-few still wobbles ±10%
+        off_times, on_times = [], []
+        for i in range(12 if quick else 20):
+            pair = [(server, off_times), (server_on, on_times)]
+            if i % 2:                 # alternate order: balanced vs drift
+                pair.reverse()
+            for srv, acc in pair:
+                reqs = _waves(cfg, frags, rng, waves)
+                t0 = time.perf_counter()
+                for req, p in reqs:
+                    srv.submit(req, p, budget_ms=0.0)
+                if not srv.join(timeout=300.0):
+                    raise RuntimeError("telemetry round never drained")
+                acc.append(time.perf_counter() - t0)
+        off_ms = min(off_times) * 1e3
+        on_ms = min(on_times) * 1e3
+        overhead = max(on_ms - off_ms, 0.0) / max(off_ms, 1e-9)
+        rows.add("server/telemetry", on_ms * 1e3,
+                 f"telemetry_overhead_frac={overhead:.4f};"
+                 f"makespan_off_ms={off_ms:.3f};makespan_on_ms={on_ms:.3f};"
+                 f"spans={len(tel.spans)}")
+
+        # ---- paced phase at realistic budgets: latency/p99 ------------
+        # Best-of-rounds: single-round tails on a small shared box are
+        # dominated by scheduler noise.
         n_paced = 10 if quick else 30
-        best = None
+        rep = None
         for _ in range(3):
-            mark = server.mark()
-            for _ in range(n_paced):
-                for req, p in _waves(cfg, frags, rng, 1):
-                    server.submit(req, p, budget_ms=80.0)
-                time.sleep(0.02)
-            server.join(timeout=300.0)
-            rep = server.report(since=mark)
-            if best is None or rep["p99_ms"] < best["p99_ms"]:
-                best = rep
-        rep = best
+            rep_i = _paced_round(server, cfg, frags, rng, n_paced)
+            if rep is None or rep_i["p99_ms"] < rep["p99_ms"]:
+                rep = rep_i
         rows.add("server/latency", rep["p99_ms"] * 1e3,
                  f"p50_ms={rep['p50_ms']:.2f};p99_ms={rep['p99_ms']:.2f};"
                  f"attainment={rep['attainment']:.3f};"
@@ -198,5 +242,7 @@ def run(rows: Rows, *, quick=False) -> None:
                      f"recompile_count={st['compiles']};"
                      f"real_tokens={st['real']};pad_tokens={st['pad']}")
     finally:
+        if server_on is not None:
+            server_on.stop(drain=False, timeout=5.0)
         server.stop(drain=False, timeout=5.0)
         ex2.close()

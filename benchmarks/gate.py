@@ -21,6 +21,10 @@ are *blocking*):
                                gained the key (PR 4) — ``scripts/ci.sh``
                                runs this gate in the default (blocking)
                                job.
+  * ``telemetry_overhead_frac`` — throughput-mode makespan inflation
+                               with telemetry (registry + full span
+                               sampling) on vs off; gated on an
+                               ABSOLUTE 5% ceiling, no baseline needed.
   * ``ttft_ms`` / ``tpot_ms`` / ``kv_block_util_frac`` — decode serving
                                (``benchmarks/bench_decode.py``,
                                continuous-batching phase): first-token
@@ -141,6 +145,12 @@ def extract_metrics(rows: list) -> dict:
             # close-on-flush baseline: recorded for the win ratio
             metrics["decode_waved_ttft_ms"] = d["ttft_ms"]
             metrics["decode_waved_toks_s"] = d["toks_s"]
+        elif name == "server/telemetry":
+            # observability cost: throughput-mode makespan inflation with
+            # the registry live + every request span-sampled, vs telemetry
+            # off over the same warm executor
+            metrics["telemetry_overhead_frac"] = d["telemetry_overhead_frac"]
+            metrics["telemetry_makespan_ms"] = d["makespan_on_ms"]
         elif name == "decode/prefix/reuse":
             metrics["decode_prefix_tokens_reused"] = \
                 d["prefix_tokens_reused"]
@@ -150,7 +160,12 @@ def extract_metrics(rows: list) -> dict:
 GATED_PREFIXES = ("planner_latency_us/", "slo_attainment/")
 GATED_KEYS = ("server_p99_ms", "fragment_exec_ms", "padding_waste_frac",
               "recompile_count", "ttft_ms", "tpot_ms",
-              "kv_block_util_frac")
+              "kv_block_util_frac", "telemetry_overhead_frac")
+
+# the observability layer's standing claim: leaving the registry +
+# tracing on may not inflate paced mean latency by more than this —
+# an ABSOLUTE ceiling, checked even before the baseline carries the key
+TELEMETRY_OVERHEAD_MAX = 0.05
 
 
 def _gated(key: str) -> bool:
@@ -160,6 +175,12 @@ def _gated(key: str) -> bool:
 def compare(metrics: dict, baseline: dict, tol: float) -> list:
     """-> list of failure strings; empty means the gate passes."""
     failures = []
+    frac = metrics.get("telemetry_overhead_frac")
+    if frac is not None and frac > TELEMETRY_OVERHEAD_MAX:
+        failures.append(
+            f"telemetry_overhead_frac: {frac:.4f} "
+            f"(> {TELEMETRY_OVERHEAD_MAX:.0%} absolute ceiling — "
+            f"telemetry is no longer cheap enough to leave on)")
     for key, base in baseline.get("metrics", {}).items():
         cur = metrics.get(key)
         if cur is None:
@@ -207,6 +228,10 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
                 failures.append(
                     f"{key}: {cur:.2f} ms vs baseline {base:.2f} ms "
                     f"(>{wide:.0%} slower)")
+        elif key == "telemetry_overhead_frac":
+            # gated on the absolute ceiling above, not the baseline —
+            # "5% slower than an already-5% overhead" is not a pass
+            pass
         elif key == "kv_block_util_frac":
             # arena utilization is a fraction of deterministic traffic:
             # additive band, LOWER is worse (blocks held but empty —

@@ -20,6 +20,13 @@
 #                                  # decode loop over the paged KV arena;
 #                                  # every stream's tokens checked against the
 #                                  # unbatched reference (exit 1 on mismatch)
+#   ./scripts/ci.sh --obs-smoke    # observability end-to-end: short serve loop
+#                                  # with tracing + metrics on; asserts the
+#                                  # trace is Perfetto-loadable and covers the
+#                                  # request lifecycle, the metrics dump
+#                                  # parses, and every replan has an audit
+#                                  # entry (writes TRACE_ci.json /
+#                                  # METRICS_ci.json for artifact upload)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -51,6 +58,48 @@ if not ok:
     print(f"[decode-smoke] FAIL: "
           f"{report.get('numerics_error', 'no streams completed')}",
           file=sys.stderr)
+sys.exit(0 if ok else 1)
+EOF
+    exit $?
+fi
+
+if [[ "${1:-}" == "--obs-smoke" ]]; then
+    # telemetry left ON through a real serve loop (decode client included
+    # so decode/step spans land), then the artifacts are checked, not
+    # just written: non-empty Chrome-trace JSON covering
+    # ingest->queue->uplink->exec, a parseable metrics dump with live
+    # histograms, and one audit entry per replan
+    python -m repro.launch.serve --serve-loop --execute inprocess \
+        --serve-seconds 3 --clients 3 --decode-tokens 4 \
+        --trace-out TRACE_ci.json --metrics-dump METRICS_ci.json
+    python - <<'EOF'
+import json
+import sys
+
+trace = json.load(open("TRACE_ci.json"))
+events = trace["traceEvents"]
+kinds = {e["name"] for e in events if e.get("ph") == "X"}
+need = {"ingest", "queue", "uplink", "exec", "request", "decode/step"}
+missing = need - kinds
+metrics = json.load(open("METRICS_ci.json"))
+hists = metrics.get("histograms", {})
+audit = metrics.get("audit", [])
+n_spans = sum(1 for e in events if e.get("ph") == "X")
+unstamped = [e for e in audit if e.get("apply_ms") is None]
+print(f"[obs-smoke] {n_spans} spans ({len(kinds)} kinds), "
+      f"{len(hists)} histograms, {len(audit)} audit entries")
+ok = True
+if not events or missing:
+    print(f"[obs-smoke] FAIL: trace missing span kinds {sorted(missing)}",
+      file=sys.stderr)
+    ok = False
+if not hists.get("server/latency_ms", {}).get("count"):
+    print("[obs-smoke] FAIL: no latency histogram samples", file=sys.stderr)
+    ok = False
+if not audit or unstamped:
+    print(f"[obs-smoke] FAIL: {len(unstamped)}/{len(audit)} audit entries "
+          f"missing apply latency", file=sys.stderr)
+    ok = False
 sys.exit(0 if ok else 1)
 EOF
     exit $?

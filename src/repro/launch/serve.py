@@ -68,7 +68,9 @@ def run_serve_loop_cli(args) -> int:
         seconds=args.serve_seconds, rate=args.serve_rate, seed=args.seed,
         shift_frac=0.5, shaped=args.shaped, frontends=args.frontends,
         shed_budget_frac=args.shed_budget,
-        advertise_host=args.advertise_host, log=print)
+        advertise_host=args.advertise_host,
+        trace_out=args.trace_out, metrics_dump=args.metrics_dump,
+        decode_max_new=args.decode_tokens, log=print)
     print(f"[serve-loop] served {rep['served']} requests in "
           f"{rep['wall_s']:.1f}s wall "
           f"(mean batch {rep['mean_batch']:.2f}, "
@@ -92,6 +94,12 @@ def run_serve_loop_cli(args) -> int:
               f" {s['budget_ms']:9.1f}")
     print(f"[serve-loop] overall attainment {rep['attainment']:.1%}, "
           f"p50/p99 = {rep['p50_ms']:.1f}/{rep['p99_ms']:.1f} ms")
+    if rep.get("audit"):
+        n_stamped = sum(1 for e in rep["audit"]
+                        if e.get("apply_ms") is not None)
+        print(f"[serve-loop] replan audit: {len(rep['audit'])} entries "
+              f"({n_stamped} with apply latency); last triggers "
+              f"{rep['audit'][-1]['triggers']}")
     if rep["numerics_ok"]:
         print(f"[serve-loop] numerics matched monolithic forward for "
               f"{rep['numerics_checked']} served requests")
@@ -137,6 +145,18 @@ def main(argv=None):
                     help="socket mode: the address pool workers dial "
                          "back to — set the parent's routable host when "
                          "workers run on other machines")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="serve-loop: enable request tracing and write "
+                         "spans here on exit (.json = Chrome trace-event "
+                         "/ Perfetto, .jsonl = one span per line)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="serve-loop: enable telemetry and write the "
+                         "merged metrics registry + replan audit log "
+                         "here as JSON on exit")
+    ap.add_argument("--decode-tokens", type=int, default=0,
+                    help="serve-loop: make the last client "
+                         "autoregressive, generating this many tokens "
+                         "per request (0 = all one-shot)")
     args = ap.parse_args(argv)
 
     if args.serve_loop:

@@ -50,6 +50,11 @@ class BatchItem:
                                      # on the pool's channel (stage 0 only)
     n_tokens: int = 0                # sequence length of the payload (what
                                      # a token-budget batch close counts)
+    trace: bool = False              # span context: this request won the
+                                     # telemetry trace-sampling draw, so
+                                     # every hop (queue, uplink, exec —
+                                     # including the worker side, via the
+                                     # wire dict) records a span for it
     # -- decode (autoregressive) requests only --
     decode: bool = False             # route to the pool's decode batch
     max_new: int = 0                 # decode length budget (tokens to emit)

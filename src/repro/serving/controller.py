@@ -36,6 +36,7 @@ import numpy as np
 from repro.core.fragment import Fragment
 from repro.core.planner import ExecutionPlan
 from repro.core.plandiff import diff_plans, plan_pools, PlanDiff
+from repro.serving.telemetry import audit_entry
 
 
 @dataclass
@@ -131,6 +132,10 @@ class ServingController:
                       "pools_kept": 0, "pools_added": 0, "pools_removed": 0}
         self.last_diff: Optional[PlanDiff] = None        # diff of last replan
         self.log: list = []                              # (t_ms, triggers, diff summary)
+        # structured audit: one telemetry.audit_entry per replan, with
+        # the window estimates that fired it; the server stamps apply
+        # latency via note_apply once the transition lands
+        self.audit: list = []
 
     # ------------------------------------------------------------ observe
     def observe_arrival(self, now_ms: float, client: str, model: str,
@@ -374,7 +379,19 @@ class ServingController:
         self.stats["pools_kept"] += diff.n_kept
         self.stats["pools_added"] += s["add"]
         self.stats["pools_removed"] += s["remove"]
-        self.log.append((now_ms, sorted(set(trig)) or ["forced"], s))
+        trig_names = sorted(set(trig)) or ["forced"]
+        self.log.append((now_ms, trig_names, s))
+        window = {name: {"rate": round(e.rate, 3),
+                         "budget_ms": round(e.budget_ms, 3),
+                         "bw": round(e.bw, 1),
+                         "risk": round(e.risk, 4),
+                         "tpot_risk": round(e.tpot_risk, 4),
+                         "shed_frac": round(e.shed_frac, 4),
+                         "from_prior": e.from_prior}
+                  for name, e in sorted(est.items())}
+        entry = audit_entry(now_ms, trig_names, window, s)
+        entry["replan_ms"] = round(replan_ms, 3)
+        self.audit.append(entry)
         self._plan = plan
         self._planned_q = {f.client: f.q for f in frags}
         self._planned_p = {f.client: f.p for f in frags}
@@ -392,6 +409,12 @@ class ServingController:
             w.sheds.clear()
         self._last_replan_ms = now_ms
         return plan
+
+    def note_apply(self, apply_ms: float) -> None:
+        """Stamp the live-transition latency onto the most recent audit
+        entry (the server calls this right after ``apply`` returns)."""
+        if self.audit and self.audit[-1]["apply_ms"] is None:
+            self.audit[-1]["apply_ms"] = round(apply_ms, 3)
 
     def plan_diff(self, new_plan: ExecutionPlan) -> PlanDiff:
         """Diff the running plan against ``new_plan``. With

@@ -29,6 +29,7 @@ import functools
 import itertools
 import os
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Optional
@@ -50,6 +51,7 @@ from repro.models.packed import (is_packable, pack_segments,
 from repro.serving.batcher import bucket_size, seq_bucket, token_bucket
 from repro.serving.kvcache import KVCacheOOM, PagedKVCache
 from repro.serving.simulator import _routing
+from repro.serving.telemetry import NULL as NULL_TELEMETRY
 from repro.serving.transport import (Channel, InProcessTransport, Transport,
                                      error_reply)
 
@@ -116,8 +118,20 @@ class FragmentInstance:
     def __init__(self, params, cfg: ModelConfig, spec: PoolSpec,
                  *, pad_buckets: bool = True, packed: bool = True,
                  chips=None, decode_ctx: int = 0, kv_blocks: int = 64,
-                 kv_block_tokens: int = 16):
+                 kv_block_tokens: int = 16, telemetry=None):
         self.cfg = cfg
+        # in-process pools share the server's registry (merge-free);
+        # worker subprocesses get their own, which rides back on the
+        # ``stats`` op as a snapshot and merges parent-side
+        self.telemetry = telemetry if telemetry is not None \
+            else NULL_TELEMETRY
+        # True only when this instance's registry is private to a worker
+        # subprocess: then the stats snapshot may DRAIN spans (the parent
+        # adopts them). An in-process pool shares the server's registry,
+        # which must never be drained through the stats path.
+        self.owns_telemetry = False
+        self._m_exec_ms = self.telemetry.histogram("pool/exec_ms")
+        self._m_batch_tokens = self.telemetry.histogram("pool/batch_tokens")
         self.key = spec.key
         self.start, self.end = spec.start, spec.end
         self.batch = spec.batch
@@ -237,10 +251,13 @@ class FragmentInstance:
             cat = jnp.pad(cat, ((0, T - total),) + ((0, 0),) * (cat.ndim - 1))
         fn = packed_fragment_fn(self.cfg, self.end - self.start,
                                 self.start == 0, self.end == self._units)
+        t0 = time.perf_counter()
         y = self._call_counted(
             fn, self._params, cat[None], jnp.asarray(seg)[None],
             jnp.asarray(pos)[None], np.int32(self.start),
             shape_key=("packed", tuple(cat.shape), str(cat.dtype)))
+        self._m_exec_ms.record((time.perf_counter() - t0) * 1e3)
+        self._m_batch_tokens.record(total)
         self.n_batches += 1
         self.real_tokens += total
         self.pad_tokens += T - total
@@ -269,9 +286,12 @@ class FragmentInstance:
             padded.extend(padded[-1:] * (tgt - n))
             stacked = jnp.stack(padded)
             extras = self._stack_extras([r.extras for r, _, _ in items], tgt)
+            t0 = time.perf_counter()
             y = self._call_counted(
                 self._fn, self._params, inputs=stacked, extras=extras,
                 shape_key=(tuple(stacked.shape), str(stacked.dtype), sig))
+            self._m_exec_ms.record((time.perf_counter() - t0) * 1e3)
+            self._m_batch_tokens.record(sum(S for _, _, S in items))
             self.n_batches += 1
             real = sum(S for _, _, S in items)
             self.real_tokens += real
@@ -313,7 +333,8 @@ class FragmentInstance:
         self.kv = PagedKVCache(self.kv_blocks, self.kv_block_tokens,
                                n_layers=self.cfg.n_layers,
                                n_kv_heads=self.cfg.n_kv_heads,
-                               head_dim=self.cfg.head_dim_)
+                               head_dim=self.cfg.head_dim_,
+                               telemetry=self.telemetry)
         self._dc = init_cache(self.cfg, B, self.decode_ctx)
         self._slots = [None] * B
         cfg = self.cfg
@@ -507,6 +528,12 @@ class PoolService:
         # their own so uplink transfers overlap); the pool itself is one
         # resource, so its ops serialize here
         self._lock = threading.Lock()
+        # rids whose wire items carried the trace-sampling flag: the
+        # exec/decode spans for these close HERE, on the worker side of
+        # the hop, and ride back to the front-end via the stats snapshot
+        self._traced: set = set()
+        self._dtraced: set = set()            # traced resident decode rids
+        self._pool_tid = "pool/{}/{}-{}".format(*inst.key)
 
     def handle(self, msg: dict) -> dict:
         try:
@@ -519,12 +546,24 @@ class PoolService:
         req = ServeRequest(client=item["client"], tokens=None,
                            extras=item.get("extras") or None)
         req._rid = item["req_id"]
+        if item.get("trace"):
+            self._traced.add(item["req_id"])
         self.inst.submit(req, jnp.asarray(item["payload"]))
 
     def _flush_reply(self) -> dict:
+        t0 = time.perf_counter()
+        done = self.inst.flush()
+        dur = (time.perf_counter() - t0) * 1e3
+        rids = [req._rid for req, _ in done]
+        traced = [r for r in rids if r in self._traced]
+        if traced:
+            self._traced.difference_update(traced)
+            self.inst.telemetry.span(
+                "exec", "pool", dur, rid=traced[0], tid=self._pool_tid,
+                args={"rids": traced, "n_batch": len(rids)})
         return {"ok": True,
                 "results": [{"req_id": req._rid, "payload": np.asarray(y)}
-                            for req, y in self.inst.flush()]}
+                            for req, y in done]}
 
     def _dispatch(self, msg: dict) -> dict:
         op = msg.get("op")
@@ -555,16 +594,39 @@ class PoolService:
             inst.chips = [int(c) for c in msg["chips"]]
             return {"ok": True}
         if op == "dadmit":
+            t0 = time.perf_counter()
             r = inst.decode_admit(msg["req_id"], msg["client"],
                                   np.asarray(msg["tokens"], np.int32),
                                   msg["max_new"],
                                   _sig_tuple(msg.get("sig") or ()))
+            if msg.get("trace") and r.get("admitted"):
+                inst.telemetry.span(
+                    "decode/admit", "pool",
+                    (time.perf_counter() - t0) * 1e3, rid=msg["req_id"],
+                    tid=self._pool_tid,
+                    args={"n_shared": r.get("n_shared", 0)})
+                if not r.get("done"):
+                    self._dtraced.add(msg["req_id"])
             return {"ok": True, **r}
         if op == "dstep":
-            return {"ok": True, **inst.decode_step_batch()}
+            t0 = time.perf_counter()
+            r = inst.decode_step_batch()
+            traced = [ev["rid"] for ev in r["events"]
+                      if ev["rid"] in self._dtraced]
+            if traced:
+                self.inst.telemetry.span(
+                    "decode/step", "pool",
+                    (time.perf_counter() - t0) * 1e3, rid=traced[0],
+                    tid=self._pool_tid,
+                    args={"rids": traced, "active": r["active"]})
+                self._dtraced.difference_update(
+                    ev["rid"] for ev in r["events"] if ev.get("done"))
+            return {"ok": True, **r}
         if op == "dabort":
+            self._dtraced.discard(msg["req_id"])
             return {"ok": True, "aborted": inst.decode_abort(msg["req_id"])}
         if op == "stats":
+            tel = inst.telemetry
             return {"ok": True, "pid": os.getpid(),
                     "queue_len": len(inst.queue),
                     "n_batches": inst.n_batches,
@@ -578,7 +640,12 @@ class PoolService:
                     "decode_admits": inst.decode_admits,
                     "decode_steps": inst.decode_steps,
                     "decode_tokens": inst.decode_tokens,
-                    "kv": inst.kv.stats() if inst.kv else None}
+                    "kv": inst.kv.stats() if inst.kv else None,
+                    # worker-side registry rides back here and merges
+                    # parent-side (span drain hands ownership over)
+                    "telemetry": tel.snapshot(
+                        drain_spans=inst.owns_telemetry)
+                    if tel.enabled else None}
         raise ValueError(f"unknown pool op {op!r}")
 
 
@@ -610,14 +677,18 @@ class PoolHandle:
         return self._check(reply)
 
     def submit(self, req_id: int, client: str, payload,
-               extras: Optional[dict] = None) -> Optional[tuple]:
+               extras: Optional[dict] = None, *,
+               trace: bool = False) -> Optional[tuple]:
         """Enqueue one payload; returns the measured (nbytes, ms) hop,
         or None when the channel produced no sample for this request —
         callers must SKIP recording then, never log a phantom (0, 0.0)
         observation (which would seed the controller's bandwidth EWMA
-        with an infinite-bandwidth first contact)."""
+        with an infinite-bandwidth first contact). ``trace`` rides the
+        wire so the pool-side exec span closes on the right hop."""
         msg = {"op": "submit", "req_id": req_id, "client": client,
                "payload": np.asarray(payload), "extras": extras}
+        if trace:
+            msg["trace"] = True
         with self._lock:
             reply = self.channel.request(msg)
             sample = self.channel.stats.samples[-1] \
@@ -636,26 +707,31 @@ class PoolHandle:
     def execute(self, items: list) -> list:
         """Submit a whole batch and flush it in one round trip.
 
-        ``items``: [(req_id, client, payload, extras), ...]. Returns
+        ``items``: [(req_id, client, payload, extras), ...] — an optional
+        fifth element flags a trace-sampled request. Returns
         [(req_id, payload), ...] for EVERYTHING the flush produced —
         which can include previously-queued requests beyond this batch.
         """
         reply = self._call({"op": "execute", "items": [
-            {"req_id": rid, "client": client,
-             "payload": np.asarray(payload), "extras": extras}
-            for rid, client, payload, extras in items]})
+            {"req_id": it[0], "client": it[1],
+             "payload": np.asarray(it[2]), "extras": it[3],
+             **({"trace": True} if len(it) > 4 and it[4] else {})}
+            for it in items]})
         return [(r["req_id"], np.asarray(r["payload"]))
                 for r in reply["results"]]
 
     def decode_admit(self, req_id: int, client: str, tokens,
-                     max_new: int, sig: tuple = ()) -> dict:
+                     max_new: int, sig: tuple = (), *,
+                     trace: bool = False) -> dict:
         """Admit one sequence into the pool's continuous decode batch;
         the reply carries the FIRST generated token (or a soft refusal
         with ``admitted`` False and a reason)."""
-        return self._call({"op": "dadmit", "req_id": req_id,
-                           "client": client,
-                           "tokens": np.asarray(tokens, np.int32),
-                           "max_new": int(max_new), "sig": list(sig)})
+        msg = {"op": "dadmit", "req_id": req_id, "client": client,
+               "tokens": np.asarray(tokens, np.int32),
+               "max_new": int(max_new), "sig": list(sig)}
+        if trace:
+            msg["trace"] = True
+        return self._call(msg)
 
     def decode_step(self) -> dict:
         """Advance the decode batch one iteration; returns events plus
@@ -694,10 +770,12 @@ class GraftExecutor:
                  transport: Optional[Transport] = None, *,
                  packed: bool = True, decode_ctx: int = 0,
                  kv_blocks: int = 64, kv_block_tokens: int = 16,
-                 decode_disagg: bool = False):
+                 decode_disagg: bool = False, telemetry=None):
         self.cfg = cfg
         self.params = params
         self.packed = packed
+        self.telemetry = telemetry if telemetry is not None \
+            else NULL_TELEMETRY
         # decode_ctx > 0 makes full-range pools decode-capable: each owns
         # a paged KV arena of kv_blocks x kv_block_tokens token slots
         self.decode_ctx = int(decode_ctx)
@@ -736,7 +814,8 @@ class GraftExecutor:
         svc = PoolService(FragmentInstance(
             self.params, self.cfg, spec, packed=self.packed,
             decode_ctx=self.decode_ctx, kv_blocks=self.kv_blocks,
-            kv_block_tokens=self.kv_block_tokens))
+            kv_block_tokens=self.kv_block_tokens,
+            telemetry=self.telemetry))
         name = pool_endpoint(spec.key)
         self.transport.serve(name, svc.handle)
         return PoolHandle(spec.key, self.transport.connect(name))
@@ -981,6 +1060,28 @@ class GraftExecutor:
     def pool_stats(self) -> dict:
         """PoolKey -> live pool stats (pid, queue_len, n_compiles, ...)."""
         return {key: h.stats() for key, h in self._handles.items()}
+
+    def merge_telemetry(self, into=None) -> int:
+        """Poll every pool's stats op and fold worker-side telemetry
+        snapshots into ``into`` (default: this executor's registry).
+        Same-process snapshots are skipped — an in-process pool already
+        shares the registry, and re-merging it would double count.
+        Idempotent per worker (source-keyed histogram adoption), so the
+        beacon thread and a final dump can both call this. Returns the
+        number of snapshots merged."""
+        into = into if into is not None else self.telemetry
+        if not into.enabled:
+            return 0
+        n = 0
+        for key, s in self.pool_stats().items():
+            snap = s.get("telemetry")
+            if not snap or snap.get("process") == into.process:
+                continue
+            model, start, end = key
+            into.merge_snapshot(snap, source=f"{model}/{start}-{end}",
+                                prefix=f"pool/{model}/{start}-{end}/")
+            n += 1
+        return n
 
     def worker_pids(self) -> dict:
         """PoolKey -> pid of the process executing that pool."""

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.serving.batcher import ShedPolicy
 from repro.serving.server import GraftServer, summarize_records
+from repro.serving.telemetry import NULL as NULL_TELEMETRY
 
 __all__ = ["GraftFleet", "rendezvous_route", "rendezvous_table"]
 
@@ -93,6 +94,10 @@ class GraftFleet:
         self.executor = executor
         self.controller = controller
         self.book = book
+        # front-ends inherit the executor's registry (GraftServer default)
+        # so fleet-wide metrics merge for free inside the one process
+        self.telemetry = getattr(executor, "telemetry", None) \
+            or NULL_TELEMETRY
         self.shed_policy = shed_policy
         self._ingest_threads = ingest_threads
         self._hop_default_ms = hop_default_ms
@@ -262,8 +267,14 @@ class GraftFleet:
                 self.controller.ingest_uplink(now, samples)
                 plan = self.controller.control(now, force=force)
             if plan is not None:
+                t0 = time.perf_counter()
                 self.apply(plan)
+                apply_ms = (time.perf_counter() - t0) * 1e3
                 self.stats["timer_replans"] += 1
+                self.telemetry.histogram("replan/apply_ms").record(apply_ms)
+                if hasattr(self.controller, "note_apply"):
+                    with self._ctl_lock:
+                        self.controller.note_apply(apply_ms)
         # parked-request routing/expiry is NOT repeated here: each
         # front-end's own control thread still ticks those even under
         # external_control

@@ -36,6 +36,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serving.telemetry import NULL as NULL_TELEMETRY
+
 
 class KVCacheOOM(RuntimeError):
     """Block allocation failed: free list empty and nothing evictable."""
@@ -85,7 +87,8 @@ class PagedKVCache:
     """Block-granular KV arena with prefix sharing and LRU retention."""
 
     def __init__(self, n_blocks: int, block_tokens: int, *,
-                 n_layers: int, n_kv_heads: int, head_dim: int):
+                 n_layers: int, n_kv_heads: int, head_dim: int,
+                 telemetry=None):
         if n_blocks <= 0 or block_tokens <= 0:
             raise ValueError("n_blocks and block_tokens must be positive")
         self.n_blocks = n_blocks
@@ -101,6 +104,12 @@ class PagedKVCache:
         self.counters = {"allocs": 0, "frees": 0, "evictions": 0,
                          "prefix_hits": 0, "prefix_tokens_reused": 0,
                          "cow_copies": 0, "oom": 0}
+        tel = telemetry if telemetry is not None else NULL_TELEMETRY
+        self._tel_on = tel.enabled      # gates the O(n_blocks) util scan
+        self._m_util = tel.gauge("kv/util_frac")
+        self._m_evictions = tel.counter("kv/evictions")
+        self._m_cow = tel.counter("kv/cow_copies")
+        self._m_oom = tel.counter("kv/oom")
 
     # ----------------------------------------------------------- internals
     def _touch(self, blk: _Block) -> None:
@@ -122,6 +131,8 @@ class PagedKVCache:
         blk.key = None
         self._touch(blk)
         self.counters["allocs"] += 1
+        if self._tel_on:
+            self._m_util.set(self.util_frac())
         return blk
 
     def _evict_lru(self) -> _Block:
@@ -135,12 +146,14 @@ class PagedKVCache:
                 victim = blk
         if victim is None:
             self.counters["oom"] += 1
+            self._m_oom.inc()
             raise KVCacheOOM(
                 f"KV arena exhausted: {self.n_blocks} blocks all actively "
                 "referenced (nothing retained to evict)")
         if victim.key is not None:
             self._index.pop(victim.key, None)
         self.counters["evictions"] += 1
+        self._m_evictions.inc()
         victim.free = True          # immediately re-handed by _alloc_block
         return victim
 
@@ -156,6 +169,8 @@ class PagedKVCache:
         blk.tokens = ()
         self._free.append(blk.idx)
         self.counters["frees"] += 1
+        if self._tel_on:
+            self._m_util.set(self.util_frac())
 
     def _drop_ref(self, blk: _Block) -> None:
         """Release one sequence's hold. At ref 0 an INDEXED block stays
@@ -252,6 +267,7 @@ class PagedKVCache:
         self._drop_ref(blk)
         seq.blocks[-1] = fresh
         self.counters["cow_copies"] += 1
+        self._m_cow.inc()
         return fresh
 
     def append(self, rid: int, token: int, k: np.ndarray, v: np.ndarray

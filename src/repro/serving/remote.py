@@ -70,6 +70,7 @@ import numpy as np
 from repro.core.plandiff import PoolSpec
 from repro.serving.executor import (FragmentInstance, GraftExecutor,
                                     PoolHandle, PoolService)
+from repro.serving.telemetry import Telemetry
 from repro.serving.transport import (
     Channel, DEFAULT_MAX_FRAME, ShapedTransport, SocketChannel,
     SocketTransport, Transport, TruncatedFrameError, _ShapedChannel,
@@ -188,10 +189,18 @@ def _worker_loop(conn: socket.socket, connect_addr=None,
                 spec = PoolSpec(key=tuple(msg["key"]), share=msg["share"],
                                 batch=msg["batch"],
                                 n_instances=msg["n_instances"])
-                state.service = PoolService(
-                    FragmentInstance(msg["params"], cfg, spec,
-                                     packed=bool(msg.get("packed", True)),
-                                     chips=msg.get("chips")))
+                # a worker owns a PRIVATE registry: its state rides back
+                # on the stats op (spans drained — the parent takes
+                # ownership) and merges parent-side, keyed by pool
+                wtel = Telemetry(process=f"worker-{os.getpid()}") \
+                    if msg.get("telemetry") else None
+                inst = FragmentInstance(msg["params"], cfg, spec,
+                                        packed=bool(msg.get("packed", True)),
+                                        chips=msg.get("chips"),
+                                        telemetry=wtel)
+                if wtel is not None:
+                    inst.owns_telemetry = True
+                state.service = PoolService(inst)
                 reply = {"ok": True, "pid": os.getpid()}
             except Exception as e:
                 reply = error_reply(e)
@@ -513,11 +522,13 @@ class WorkerProc:
 
     # ------------------------------------------------------------- init
     def init(self, cfg_bytes: bytes, params_np, spec: PoolSpec,
-             chips=None, packed: bool = True) -> None:
+             chips=None, packed: bool = True,
+             telemetry: bool = False) -> None:
         with self._lock:
             self._init_args = {"cfg": cfg_bytes, "params": params_np,
                                "spec": spec, "packed": bool(packed),
-                               "chips": [int(c) for c in (chips or [])]}
+                               "chips": [int(c) for c in (chips or [])],
+                               "telemetry": bool(telemetry)}
             self._init_locked()
 
     def _init_locked(self) -> None:
@@ -527,7 +538,8 @@ class WorkerProc:
             "op": "init", "cfg": a["cfg"], "params": a["params"],
             "key": list(spec.key), "share": spec.share, "batch": spec.batch,
             "n_instances": spec.n_instances, "chips": a["chips"],
-            "packed": a.get("packed", True)})
+            "packed": a.get("packed", True),
+            "telemetry": a.get("telemetry", False)})
         if not reply.get("ok"):
             raise RuntimeError(f"worker init for {spec.key} failed: "
                                f"{reply.get('error')}")
@@ -688,6 +700,13 @@ class RemoteExecutor(GraftExecutor):
     * ``max_respawns`` / ``respawn_backoff_s`` — reconnect-with-backoff
       budget per worker; ``respawn_log`` records ``(key, gen)`` per
       recovery.
+    * ``beacon_interval_s`` — health beacons: a per-worker poller thread
+      issues a periodic ``stats`` request on a dedicated lane (liveness
+      ping + telemetry-snapshot piggyback) and a watchdog publishes
+      ``beacon/<pool>/age_s`` / ``wedged`` gauges; a beacon stale for
+      ``beacon_stale_s`` (default 3x the interval) triggers the same
+      ping-verified recovery path a failed request does — catching the
+      wedged-but-connected worker no request ever trips over.
     """
 
     def __init__(self, plan, params, cfg,
@@ -696,7 +715,9 @@ class RemoteExecutor(GraftExecutor):
                  launcher: Union[WorkerLauncher, Callable, None] = None,
                  per_frontend_channels: bool = True,
                  max_respawns: int = 3, respawn_backoff_s: float = 0.05,
-                 packed: bool = True):
+                 packed: bool = True, telemetry=None,
+                 beacon_interval_s: float = 0.0,
+                 beacon_stale_s: Optional[float] = None):
         self._workers: dict[tuple, WorkerProc] = {}
         self._cfg_bytes = pickle.dumps(cfg)
         self._params_np = _np_tree(params)
@@ -707,6 +728,18 @@ class RemoteExecutor(GraftExecutor):
         self.per_frontend_channels = per_frontend_channels
         self._max_respawns = max_respawns
         self._respawn_backoff_s = respawn_backoff_s
+        # health beacons: per-worker poller threads ride a dedicated
+        # dial-back lane; a watchdog turns beacon staleness into a
+        # wedged flag + recovery (see _beacon_watchdog)
+        self.beacon_interval_s = float(beacon_interval_s)
+        self.beacon_stale_s = float(beacon_stale_s) \
+            if beacon_stale_s is not None else 3.0 * self.beacon_interval_s
+        self.beacon_log: list = []              # (key, kind) staleness events
+        self._beacon_seen: dict = {}            # key -> monotonic last-ok
+        self._beacon_pollers: dict = {}         # key -> Thread
+        self._beacon_recovering: set = set()
+        self._beacon_lock = threading.Lock()
+        self._beacon_stop = threading.Event()
         tp = transport if transport is not None else SocketTransport()
         base = tp.inner if isinstance(tp, ShapedTransport) else tp
         if not isinstance(base, SocketTransport):
@@ -715,7 +748,13 @@ class RemoteExecutor(GraftExecutor):
                 f"wrapped in ShapedTransport), got {type(base).__name__}")
         self._shaper = tp if isinstance(tp, ShapedTransport) else None
         self._max_frame = base.max_frame_bytes
-        super().__init__(plan, params, cfg, transport=tp, packed=packed)
+        super().__init__(plan, params, cfg, transport=tp, packed=packed,
+                         telemetry=telemetry)
+        if self.beacon_interval_s > 0:
+            t = threading.Thread(target=self._beacon_watchdog,
+                                 daemon=True, name="worker-beacons")
+            t.start()
+            self._beacon_watchdog_thread = t
 
     def _launcher_for(self, key: tuple) -> Optional[WorkerLauncher]:
         if self._launcher is None or isinstance(self._launcher,
@@ -736,7 +775,8 @@ class RemoteExecutor(GraftExecutor):
             # birth (placement is transitioned before _deploy spawns);
             # the initial deploy binds right after packing instead
             w.init(self._cfg_bytes, self._params_np, spec,
-                   chips=self.chips_of(spec.key), packed=self.packed)
+                   chips=self.chips_of(spec.key), packed=self.packed,
+                   telemetry=self.telemetry.enabled)
         except Exception:
             w.shutdown()                 # the spawned proc must not leak
             raise
@@ -802,6 +842,93 @@ class RemoteExecutor(GraftExecutor):
         """The live WorkerProc for pool ``key`` (fault tests kill it)."""
         return self._workers[key]
 
+    # ------------------------------------------------------ health beacons
+    def _beacon_poll(self, key: tuple) -> None:
+        """One worker's beacon: periodic stats request on a DEDICATED
+        dial-back lane (never contends with the deploy channel), whose
+        reply piggybacks the worker's telemetry snapshot. Each success
+        stamps ``_beacon_seen``; the watchdog turns a stale stamp into
+        wedged/recovery. The lane transparently rebinds after respawns,
+        so a recovered worker resumes beaconing on its own."""
+        lane = None
+        while not self._beacon_stop.is_set():
+            w = self._workers.get(key)
+            if w is None or w._closed:
+                break                           # pool retired by a replan
+            try:
+                if lane is None:
+                    lane = w.open_channel()
+                reply = lane.request({"op": "stats"})
+                if reply.get("ok"):
+                    self._beacon_seen[key] = time.monotonic()
+                    snap = reply.get("telemetry")
+                    if snap and self.telemetry.enabled:
+                        model, start, end = key
+                        self.telemetry.merge_snapshot(
+                            snap, source=f"{model}/{start}-{end}",
+                            prefix=f"pool/{model}/{start}-{end}/")
+            except WorkerDiedError:
+                pass        # recover() already ran; next loop rebinds
+            except Exception:
+                pass
+            self._beacon_stop.wait(self.beacon_interval_s)
+        if lane is not None:
+            try:
+                lane.close()
+            except Exception:
+                pass
+
+    def _beacon_recover(self, key: tuple) -> None:
+        w = self._workers.get(key)
+        if w is not None:
+            try:
+                # ping-verified: a merely-slow worker answers and only
+                # the lane is invalidated; a dead/wedged one respawns
+                w.recover(w.channel)
+            except Exception:
+                traceback.print_exc()
+        with self._beacon_lock:
+            self._beacon_recovering.discard(key)
+
+    def _beacon_watchdog(self) -> None:
+        """Separate from the pollers on purpose: a poller blocked inside
+        a wedged worker's stats request cannot also be the thing that
+        notices the wedge. Each tick re-syncs pollers with the live
+        worker set (replans add/retire pools), publishes beacon-age /
+        wedged gauges, and kicks recovery when a beacon goes stale."""
+        tel = self.telemetry
+        while not self._beacon_stop.wait(self.beacon_interval_s):
+            now = time.monotonic()
+            for key in list(self._workers):
+                t = self._beacon_pollers.get(key)
+                if t is None or not t.is_alive():
+                    self._beacon_seen.setdefault(key, now)
+                    t = threading.Thread(target=self._beacon_poll,
+                                         args=(key,), daemon=True,
+                                         name=f"beacon-{key}")
+                    t.start()
+                    self._beacon_pollers[key] = t
+                label = "pool/{}/{}-{}".format(*key)
+                age = now - self._beacon_seen.get(key, now)
+                wedged = age > self.beacon_stale_s
+                tel.gauge(f"beacon/{label}/age_s").set(age)
+                tel.gauge(f"beacon/{label}/wedged").set(1.0 if wedged
+                                                        else 0.0)
+                if wedged:
+                    with self._beacon_lock:
+                        kick = key not in self._beacon_recovering
+                        if kick:
+                            self._beacon_recovering.add(key)
+                    if kick:
+                        self.beacon_log.append((key, "stale"))
+                        tel.counter("beacon/stale_events").inc()
+                        threading.Thread(target=self._beacon_recover,
+                                         args=(key,), daemon=True).start()
+            for key in list(self._beacon_pollers):
+                if key not in self._workers:
+                    self._beacon_pollers.pop(key, None)
+                    self._beacon_seen.pop(key, None)
+
     def _retire_pool(self, handle: PoolHandle) -> None:
         w = self._workers.pop(handle.key, None)
         if w is not None:
@@ -810,6 +937,7 @@ class RemoteExecutor(GraftExecutor):
             handle.close()
 
     def close(self) -> None:
+        self._beacon_stop.set()
         super().close()
         for key in list(self._workers):         # safety net
             self._workers.pop(key).shutdown()

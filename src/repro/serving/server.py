@@ -54,6 +54,8 @@ from repro.serving.batcher import (BatchItem, MicroBatcher, ShedPolicy,
                                    remaining_cost_ms)
 from repro.serving.executor import (GraftExecutor, PoolDrainingError,
                                     ServeRequest)
+from repro.serving.telemetry import (Histogram, NULL as NULL_TELEMETRY,
+                                     Telemetry)
 
 __all__ = ["GraftServer", "PoolDriver", "run_serve_loop",
            "summarize_records"]
@@ -115,6 +117,7 @@ class _InFlight:
     rerouted: int = 0
     local: bool = False              # finished by the in-process fallback
     shed_exempt: bool = False        # budget-forced admit: never shed later
+    trace: bool = False              # won the telemetry span-sampling draw
     # -- decode (autoregressive) requests only --
     decode: bool = False
     max_new: int = 0                 # decode length budget
@@ -235,8 +238,27 @@ class GraftServer:
                  registry: Optional[dict] = None,
                  foreign_router: Optional[Callable] = None,
                  decode_continuous: bool = True,
-                 tpot_default_ms: float = 50.0):
+                 tpot_default_ms: float = 50.0,
+                 telemetry=None):
         self.executor = executor
+        # default to the executor's registry so in-process pools and the
+        # server share one (merge-free); NULL when neither is enabled.
+        # Instruments are pre-bound ONCE — the disabled hot path is a
+        # single no-op method call per site.
+        self.telemetry = telemetry if telemetry is not None \
+            else getattr(executor, "telemetry", NULL_TELEMETRY)
+        tel = self.telemetry
+        self._m_ingested = tel.counter("server/ingested")
+        self._m_completed = tel.counter("server/completed")
+        self._m_shed = tel.counter("server/shed")
+        self._m_latency_ms = tel.histogram("server/latency_ms")
+        self._m_queue_ms = tel.histogram("server/queue_ms")
+        self._m_uplink_ms = tel.histogram("server/uplink_ms")
+        self._m_exec_ms = tel.histogram("server/exec_ms")
+        self._m_ttft_ms = tel.histogram("server/ttft_ms")
+        self._m_tpot_ms = tel.histogram("server/tpot_ms")
+        self._m_apply_ms = tel.histogram("replan/apply_ms")
+        self._m_inflight = tel.gauge("server/inflight")
         self.controller = controller
         self.book = book
         self.cfg = executor.cfg
@@ -427,13 +449,26 @@ class GraftServer:
                                                 self.cfg.name, p, budget_ms)
         st = _InFlight(req=req, p=p, budget_ms=budget_ms,
                        t_submit_ms=t_submit, t_arrive_ms=t_arrive,
-                       deadline_ms=t_arrive + budget_ms)
+                       deadline_ms=t_arrive + budget_ms,
+                       trace=self.telemetry.want_trace(rid))
         self._inflight[rid] = st
+        self._m_ingested.inc()
+        self._m_inflight.set(len(self._inflight))
+        if st.trace:
+            self.telemetry.span("ingest", "server", now - t_submit,
+                                rid=rid, tid=self.name,
+                                args={"client": req.client, "p": p})
         with self._rw.read():
             chain = self._routes.get(req.client)
             if chain and chain[0][1] == p:
                 st.chain = list(chain)
-                if self._shed_at_ingest(rid, st, now):
+                t_sc = self._perf()
+                shed = self._shed_at_ingest(rid, st, now)
+                if st.trace:
+                    self.telemetry.span("shed-check", "server",
+                                        self._perf() - t_sc, rid=rid,
+                                        tid=self.name, args={"shed": shed})
+                if shed:
                     return
                 self._enqueue_stage(rid, st, payload)
                 return
@@ -461,12 +496,19 @@ class GraftServer:
                        deadline_ms=t_submit + budget_ms
                        + tpot * (max_new - 1),
                        decode=True, max_new=max_new, tpot_ms=tpot,
-                       ttft_deadline_ms=t_submit + budget_ms)
+                       ttft_deadline_ms=t_submit + budget_ms,
+                       trace=self.telemetry.want_trace(rid))
         if self.controller is not None:
             with self._ctl_lock:
                 self.controller.observe_arrival(now, req.client,
                                                 self.cfg.name, 0, budget_ms)
         self._inflight[rid] = st
+        self._m_ingested.inc()
+        self._m_inflight.set(len(self._inflight))
+        if st.trace:
+            self.telemetry.span("ingest", "server", now - t_submit,
+                                rid=rid, tid=self.name,
+                                args={"client": req.client, "decode": True})
         with self._rw.read():
             chain = self._decode_chain(req.client)
             if chain is not None:
@@ -548,7 +590,7 @@ class GraftServer:
             rid=rid, client=st.req.client, payload=toks,
             flush_ms=now, deadline_ms=st.deadline_ms,
             boundary=0, enqueued_ms=now, n_tokens=int(toks.shape[0]),
-            decode=True, max_new=st.max_new,
+            trace=st.trace, decode=True, max_new=st.max_new,
             ttft_deadline_ms=st.ttft_deadline_ms,
             tpot_budget_ms=st.tpot_ms))
 
@@ -685,7 +727,14 @@ class GraftServer:
         if self.registry is not None:
             self.registry.pop(rid, None)
         self.stats["shed_" + where] += 1
+        self._m_shed.inc()
+        self._m_inflight.set(len(self._inflight))
         t = self.now_ms()
+        if st.trace:
+            self.telemetry.span("shed", "server", 0.0, rid=rid,
+                                tid=self.name,
+                                args={"client": st.req.client,
+                                      "where": where})
         self._push_record({
             "rid": rid, "client": st.req.client, "p": st.p,
             "latency_ms": t - st.t_arrive_ms, "budget_ms": st.budget_ms,
@@ -713,7 +762,7 @@ class GraftServer:
                     rid=rid, client=st.req.client, payload=payload,
                     flush_ms=now, deadline_ms=st.deadline_ms,
                     extras=self._wire_extras(st.req), boundary=key[1],
-                    enqueued_ms=now,
+                    enqueued_ms=now, trace=st.trace,
                     n_tokens=int(np.shape(payload)[0])))
             return
         now = self.now_ms()
@@ -731,7 +780,7 @@ class GraftServer:
             rid=rid, client=st.req.client, payload=payload,
             flush_ms=flush, deadline_ms=st.deadline_ms,
             extras=self._wire_extras(st.req), boundary=key[1],
-            enqueued_ms=now,
+            enqueued_ms=now, trace=st.trace,
             hop_charge_ms=hop if st.stage == 0 else 0.0,
             n_tokens=int(np.shape(payload)[0])))
 
@@ -754,6 +803,7 @@ class GraftServer:
             if not batch:
                 return None
         now = self.now_ms()
+        pool_tid = "pool/{}/{}-{}".format(*driver.key)
         stage0, later = [], []
         for it in batch:
             st = self._inflight.get(it.rid)
@@ -764,6 +814,12 @@ class GraftServer:
             if st.stage != 0 and self.shed_policy is not None \
                     and self._shed_at_flush(it, st, now):
                 continue
+            if it.trace:
+                q_ms = now - it.enqueued_ms
+                self._m_queue_ms.record(q_ms)
+                self.telemetry.span("queue", "server", q_ms,
+                                    rid=it.rid, tid=pool_tid,
+                                    args={"stage": st.stage})
             (stage0 if st.stage == 0 else later).append(it)
         if not stage0 and not later:
             return None
@@ -783,7 +839,7 @@ class GraftServer:
                 # stage-0 uplink transfers
                 t0 = self._perf()
                 results += handle.execute(
-                    [(it.rid, it.client, it.payload, it.extras)
+                    [(it.rid, it.client, it.payload, it.extras, it.trace)
                      for it in later])
                 exec_ms += self._perf() - t0
             companions = sum(it.hop_charge_ms for it in stage0)
@@ -799,7 +855,7 @@ class GraftServer:
                                       extra_ms=companions)):
                     continue
                 sample = handle.submit(it.rid, it.client, it.payload,
-                                       extras=it.extras)
+                                       extras=it.extras, trace=it.trace)
                 if sample is not None:
                     # no channel sample => nothing to record: a phantom
                     # (0, 0.0) would seed the controller's bandwidth
@@ -807,6 +863,12 @@ class GraftServer:
                     nbytes, ms = sample
                     self.executor.record_uplink(it.client, nbytes, ms)
                     self._note_uplink(it.client, ms)
+                    self._m_uplink_ms.record(ms)
+                    if it.trace:
+                        self.telemetry.span(
+                            "uplink", "server", ms, rid=it.rid,
+                            tid=pool_tid,
+                            args={"client": it.client, "nbytes": nbytes})
             if stage0:
                 t0 = self._perf()
                 results += handle.flush()
@@ -844,6 +906,7 @@ class GraftServer:
             # keep charging phantom backlog to ingest admission
             driver.busy_until_ms = self.now_ms()
         driver.note_exec(exec_ms)
+        self._m_exec_ms.record(exec_ms)
         self.stats["batches"] += 1
         foreign = None
         for rid, y in results:
@@ -920,10 +983,17 @@ class GraftServer:
                     self._shed(item.rid, st, "decode")
                     return
                 st.shed_exempt = True
+        if item.trace:
+            q_ms = now - item.enqueued_ms
+            self._m_queue_ms.record(q_ms)
+            self.telemetry.span("queue", "server", q_ms, rid=item.rid,
+                                tid="pool/{}/{}-{}".format(*driver.key),
+                                args={"decode": True})
         try:
             t0 = self._perf()
             r = handle.decode_admit(item.rid, item.client, item.payload,
-                                    st.max_new, sig=self._decode_sig(st))
+                                    st.max_new, sig=self._decode_sig(st),
+                                    trace=item.trace)
             admit_ms = self._perf() - t0
         except PoolDrainingError:
             self._reroute_item(item)
@@ -1003,6 +1073,19 @@ class GraftServer:
             and t_done <= st.deadline_ms
         self.stats["decode_served"] += 1
         self.stats["decode_tokens"] += n
+        self._m_completed.inc()
+        self._m_inflight.set(len(self._inflight))
+        self._m_latency_ms.record(t_done - st.t_arrive_ms)
+        self._m_ttft_ms.record(ttft)
+        if n > 1:
+            self._m_tpot_ms.record(tpot)
+        if st.trace:
+            self.telemetry.span("request", "server",
+                                t_done - st.t_arrive_ms, rid=rid,
+                                tid=self.name,
+                                args={"client": st.req.client, "ok": ok,
+                                      "decode": True, "n_tokens": n,
+                                      "ttft_ms": round(ttft, 3)})
         self._push_record({
             "rid": rid, "client": st.req.client, "p": st.p,
             "latency_ms": t_done - st.t_arrive_ms,
@@ -1041,11 +1124,18 @@ class GraftServer:
                 st.t_first_ms = self.now_ms()
             st.n_gen = 1
             while len(out) < st.max_new:
+                t0 = self._perf()
                 logits, cache = decode_step(
                     self.executor.params, self.cfg, cache,
                     jnp.asarray([[out[-1]]], jnp.int32))
                 out.append(int(jnp.argmax(logits[0, -1])))
                 st.n_gen = len(out)
+                if st.trace:
+                    self.telemetry.span("decode/step", "server",
+                                        self._perf() - t0, rid=rid,
+                                        tid=self.name,
+                                        args={"n_gen": len(out),
+                                              "local": True})
             self._complete_decode(rid, st, out)
         except Exception:
             # even the fallback failed: retire as a shed so join() never
@@ -1116,6 +1206,14 @@ class GraftServer:
             self.registry.pop(rid, None)
         t_done = self.now_ms()
         latency = t_done - st.t_arrive_ms
+        self._m_completed.inc()
+        self._m_inflight.set(len(self._inflight))
+        self._m_latency_ms.record(latency)
+        if st.trace:
+            self.telemetry.span("request", "server", latency, rid=rid,
+                                tid=self.name,
+                                args={"client": st.req.client,
+                                      "ok": latency <= st.budget_ms})
         self._push_record({
             "rid": rid, "client": st.req.client, "p": st.p,
             "latency_ms": latency, "budget_ms": st.budget_ms,
@@ -1227,8 +1325,14 @@ class GraftServer:
                 self.controller.ingest_uplink(now, samples)
                 plan = self.controller.control(now, force=force)
             if plan is not None:
+                t0 = self._perf()
                 self.apply(plan)
+                apply_ms = self._perf() - t0
                 self.stats["timer_replans"] += 1
+                self._m_apply_ms.record(apply_ms)
+                if hasattr(self.controller, "note_apply"):
+                    with self._ctl_lock:
+                        self.controller.note_apply(apply_ms)
         self._route_waiting()
         self._expire_waiting(self.now_ms())
         return plan
@@ -1379,6 +1483,18 @@ class GraftServer:
         return len(self._inflight)
 
 
+def _record_percentiles(vals: list) -> tuple:
+    """(p50, p99) via the telemetry bucket layout, so a report built
+    from raw records and one built from merged :class:`Histogram` states
+    (fleet/worker dumps) quote identical numbers. Resolution is the
+    bucket width (~±4.4% at the midpoint)."""
+    h = Histogram("records")
+    for v in vals:
+        h.record(float(v))
+    st = h.state()
+    return (Histogram.quantile_of(st, 0.50), Histogram.quantile_of(st, 0.99))
+
+
 def summarize_records(recs: list) -> dict:
     """Completion-log records -> the SLO report. Latency percentiles and
     attainment are computed over ADMITTED (non-shed) requests — the shed
@@ -1391,42 +1507,40 @@ def summarize_records(recs: list) -> dict:
     clients = {}
     for c, rs in sorted(by_client.items()):
         adm = [r for r in rs if not r.get("shed")]
-        lat = np.array([r["latency_ms"] for r in adm]) if adm \
-            else np.array([0.0])
+        p50, p99 = _record_percentiles([r["latency_ms"] for r in adm])
         clients[c] = {
             "n": len(adm),
             "shed": len(rs) - len(adm),
             "attainment": float(np.mean([r["ok"] for r in adm]))
             if adm else 0.0,
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
+            "p50_ms": p50,
+            "p99_ms": p99,
             "budget_ms": float(np.median([r["budget_ms"] for r in rs])),
         }
-    lat = np.array([r["latency_ms"] for r in admitted]) if admitted \
-        else np.array([0.0])
+    p50, p99 = _record_percentiles([r["latency_ms"] for r in admitted])
     out = {
         "served": len(admitted),
         "offered": len(recs),
         "shed": len(recs) - len(admitted),
         "attainment": float(np.mean([r["ok"] for r in admitted]))
         if admitted else 0.0,
-        "p50_ms": float(np.percentile(lat, 50)),
-        "p99_ms": float(np.percentile(lat, 99)),
+        "p50_ms": p50,
+        "p99_ms": p99,
         "clients": clients,
     }
     dec = [r for r in admitted if r.get("decode")]
     if dec:
-        ttft = np.array([r["ttft_ms"] for r in dec])
-        tpots = np.array([r["tpot_ms"] for r in dec
-                          if r.get("n_tokens", 1) > 1] or [0.0])
+        ttft50, ttft99 = _record_percentiles([r["ttft_ms"] for r in dec])
+        tpot50, tpot99 = _record_percentiles(
+            [r["tpot_ms"] for r in dec if r.get("n_tokens", 1) > 1])
         out["decode"] = {
             "n": len(dec),
             "tokens": int(sum(r.get("n_tokens", 1) for r in dec)),
             "attainment": float(np.mean([r["ok"] for r in dec])),
-            "ttft_p50_ms": float(np.percentile(ttft, 50)),
-            "ttft_p99_ms": float(np.percentile(ttft, 99)),
-            "tpot_p50_ms": float(np.percentile(tpots, 50)),
-            "tpot_p99_ms": float(np.percentile(tpots, 99)),
+            "ttft_p50_ms": ttft50,
+            "ttft_p99_ms": ttft99,
+            "tpot_p50_ms": tpot50,
+            "tpot_p99_ms": tpot99,
         }
     return out
 
@@ -1445,6 +1559,9 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
                    frontends: int = 1,
                    shed_budget_frac: Optional[float] = None,
                    advertise_host: str = "127.0.0.1", launcher=None,
+                   telemetry=None, trace_out: Optional[str] = None,
+                   metrics_dump: Optional[str] = None,
+                   decode_max_new: int = 0,
                    log=None) -> dict:
     """Run the full event-driven runtime wall-clock for ``seconds``.
 
@@ -1463,6 +1580,11 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
     given :class:`repro.serving.remote.WorkerLauncher` (local subprocess
     when None) — the multi-host smoke path CI drives with
     ``--advertise-host 127.0.0.1``.
+
+    ``trace_out``/``metrics_dump`` turn telemetry on (or pass an
+    explicit ``telemetry`` registry) and write the trace / metrics dump
+    on exit; ``decode_max_new > 0`` flips the last client to
+    autoregressive requests so traces cover decode steps too.
     """
     from repro.core import GraftPlanner
     from repro.models import n_fragment_units
@@ -1474,6 +1596,12 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
                                          ShapedTransport, SocketTransport)
 
     say = log if log is not None else (lambda *_: None)
+    if telemetry is not None:
+        tel = telemetry
+    elif trace_out or metrics_dump:
+        tel = Telemetry(process="serve", trace=bool(trace_out))
+    else:
+        tel = NULL_TELEMETRY
     cfg, book, params = smoke_setup(arch, seq_len=seq_len, seed=seed)
     L = n_fragment_units(cfg)
     frags = smoke_fragments(cfg, n_clients, rate=rate, seed=seed)
@@ -1482,6 +1610,8 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
         control_period_ms=control_period_ms,
         min_replan_interval_ms=control_period_ms,
         window_ms=max(2000.0, seconds * 500.0))
+    if tel.enabled:                  # controller audit lands in the dump
+        tel.audit = ctl.audit
     plan0 = ctl.bootstrap(frags, now_ms=0.0)
 
     inner = SocketTransport() if mode == "socket" else InProcessTransport()
@@ -1498,9 +1628,10 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
     if mode == "socket":
         ex = RemoteExecutor(plan0, params, cfg, transport=tp,
                             advertise_host=advertise_host,
-                            launcher=launcher)
+                            launcher=launcher, telemetry=tel,
+                            beacon_interval_s=1.0 if tel.enabled else 0.0)
     else:
-        ex = GraftExecutor(plan0, params, cfg, transport=tp)
+        ex = GraftExecutor(plan0, params, cfg, transport=tp, telemetry=tel)
 
     submitted: list = []                         # [(req, p)] for numerics
     if frontends > 1 or shed_budget_frac is not None:
@@ -1539,14 +1670,22 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
             crng = np.random.RandomState(seed * 1000 + idx)
             period = 1.0 / max(frag.q, 0.5)
             p = frag.p
+            # the LAST client optionally goes autoregressive so traces /
+            # metrics cover the decode path too (excluded from the
+            # one-shot numerics check — its result is generated tokens)
+            decode = decode_max_new > 0 and idx == len(frags) - 1
             while time.monotonic() < stop_at:
                 if (idx == 0 and shift_at is not None and L > 1
                         and time.monotonic() >= shift_at):
                     p = (frag.p + 1) % L
-                req = ServeRequest(client=frag.client, tokens=crng.randint(
-                    0, cfg.vocab_size, seq_len).astype(np.int32))
+                req = ServeRequest(
+                    client=frag.client,
+                    tokens=crng.randint(0, cfg.vocab_size,
+                                        seq_len).astype(np.int32),
+                    max_new_tokens=decode_max_new if decode else 0)
                 server.submit(req, p, frag.t)
-                submitted.append((req, p))
+                if not decode:
+                    submitted.append((req, p))
                 time.sleep(period)
 
         threads = [threading.Thread(target=client_loop, args=(i, f),
@@ -1563,6 +1702,18 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
         report["controller_replans"] = ctl.stats["replans"] - t_traffic0
         report["controller_triggers"] = dict(ctl.stats["triggers"])
         report["wall_s"] = time.monotonic() - t_start
+        if tel.enabled:
+            # pull worker-side registries while the pools are still up
+            if hasattr(ex, "merge_telemetry"):
+                ex.merge_telemetry(tel)
+            report["audit"] = [dict(e) for e in ctl.audit]
+            if trace_out:
+                n_spans = tel.write_trace(trace_out)
+                report["trace_spans"] = n_spans
+                say(f"[serve-loop] wrote {n_spans} spans -> {trace_out}")
+            if metrics_dump:
+                tel.write_metrics(metrics_dump)
+                say(f"[serve-loop] wrote metrics dump -> {metrics_dump}")
     finally:
         server.stop(drain=False, timeout=10.0)
         ex.close()

@@ -1,0 +1,255 @@
+"""Telemetry: mergeable registry invariants, lock-free instrument
+thread-safety, and span propagation — across a socket-transport pool hop
+and across a mid-traffic replan (with the audit log it must leave)."""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving.telemetry import (GROWTH, Histogram, NULL, Telemetry,
+                                     bucket_index)
+
+try:                     # minimal envs: property tests skip, the rest run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------- merge properties
+
+def _state_of(vals):
+    h = Histogram("x")
+    for v in vals:
+        h.record(v)
+    return h.state()
+
+
+def _check_merge_equals_concatenated(a, b):
+    """THE merge contract: merge(state(a), state(b)) is bit-identical in
+    buckets/count/min/max to one histogram fed the concatenated stream —
+    so fleet-merged quantiles ARE the quantiles of all the samples."""
+    merged = Histogram.merge_state(_state_of(a), _state_of(b))
+    concat = _state_of(list(a) + list(b))
+    assert merged["buckets"] == concat["buckets"]
+    assert merged["count"] == concat["count"]
+    assert merged["min"] == concat["min"]
+    assert merged["max"] == concat["max"]
+    assert math.isclose(merged["sum"], concat["sum"], rel_tol=1e-9)
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert Histogram.quantile_of(merged, q) == \
+            Histogram.quantile_of(concat, q)
+
+
+def _check_quantile_within_bucket_error(a, b, q):
+    """Merged-bucket quantiles track the true concatenated-sample
+    quantile to bucket resolution: the reported value is the geometric
+    midpoint of the bucket holding the nearest-rank sample, so it is
+    within a factor sqrt(GROWTH) of that sample."""
+    merged = Histogram.merge_state(_state_of(a), _state_of(b))
+    got = Histogram.quantile_of(merged, q)
+    ref = sorted(a + b)[int(math.floor(q * (len(a) + len(b) - 1)))]
+    slack = GROWTH ** 0.5 * (1 + 1e-6)
+    assert ref / slack <= got <= ref * slack
+
+
+if HAVE_HYPOTHESIS:
+    samples_st = st.lists(
+        st.floats(min_value=1e-6, max_value=1e9,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=200)
+
+    @given(samples_st, samples_st)
+    @settings(max_examples=80, deadline=None)
+    def test_histogram_merge_equals_concatenated_stream(a, b):
+        _check_merge_equals_concatenated(a, b)
+
+    @given(samples_st, samples_st,
+           st.sampled_from((0.25, 0.5, 0.9, 0.99)))
+    @settings(max_examples=80, deadline=None)
+    def test_merged_quantiles_within_bucket_error_of_true(a, b, q):
+        _check_quantile_within_bucket_error(a, b, q)
+
+
+def test_histogram_merge_seeded_sweep():
+    """Deterministic fallback for the properties above (always runs,
+    hypothesis or not): lognormal + pareto-ish streams of varied sizes."""
+    rng = np.random.RandomState(11)
+    for _ in range(40):
+        a = list(np.exp(rng.randn(rng.randint(1, 120)) * 3.0))
+        b = list(rng.pareto(1.5, rng.randint(1, 120)) + 1e-6)
+        _check_merge_equals_concatenated(a, b)
+        for q in (0.25, 0.5, 0.9, 0.99):
+            _check_quantile_within_bucket_error(a, b, q)
+
+
+def test_histogram_nonpositive_and_extremes():
+    h = Histogram("x")
+    for v in (-1.0, 0.0, 3.0):
+        h.record(v)
+    st_ = h.state()
+    assert st_["buckets"].get(bucket_index(-1.0)) == 2   # ZERO_IDX bucket
+    assert Histogram.quantile_of(st_, 0.0) == -1.0       # exact min
+    assert Histogram.quantile_of(st_, 1.0) == 3.0        # exact max
+
+
+# ----------------------------------------------- concurrency: lock-free inc
+
+def test_counter_and_histogram_concurrent_threads():
+    """Per-thread cells must lose nothing under concurrent increments —
+    the increment path takes no lock, only cell creation does."""
+    tel = Telemetry(process="t")
+    c = tel.counter("hits")
+    h = tel.histogram("lat")
+    n_threads, n_iter = 8, 5000
+
+    def work(i):
+        for k in range(n_iter):
+            c.inc()
+            h.record(1.0 + (k % 7))
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value() == n_threads * n_iter
+    st_ = h.state()
+    assert st_["count"] == n_threads * n_iter
+    assert st_["min"] == 1.0 and st_["max"] == 7.0
+
+
+def test_merge_snapshot_is_idempotent_per_source():
+    """Re-polling the same worker (beacon thread AND the final dump) must
+    never double count: counters land as last-write-wins prefixed gauges,
+    histograms adopt the source state wholesale."""
+    worker = Telemetry(process="worker-1")
+    worker.counter("pool/batches").inc(3)
+    for v in (2.0, 4.0):
+        worker.histogram("pool/exec_ms").record(v)
+    front = Telemetry(process="front")
+    front.histogram("pool/exec_ms").record(8.0)     # front's own sample
+    for _ in range(3):                               # three polls, one truth
+        front.merge_snapshot(worker.snapshot(), source="w1", prefix="w1/")
+    assert front.gauge("w1/pool/batches").value() == 3
+    st_ = front.histogram("pool/exec_ms").state()
+    assert st_["count"] == 3                         # 2 worker + 1 local
+    assert st_["min"] == 2.0 and st_["max"] == 8.0
+
+
+def test_null_telemetry_is_inert():
+    assert not NULL.enabled and not NULL.want_trace(1)
+    NULL.counter("x").inc()
+    NULL.histogram("x").record(1.0)
+    NULL.span("a", "b", 1.0)
+    assert NULL.counter("x").value() == 0.0 and not NULL.spans
+
+
+# ------------------------------------- span propagation: socket pool hop
+
+@pytest.mark.slow
+def test_span_propagation_across_socket_hop():
+    """A trace-sampled request crossing a real socket hop closes its exec
+    span on the WORKER side; the span and the worker's histograms ride
+    the stats reply back and merge into the front-end registry exactly
+    once (span drain is a hand-off, histogram adoption is idempotent)."""
+    from repro.core.plandiff import PoolSpec
+    from repro.serving import SocketTransport
+    from repro.serving.executor import (FragmentInstance, PoolHandle,
+                                        PoolService)
+    from repro.serving.smoke import smoke_setup
+
+    cfg, _book, params = smoke_setup()
+    key = (cfg.name, 0, 2)
+    spec = PoolSpec(key=key, share=10, batch=2, n_instances=1)
+    wtel = Telemetry(process="worker-sim", trace=True)
+    inst = FragmentInstance(params, cfg, spec, telemetry=wtel)
+    inst.owns_telemetry = True       # private registry: stats may drain
+    tp = SocketTransport()
+    tp.serve("pool", PoolService(inst).handle)
+    front = Telemetry(process="front", trace=True)
+    ch = tp.connect("pool")
+    try:
+        h = PoolHandle(key, ch)
+        rng = np.random.RandomState(0)
+        items = [(rid, "c0",
+                  rng.randint(0, cfg.vocab_size, 16).astype(np.int32),
+                  None, front.want_trace(rid)) for rid in (1, 2)]
+        out = h.execute(items)
+        assert {rid for rid, _ in out} == {1, 2}
+
+        snap = h.stats()["telemetry"]
+        assert snap["process"] == "worker-sim"
+        execs = [s for s in snap["spans"] if s["name"] == "exec"]
+        assert execs and execs[0]["rid"] in (1, 2)
+        assert execs[0]["tid"] == "pool/{}/{}-{}".format(*key)
+        n_exec = snap["histograms"]["pool/exec_ms"]["count"]
+        assert n_exec >= 1
+
+        front.merge_snapshot(snap, source="w0", prefix="w0/")
+        assert any(s["name"] == "exec" and s["pid"] == "worker-sim"
+                   for s in front.spans)
+        # drained spans are handed off: a re-poll sends nothing new, and
+        # re-merging the fresh snapshot keeps histogram counts unchanged
+        snap2 = h.stats()["telemetry"]
+        assert not snap2["spans"]
+        front.merge_snapshot(snap2, source="w0", prefix="w0/")
+        assert front.histogram("pool/exec_ms").count() == n_exec
+        # the merged registry exports one Perfetto timeline with both
+        # processes named
+        trace = front.chrome_trace()
+        names = {e["args"]["name"] for e in trace["traceEvents"]
+                 if e["ph"] == "M" and e["name"] == "process_name"}
+        assert "worker-sim" in names
+    finally:
+        ch.close()
+        tp.close()
+
+
+# --------------------------------- spans + audit across a mid-traffic replan
+
+def test_spans_and_audit_across_mid_traffic_replan(tmp_path):
+    """The wall-clock loop with telemetry ON: a timer replan fires
+    mid-traffic, every replan leaves an audit entry naming its triggers
+    and diff with the apply latency stamped, spans keep flowing after
+    the plan transition, and both artifacts parse."""
+    from repro.serving import run_serve_loop
+
+    tel = Telemetry(process="serve", trace=True)
+    trace_p = tmp_path / "trace.json"
+    metrics_p = tmp_path / "metrics.json"
+    rep = run_serve_loop(seconds=1.5, n_clients=2, rate=8.0, seed=0,
+                         shift_frac=0.5, control_period_ms=200.0,
+                         telemetry=tel, trace_out=str(trace_p),
+                         metrics_dump=str(metrics_p))
+    assert rep["served"] > 0 and rep["numerics_ok"]
+    assert rep["timer_replans"] >= 1, f"no timer replan fired: {rep}"
+
+    audit = rep["audit"]
+    assert audit, "replan fired but the audit log is empty"
+    for e in audit:
+        assert e["triggers"], "audit entry without a trigger name"
+        assert {"add", "keep", "remove"} <= set(e["diff"])
+        assert e["replan_ms"] >= 0.0 and "window" in e
+    stamped = [e for e in audit if e["apply_ms"] is not None]
+    assert len(stamped) >= rep["timer_replans"]
+
+    kinds = {s["name"] for s in tel.spans}
+    assert {"ingest", "queue", "uplink", "exec", "request"} <= kinds
+    # full sampling: EVERY admitted request closed a request span — none
+    # were dropped across the plan transitions (>= because the loop's
+    # warmup requests complete outside the report window but still trace)
+    n_request = sum(1 for s in tel.spans if s["name"] == "request")
+    assert n_request >= rep["served"]
+
+    trace = json.loads(trace_p.read_text())
+    assert any(e["ph"] == "X" and e["name"] == "request"
+               for e in trace["traceEvents"])
+    dump = json.loads(metrics_p.read_text())
+    assert dump["histograms"]["server/latency_ms"]["count"] >= \
+        rep["served"]
+    assert dump["histograms"]["replan/apply_ms"]["count"] >= len(stamped)
+    assert len(dump["audit"]) == len(audit)
