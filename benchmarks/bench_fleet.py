@@ -20,11 +20,22 @@ baseline on p99 at equal paced offered load — two front-ends' shaped
 uplink transfers overlap on separate TCP lanes instead of queueing on
 the one worker connection.
 
+``--skew`` (or suite ``router``) adds the GLOBAL-ROUTING claim: one hot
+client at 10x the offered load of the rest, weighted router (live
+load/affinity signals + work stealing) vs the static HRW ring at equal
+fleet size. HRW pins the hot client's front-end while the other idles;
+the weighted router moves the other clients off the hot front-end and
+the balancer steals the hot client's own queued overflow, so
+p99-of-admitted drops at equal attainment.
+
 Rows:
   fleet/throughput/feN     us = makespan; derived rps + attainment
   fleet/scaleout           derived ratio = thr(2fe)/thr(1fe)
   fleet/overload/noshed    derived p99/attainment at 2x load, no policy
   fleet/overload/shed      derived p99-of-admitted/attainment/shed_rate
+  fleet/skew/hrw           us = p99; static ring under hot-client skew
+  fleet/skew/weighted      us = p99; weighted router + stealing, same load
+  fleet/skew/win           derived p99_hrw/p99_weighted ratio
   fleet/remote/shared      us = p99; one worker connection per pool
   fleet/remote/perfe       us = p99; one dial-back lane per front-end
   fleet/remote/win         derived p99_shared/p99_perfe ratio
@@ -91,14 +102,15 @@ def _reqs(cfg, frags, rng, n_waves):
         for _ in range(n_waves) for f in frags]
 
 
-def _fleet(plan, params, cfg, book, frags, n_fe, shed_policy=None):
+def _fleet(plan, params, cfg, book, frags, n_fe, shed_policy=None,
+           router="weighted"):
     from repro.serving import GraftExecutor, GraftFleet
     ex = GraftExecutor(plan, params, cfg, transport=_shaped(frags))
     _prewarm_shapes(ex, cfg, np.random.RandomState(99))
     # 2 ingest threads per front-end: enough to overlap mobile parts
     # with uplink sleeps without thrashing small CI boxes
     fleet = GraftFleet(ex, n_frontends=n_fe, book=book, ingest_threads=2,
-                       shed_policy=shed_policy,
+                       shed_policy=shed_policy, router=router,
                        flush_safety_frac=0.25).start()
     return ex, fleet
 
@@ -197,6 +209,89 @@ def run_remote(rows: Rows, *, quick=False) -> None:
              f"p99_ratio={p99['shared'] / max(p99['perfe'], 1e-9):.2f}x")
 
 
+SKEW_BUDGET_MS = 2500.0       # roomy: both arms hold attainment ~1.0, so
+                              # the comparison is pure p99-of-admitted
+
+
+def run_skew(rows: Rows, *, quick=False) -> None:
+    """Hot-client skew: ONE client offers 10x the load of each of the
+    others, paced so the fleet as a whole can keep up but the hot
+    client's HRW front-end alone cannot. The static ring pins the hot
+    client (and its hash-share of the others) to one front-end; the
+    weighted router moves the others off the hot front-end as its queue
+    depth rises, and the balancer steals the hot client's own queued
+    overflow to the idle peer."""
+    from itertools import count
+    from repro.core import Fragment
+    from repro.serving import ServeRequest
+    from repro.serving.batcher import ShedPolicy
+    from repro.serving.fleet import rendezvous_route
+    from repro.serving.smoke import mixed_depth_plan, smoke_setup
+
+    fes = ["fe0", "fe1"]
+    hot = next(f"hot{i}" for i in count()
+               if rendezvous_route(f"hot{i}", fes) == "fe0")
+    groups = _spread_clients(4, fes)          # 2 normals per front-end
+    normals = sorted(groups["fe0"] + groups["fe1"])
+    cfg, book, params = smoke_setup("qwen3-1.7b", seed=0, n_layers=3)
+    frags = [Fragment(cfg.name, p=1, t=SKEW_BUDGET_MS, q=100.0,
+                      client=hot)] + \
+            [Fragment(cfg.name, p=1, t=SKEW_BUDGET_MS, q=10.0, client=c)
+             for c in normals]
+    # batch=1: every item flushes as soon as its driver frees up, so
+    # latency is pure queueing (the uplink transfers serialize per
+    # channel regardless of batch size). With batch>1 a final-wave
+    # remainder batch waits out its full EDF flush slack (~budget), and
+    # that one straggler IS the p99 — an artifact of wave arithmetic,
+    # not of routing quality.
+    plan = mixed_depth_plan(cfg, book, frags, s=1, batch=1)
+    waves = 6 if quick else 10
+    # one wave = 10 hot + 4 normal p=1 uplinks at ~25 ms each: 350 ms of
+    # transfer per wave over two per-front-end channels fits a 200 ms
+    # period only when balanced — the hot front-end alone (250 ms+) can't
+    period_s = 0.2
+    rng = np.random.RandomState(0)
+    p99 = {}
+    for label in ("hrw", "weighted"):
+        pol = ShedPolicy(budget_frac=0.9, window=64)
+        ex, fleet = _fleet(plan, params, cfg, book, frags, 2,
+                           shed_policy=pol, router=label)
+        try:
+            _warm(fleet, cfg, frags, rng)
+            mark = fleet.mark()
+            for _ in range(waves):
+                t_wave = time.perf_counter()
+                for client in [hot] * 10 + normals:
+                    req = ServeRequest(client=client, tokens=rng.randint(
+                        0, cfg.vocab_size, 16).astype(np.int32))
+                    fleet.submit(req, 1, SKEW_BUDGET_MS)
+                time.sleep(max(period_s - (time.perf_counter() - t_wave),
+                               0.0))
+            if not fleet.join(timeout=600.0):
+                raise RuntimeError("skew phase never drained")
+            rep = fleet.report(since=mark)
+            p99[label] = rep["p99_ms"]
+            shed_rate = rep["shed"] / max(rep["offered"], 1)
+            served = "+".join(str(rep["frontends"][fe]["served"])
+                              for fe in sorted(rep["frontends"]))
+            rstats = fleet.router.stats if fleet.router is not None else {}
+            rows.add(f"fleet/skew/{label}", rep["p99_ms"] * 1e3,
+                     f"p99_ms={rep['p99_ms']:.1f};"
+                     f"attainment={rep['attainment']:.3f};"
+                     f"offered={rep['offered']};"
+                     f"shed_rate={shed_rate:.2f};"
+                     f"steals={rep['steals']};"
+                     f"fe_served={served};"
+                     f"moves={rstats.get('moves', 0)};"
+                     f"fallback={rstats.get('fallback_hrw', 0)};"
+                     f"hot_x=10")
+        finally:
+            fleet.stop(drain=False, timeout=5.0)
+            ex.close()
+    rows.add("fleet/skew/win", 0.0,
+             f"p99_ratio={p99['hrw'] / max(p99['weighted'], 1e-9):.2f}x")
+
+
 def run(rows: Rows, *, quick=False) -> None:
     from repro.serving.batcher import ShedPolicy
 
@@ -274,8 +369,12 @@ if __name__ == "__main__":
                     help="run the remote per-front-end-channel claim "
                          "(worker subprocesses) instead of the "
                          "in-process scale-out/overload suites")
+    ap.add_argument("--skew", action="store_true",
+                    help="run the hot-client skew claim (weighted router "
+                         "vs HRW ring) instead of the default suites")
     args = ap.parse_args()
     rows = Rows()
     print("name,us_per_call,derived")
-    (run_remote if args.remote else run)(rows, quick=args.quick)
+    fn = run_remote if args.remote else run_skew if args.skew else run
+    fn(rows, quick=args.quick)
     rows.emit()

@@ -54,7 +54,7 @@ import io
 import json
 import sys
 
-DEFAULT_ONLY = "incremental,controller,transport,server,kernels,decode"
+DEFAULT_ONLY = "incremental,controller,transport,server,kernels,decode,router"
 DEFAULT_TOL = 0.20
 
 
@@ -117,6 +117,18 @@ def extract_metrics(rows: list) -> dict:
             kind = name.split("/")[2]
             metrics[f"fleet_{kind}_p99_ms"] = d["p99_ms"]
             metrics[f"fleet_{kind}_attainment"] = d["attainment"]
+        elif name.startswith("fleet/skew/") and name != "fleet/skew/win":
+            # hot-client skew: the weighted arm is the gated headline
+            # (router_skew_p99_ms), the HRW arm is recorded so the win
+            # ratio can be recomputed from the snapshot
+            kind = name.split("/")[2]
+            prefix = "router_skew" if kind == "weighted" else "router_hrw"
+            metrics[f"{prefix}_p99_ms"] = d["p99_ms"]
+            metrics[f"{prefix}_attainment"] = d["attainment"]
+            if kind == "weighted":
+                metrics["router_skew_steals"] = d["steals"]
+        elif name == "fleet/skew/win":
+            metrics["router_skew_win_ratio"] = d["p99_ratio"]
         elif name == "fleet/remote/win":
             # per-front-end vs shared worker channels (recorded, not
             # gated: worker-subprocess wall clock on shared runners)
@@ -160,7 +172,8 @@ def extract_metrics(rows: list) -> dict:
 GATED_PREFIXES = ("planner_latency_us/", "slo_attainment/")
 GATED_KEYS = ("server_p99_ms", "fragment_exec_ms", "padding_waste_frac",
               "recompile_count", "ttft_ms", "tpot_ms",
-              "kv_block_util_frac", "telemetry_overhead_frac")
+              "kv_block_util_frac", "telemetry_overhead_frac",
+              "router_skew_p99_ms")
 
 # the observability layer's standing claim: leaving the registry +
 # tracing on may not inflate paced mean latency by more than this —
@@ -223,6 +236,16 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
             # server_p99_ms — catches step functions (continuous
             # admission lost, a compile back on the step loop), not
             # shared-runner jitter
+            wide = 2.5 * tol
+            if cur > base * (1 + wide):
+                failures.append(
+                    f"{key}: {cur:.2f} ms vs baseline {base:.2f} ms "
+                    f"(>{wide:.0%} slower)")
+        elif key == "router_skew_p99_ms":
+            # hot-client skew p99 under the weighted router: wall-clock
+            # tail on shared runners, so the same 2.5x band — catches
+            # the router silently degrading to HRW (signals never fresh,
+            # stealing dead), not scheduler jitter
             wide = 2.5 * tol
             if cur > base * (1 + wide):
                 failures.append(

@@ -43,6 +43,7 @@ def main(argv=None) -> None:
         "transport": bench_transport.run,     # cross-process data path
         "server": bench_server.run,           # event-driven serving runtime
         "fleet": bench_fleet.run,             # multi-front-end scale-out
+        "router": bench_fleet.run_skew,       # weighted routing + stealing
         "fleet_remote": bench_fleet.run_remote,  # per-FE worker channels
         "decode": bench_decode.run,           # paged-KV continuous batching
     }

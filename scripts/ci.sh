@@ -20,6 +20,12 @@
 #                                  # decode loop over the paged KV arena;
 #                                  # every stream's tokens checked against the
 #                                  # unbatched reference (exit 1 on mismatch)
+#   ./scripts/ci.sh --route-smoke  # BLOCKING: routing subsystem end-to-end;
+#                                  # one front-end wedged mid-traffic with a
+#                                  # skewed burst queued against it — the
+#                                  # survivor must steal the queued work and
+#                                  # complete it with exact numerics (exit 1
+#                                  # on zero steals / any shed / mismatch)
 #   ./scripts/ci.sh --obs-smoke    # observability end-to-end: short serve loop
 #                                  # with tracing + metrics on; asserts the
 #                                  # trace is Perfetto-loadable and covers the
@@ -39,7 +45,7 @@ fi
 
 if [[ "${1:-}" == "--bench-gate" ]]; then
     python -m benchmarks.gate \
-        --only incremental,controller,transport,server,fleet,fleet_remote,kernels,decode \
+        --only incremental,controller,transport,server,fleet,router,fleet_remote,kernels,decode \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
     exit $?
 fi
@@ -58,6 +64,23 @@ if not ok:
     print(f"[decode-smoke] FAIL: "
           f"{report.get('numerics_error', 'no streams completed')}",
           file=sys.stderr)
+sys.exit(0 if ok else 1)
+EOF
+    exit $?
+fi
+
+if [[ "${1:-}" == "--route-smoke" ]]; then
+    python - <<'EOF'
+import sys
+from repro.serving.smoke import run_route_smoke
+
+report = run_route_smoke(log=lambda *a: print(*a, flush=True))
+ok = (report["numerics_ok"] and report["steals"] >= 1
+      and report["shed"] == 0)
+if not ok:
+    print(f"[route-smoke] FAIL: steals={report['steals']} "
+          f"shed={report['shed']} "
+          f"{report.get('numerics_error', '')}", file=sys.stderr)
 sys.exit(0 if ok else 1)
 EOF
     exit $?
@@ -130,16 +153,20 @@ if [[ "${1:-}" != "--tests" ]]; then
     # the decode serving path must stay token-exact vs the unbatched
     # reference: continuous batching + paged KV, checked in-process
     "$0" --decode-smoke
+    # the routing subsystem must keep stealing: wedge a front-end with
+    # queued work, the survivor steals and completes it token-exact
+    "$0" --route-smoke
     # BLOCKING bench gate on the fast suites: planner latency, controller
     # SLO attainment, the server_p99_ms serving-runtime tail, the
     # ragged-execution keys (fragment_exec_ms / padding_waste_frac /
-    # recompile_count from the kernels + server packing rows), and the
-    # decode keys (ttft_ms / tpot_ms / kv_block_util_frac). The slow
+    # recompile_count from the kernels + server packing rows), the
+    # decode keys (ttft_ms / tpot_ms / kv_block_util_frac), and the
+    # hot-client skew routing key (router_skew_p99_ms). The slow
     # transport/fleet benches stay in the non-blocking --bench-gate job;
     # missing non-gated baseline keys do not fail a subset run.
     # Wider tolerance than the trend-tracking job: a blocking gate on a
     # small shared runner must only trip on step-function regressions.
-    python -m benchmarks.gate --only incremental,controller,server,kernels,decode \
+    python -m benchmarks.gate --only incremental,controller,server,kernels,decode,router \
         --tolerance 0.35 \
         --baseline benchmarks/baseline.json --out BENCH_ci.json
 fi

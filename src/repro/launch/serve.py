@@ -67,7 +67,7 @@ def run_serve_loop_cli(args) -> int:
         arch=args.arch, mode=mode, n_clients=min(args.clients, 4),
         seconds=args.serve_seconds, rate=args.serve_rate, seed=args.seed,
         shift_frac=0.5, shaped=args.shaped, frontends=args.frontends,
-        shed_budget_frac=args.shed_budget,
+        router=args.router, shed_budget_frac=args.shed_budget,
         advertise_host=args.advertise_host,
         trace_out=args.trace_out, metrics_dump=args.metrics_dump,
         decode_max_new=args.decode_tokens, log=print)
@@ -85,6 +85,8 @@ def run_serve_loop_cli(args) -> int:
               f"{ {n: s['served'] for n, s in fes.items()} }, "
               f"shed {rep.get('shed', 0)}/{rep.get('offered', 0)}, "
               f"cross-dispatched {rep.get('cross_dispatched', 0)}, "
+              f"stolen {rep.get('steals', 0)} "
+              f"({rep.get('router', 'hrw')} router), "
               f"{rep.get('n_chips', 0)} chips")
     print("[serve-loop] client     n   attainment   p50 ms   p99 ms"
           "   budget ms")
@@ -137,6 +139,13 @@ def main(argv=None):
     ap.add_argument("--frontends", type=int, default=1,
                     help="serve-loop: run N GraftServer front-ends over "
                          "one shared pool fleet (GraftFleet)")
+    ap.add_argument("--router", choices=("hrw", "weighted"),
+                    default="weighted",
+                    help="serve-loop fleet routing: 'weighted' scores "
+                         "front-ends from live queue/shed/health/"
+                         "affinity signals with work stealing on "
+                         "imbalance; 'hrw' pins clients to the static "
+                         "rendezvous ring")
     ap.add_argument("--shed-budget", type=float, default=None,
                     help="serve-loop: enable the admission-control shed "
                          "policy with this per-client shed budget "

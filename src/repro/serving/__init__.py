@@ -17,6 +17,7 @@ from repro.serving.batcher import (BatchItem, MicroBatcher, ShedPolicy,
                                    bucket_size)
 from repro.serving.kvcache import KVCacheOOM, PagedKVCache
 from repro.serving.server import GraftServer, run_serve_loop
+from repro.serving.router import WeightedRouter
 from repro.serving.fleet import GraftFleet, rendezvous_route
 
 __all__ = [
@@ -28,6 +29,7 @@ __all__ = [
     "BatchItem", "MicroBatcher", "ShedPolicy", "bucket_size",
     "PagedKVCache", "KVCacheOOM",
     "GraftServer", "run_serve_loop", "GraftFleet", "rendezvous_route",
+    "WeightedRouter",
     "Transport", "InProcessTransport", "SocketTransport", "ShapedTransport",
     "LinkShape", "TransferStats", "FrameError", "TruncatedFrameError",
 ]

@@ -256,6 +256,44 @@ class MicroBatcher:
             self._pending_tokens = 0
             return out
 
+    def steal(self, k: Optional[int] = None, *, want=None) -> list:
+        """Remove and return up to ``k`` queued-not-in-flight items for a
+        work-stealing peer (every eligible item when ``k`` is None).
+        Unlike :meth:`take` this ignores ``pause()`` — stealing exists
+        precisely to pull work off a wedged front-end whose drivers have
+        stopped consuming. ``want`` filters eligibility (e.g. excluding
+        decode items whose KV state is resident here). Among eligible
+        items the ones with the MOST slack (latest flush deadline) go
+        first: they can best afford the extra hop, while an imminent
+        flush stays where its batch is about to close."""
+        with self._cond:
+            items = [heapq.heappop(self._heap)[2]
+                     for _ in range(len(self._heap))]
+            eligible = [it for it in items if want is None or want(it)]
+            n = len(eligible) if k is None \
+                else min(max(int(k), 0), len(eligible))
+            stolen = eligible[len(eligible) - n:] if n else []
+            stolen_ids = {id(it) for it in stolen}
+            self._pending_hop_ms = 0.0
+            self._pending_tokens = 0
+            for it in items:
+                if id(it) in stolen_ids:
+                    continue
+                heapq.heappush(self._heap,
+                               (it.flush_ms, next(self._seq), it))
+                self._pending_hop_ms += it.hop_charge_ms
+                self._pending_tokens += it.n_tokens
+            return stolen
+
+    def n_due(self, now_ms: float) -> int:
+        """Queued items whose flush deadline has already passed — work
+        that is LATE, as opposed to waiting out its batching window.
+        The fleet balancer steals on this, not on raw queue length: a
+        deep queue of far-future flush deadlines is deliberate slack."""
+        with self._cond:
+            return sum(1 for flush_ms, _, _ in self._heap
+                       if flush_ms <= now_ms)
+
     def next_flush_ms(self) -> Optional[float]:
         with self._cond:
             return self._heap[0][0] if self._heap else None

@@ -103,7 +103,8 @@ class ServingController:
                  bw_trend_lookahead_ms: float = 1500.0,
                  bw_trend_threshold: float = 0.25,
                  bw_trend_min_samples: int = 4,
-                 shed_trigger_frac: float = 0.1):
+                 shed_trigger_frac: float = 0.1,
+                 route_imbalance_frac: float = 0.25):
         from repro.core.reuse import IncrementalPlanner
         self.book = book
         self.planner = planner or IncrementalPlanner(book)
@@ -120,7 +121,12 @@ class ServingController:
         self.bw_trend_threshold = bw_trend_threshold
         self.bw_trend_min_samples = bw_trend_min_samples
         self.shed_trigger_frac = shed_trigger_frac
+        self.route_imbalance_frac = route_imbalance_frac
 
+        # (now_ms, frac) from the fleet's work-stealing balancer: a
+        # persistent queue-depth skew the router couldn't smooth means
+        # the PLACEMENT is lopsided, not just the routing
+        self._route_imbalance: Optional[tuple] = None
         self._clients: dict[str, ClientWindow] = {}
         self._planned_q: dict[str, float] = {}           # client -> planned RPS
         self._planned_p: dict[str, int] = {}
@@ -175,6 +181,15 @@ class ServingController:
         w = self._clients.get(client)
         if w is not None:
             w.sheds.append(now_ms)
+
+    def observe_imbalance(self, now_ms: float, frac: float) -> None:
+        """The fleet balancer reports a cross-front-end queue-depth skew
+        (victim minus thief depth over total depth) that persisted long
+        enough to trigger a steal. Stealing moved the work once; a
+        recurring skew above ``route_imbalance_frac`` fires the
+        ``route_imbalance`` trigger so the planner can rebalance the
+        capacity the skew is really about."""
+        self._route_imbalance = (now_ms, float(frac))
 
     def observe_done(self, now_ms: float, client: str,
                      server_latency_ms: float,
@@ -281,8 +296,16 @@ class ServingController:
         proj = e.bw + min(e.bw_slope, 0.0) * self.bw_trend_lookahead_ms
         return max(min(e.bw, proj), 0.05 * e.bw)
 
-    def _triggers(self, est: dict[str, Estimate]) -> list[str]:
+    def _triggers(self, est: dict[str, Estimate],
+                  now_ms: Optional[float] = None) -> list[str]:
         trig = []
+        if self._route_imbalance is not None:
+            t, frac = self._route_imbalance
+            fresh = now_ms is None or now_ms - t <= self.window_ms
+            if fresh and frac > self.route_imbalance_frac:
+                trig.append("route_imbalance")
+            elif not fresh:
+                self._route_imbalance = None   # stale skew: disarm
         for name, e in est.items():
             if name not in self._planned_q:
                 trig.append("fragment_arrival")
@@ -363,7 +386,7 @@ class ServingController:
         est = self.estimates(now_ms)
         if not est:
             return None
-        trig = self._triggers(est)
+        trig = self._triggers(est, now_ms)
         if not trig and not force:
             return None
         frags = self._fragments(est)
@@ -407,6 +430,7 @@ class ServingController:
         for w in self._clients.values():
             w.lat.clear()
             w.sheds.clear()
+        self._route_imbalance = None
         self._last_replan_ms = now_ms
         return plan
 

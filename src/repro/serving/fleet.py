@@ -9,13 +9,19 @@ over one executor** — one set of stage pools, one placement, one
 controller — and adds the two cluster-level behaviors a lone server
 cannot provide:
 
-  * **Consistent client -> ingest routing.** Clients map to front-ends
-    by rendezvous (highest-random-weight) hashing: deterministic, and
-    minimal-movement by construction — adding a front-end moves only the
-    clients that now hash highest to it; removing one moves only *its*
-    clients. In-flight requests keep draining on the old front-end
-    (:meth:`remove_frontend` drains before teardown), so a rebalance
-    never drops or reorders work that already entered the system.
+  * **Load- and cache-aware routing.** By default a
+    :class:`~repro.serving.router.WeightedRouter` scores front-ends per
+    request from live signals (queue depth, shed rate, health, KV
+    prefix affinity) with the rendezvous (highest-random-weight) ring
+    as deterministic anchor and staleness fallback; ``router="hrw"``
+    keeps the static ring alone. When imbalance persists across a
+    control tick (or a front-end is force-marked unhealthy), idle
+    front-ends *steal* queued-not-in-flight work from the loaded one,
+    with the extra hop charged against each stolen request's
+    shed-policy slack. In-flight requests keep draining on the old
+    front-end (:meth:`remove_frontend` hands queued work to survivors
+    through the same steal path before teardown), so a rebalance never
+    drops or reorders work that already entered the system.
 
   * **Fleet-wide control.** The fleet owns the controller tick: it
     ingests transport-measured uplinks, replans, and applies the diff
@@ -40,7 +46,6 @@ replans and front-end rebalances.
 """
 from __future__ import annotations
 
-import hashlib
 import threading
 import time
 import traceback
@@ -50,31 +55,13 @@ from typing import Optional
 import numpy as np
 
 from repro.serving.batcher import ShedPolicy
+from repro.serving.router import (WeightedRouter, rendezvous_route,
+                                  rendezvous_table)
 from repro.serving.server import GraftServer, summarize_records
 from repro.serving.telemetry import NULL as NULL_TELEMETRY
 
-__all__ = ["GraftFleet", "rendezvous_route", "rendezvous_table"]
-
-
-def _score(frontend: str, client: str) -> int:
-    """Deterministic HRW weight (never the salted builtin ``hash``)."""
-    h = hashlib.blake2b(f"{frontend}\x00{client}".encode(),
-                        digest_size=8).digest()
-    return int.from_bytes(h, "big")
-
-
-def rendezvous_route(client: str, frontends: list) -> str:
-    """The front-end ``client`` consistently routes to: the one with the
-    highest rendezvous hash. Stable under membership change everywhere
-    except the added/removed front-end's own winners."""
-    if not frontends:
-        raise ValueError("no front-ends to route to")
-    return max(sorted(frontends), key=lambda fe: _score(fe, client))
-
-
-def rendezvous_table(clients, frontends: list) -> dict:
-    """client -> front-end for a whole fleet (test/report helper)."""
-    return {c: rendezvous_route(c, frontends) for c in clients}
+__all__ = ["GraftFleet", "WeightedRouter", "rendezvous_route",
+           "rendezvous_table"]
 
 
 class GraftFleet:
@@ -90,6 +77,8 @@ class GraftFleet:
                  hop_default_ms: float = 1.0,
                  waiting_grace_ms: Optional[float] = None,
                  flush_safety_frac: float = 0.15,
+                 router="weighted",
+                 steal_threshold_ms: float = 50.0,
                  clock=None):
         self.executor = executor
         self.controller = controller
@@ -104,6 +93,16 @@ class GraftFleet:
         self._waiting_grace_ms = waiting_grace_ms
         self._flush_safety_frac = flush_safety_frac
         self._period_ms = getattr(controller, "control_period_ms", 250.0)
+        # router: "weighted" (default), "hrw"/None (static ring only), or
+        # a ready WeightedRouter instance (tests tune hysteresis etc.)
+        if router == "weighted":
+            router = WeightedRouter(telemetry=self.telemetry)
+        elif router in ("hrw", None):
+            router = None
+        self.router: Optional[WeightedRouter] = router
+        self.steal_threshold_ms = steal_threshold_ms
+        self._forced_unhealthy: set = set()   # set_health(False) marks
+        self._imbalance_ticks = 0             # persistence before stealing
 
         self._t0 = time.monotonic()
         self._clock = clock                   # injectable (test determinism)
@@ -118,7 +117,8 @@ class GraftFleet:
         self._started = False
         self.stats = {"replans_applied": 0, "timer_replans": 0,
                       "frontends_added": 0, "frontends_removed": 0,
-                      "cross_dispatched": 0}
+                      "cross_dispatched": 0, "steals": 0}
+        self._m_steals = self.telemetry.counter("route/steals")
         for _ in range(max(int(n_frontends), 1)):
             self._make_frontend()
 
@@ -173,14 +173,27 @@ class GraftFleet:
     def remove_frontend(self, name: str, *, drain: bool = True,
                         timeout: float = 60.0) -> bool:
         """Scale in: take ``name`` out of the routing ring FIRST (new
-        submits for its clients rendezvous to the survivors), then let
-        its in-flight requests drain on the old ingest before teardown.
-        Returns True when fully drained."""
+        submits for its clients route to the survivors), then hand its
+        queued-not-in-flight work to the least-loaded survivor through
+        the SAME steal path live rebalancing uses — one code path, one
+        set of SLO-accounting rules — and let what is already executing
+        drain on the old ingest before teardown. Returns True when
+        fully drained."""
         with self._fe_lock:
             if len(self._servers) <= 1:
                 raise ValueError("cannot remove the last front-end")
             srv = self._servers.pop(name)
+            survivors = dict(self._servers)
+            self._forced_unhealthy.discard(name)
+        if self.router is not None:
+            self.router.forget(name)
         self.stats["frontends_removed"] += 1
+        if drain and survivors:
+            now = self.now_ms()
+            thief_name = min(sorted(survivors),
+                             key=lambda n: (survivors[n].queue_depth_ms(now),
+                                            n))
+            self._steal(srv, survivors[thief_name], None)
         ok = srv.stop(drain=drain, timeout=timeout)
         with self._fe_lock:
             # keep the stopped server: its completion log and stats stay
@@ -190,18 +203,50 @@ class GraftFleet:
         return ok
 
     # ------------------------------------------------------------ routing
-    def route(self, client: str) -> GraftServer:
+    def route(self, client: str, *, digest=None) -> GraftServer:
+        """Pick the front-end for ``client``: weighted scoring over the
+        live signals when a router is configured (falling back to the
+        HRW ring on stale/missing signals), the plain ring otherwise."""
         with self._fe_lock:
-            return self._servers[rendezvous_route(client,
-                                                  list(self._servers))]
+            names = list(self._servers)
+            if self.router is None or len(names) < 2:
+                return self._servers[rendezvous_route(client, names)]
+            choice = self.router.route(client, names,
+                                       now_ms=self.now_ms(), digest=digest)
+            return self._servers[choice]
 
     def routing_table(self, clients) -> dict:
         with self._fe_lock:
             return rendezvous_table(clients, list(self._servers))
 
     def submit(self, req, p: int, budget_ms: float) -> int:
-        """Accept one request on the client's consistent front-end."""
-        return self.route(req.client).submit(req, p, budget_ms)
+        """Accept one request on the client's routed front-end. Decode
+        requests carry their prompt-prefix digest so the router can
+        score KV-cache affinity (repeated prompts land where their
+        blocks already live)."""
+        digest = None
+        if self.router is not None and \
+                getattr(req, "max_new_tokens", 0) > 0:
+            with self._fe_lock:
+                srv = next(iter(self._servers.values()), None)
+            if srv is not None:
+                try:
+                    digest = srv.request_digest(req, budget_ms)
+                except Exception:
+                    digest = None
+        return self.route(req.client, digest=digest).submit(
+            req, p, budget_ms)
+
+    def set_health(self, name: str, healthy: bool) -> None:
+        """Force-mark a front-end (un)healthy for routing and stealing.
+        An unhealthy front-end is scored off the ring and its queued
+        work becomes a priority steal target on the next tick; marking
+        it healthy again re-admits it with no further ceremony."""
+        with self._fe_lock:
+            if healthy:
+                self._forced_unhealthy.discard(name)
+            else:
+                self._forced_unhealthy.add(name)
 
     def _dispatch(self, results: list) -> None:
         """Hand results a shared pool flushed on one front-end to their
@@ -256,9 +301,102 @@ class GraftFleet:
             except Exception:
                 traceback.print_exc()
 
+    def _refresh_signals(self, now: float) -> None:
+        """Push every front-end's live signals into the router: queue
+        depth in ms of estimated work, recent shed fraction, forced
+        health marks, and the KV prefix-affinity digest."""
+        if self.router is None:
+            return
+        with self._fe_lock:
+            servers = list(self._servers.items())
+            unhealthy = set(self._forced_unhealthy)
+        for name, srv in servers:
+            try:
+                self.router.update(
+                    name, now_ms=now,
+                    queue_depth_ms=srv.queue_depth_ms(now),
+                    shed_frac=srv.recent_shed_frac(),
+                    unhealthy=name in unhealthy,
+                    affinity=srv.affinity_digest())
+            except Exception:
+                traceback.print_exc()
+
+    def _steal(self, victim: GraftServer, thief: GraftServer,
+               k: Optional[int] = None) -> int:
+        """Move up to ``k`` queued-not-in-flight items (all when None)
+        from ``victim``'s ingest to ``thief``. The extra hop is charged
+        to each stolen request's shed-policy slack by ``accept_stolen``
+        — stealing never silently blows an SLO."""
+        stolen = victim.steal_queued(k)
+        n = thief.accept_stolen(stolen)
+        if n:
+            self.stats["steals"] += n
+            self._m_steals.inc(n)
+        return n
+
+    def _balance(self, now: float) -> None:
+        """Cross-front-end work stealing. Wedged (force-unhealthy)
+        front-ends are drained immediately; plain load imbalance must
+        persist across two consecutive ticks above ``steal_threshold_ms``
+        before half the victim's queue moves — one hot flush is not a
+        reason to churn the placement the router just converged."""
+        with self._fe_lock:
+            servers = dict(self._servers)
+            unhealthy = set(self._forced_unhealthy)
+        healthy = {n: s for n, s in servers.items() if n not in unhealthy}
+        if not healthy or len(servers) < 2:
+            self._imbalance_ticks = 0
+            return
+        # deterministic thief choice: least-loaded healthy front-end,
+        # name-ordered tie-break
+        depths = {n: s.queue_depth_ms(now) for n, s in servers.items()}
+        thief_name = min(sorted(healthy),
+                         key=lambda n: (depths[n], n))
+        thief = healthy[thief_name]
+        # wedged front-ends first: their queue is going nowhere
+        for name in sorted(unhealthy):
+            srv = servers.get(name)
+            if srv is not None and srv is not thief and srv.n_queued > 0:
+                self._steal(srv, thief, None)
+        # load imbalance is judged on PRESSURE (late work: overdue flush
+        # deadlines + busy batches), not raw queue depth — a deep queue
+        # of far-future flush deadlines is deliberate batching slack and
+        # stealing it would just churn the placement
+        pressure = {n: s.steal_pressure_ms(now) for n, s in servers.items()}
+        victim_name = max(sorted(servers),
+                          key=lambda n: (pressure[n], n))
+        if victim_name == thief_name or victim_name in unhealthy:
+            self._imbalance_ticks = 0
+            return
+        imb = pressure[victim_name] - pressure[thief_name]
+        if imb <= self.steal_threshold_ms:
+            self._imbalance_ticks = 0
+            return
+        self._imbalance_ticks += 1
+        if self._imbalance_ticks < 2:
+            return                             # must persist across a tick
+        self._imbalance_ticks = 0
+        victim = servers[victim_name]
+        k = max(victim.n_queued // 2, 1)
+        self._steal(victim, thief, k)
+        if self.controller is not None and \
+                hasattr(self.controller, "observe_imbalance"):
+            total = sum(pressure.values())
+            with self._ctl_lock:
+                self.controller.observe_imbalance(
+                    now, imb / total if total > 0 else 0.0)
+
     def tick(self, *, force: bool = False):
-        """One fleet control tick: controller sees the fleet-wide event
-        stream, a replan is applied ONCE across every front-end."""
+        """One fleet control tick: routing signals refresh, persistent
+        imbalance (or a wedged front-end) triggers work stealing, then
+        the controller sees the fleet-wide event stream and a replan is
+        applied ONCE across every front-end."""
+        now = self.now_ms()
+        self._refresh_signals(now)
+        try:
+            self._balance(now)
+        except Exception:
+            traceback.print_exc()
         plan = None
         if self.controller is not None:
             now = self.now_ms()
@@ -327,7 +465,8 @@ class GraftFleet:
             live = set(self._servers)
         recs, per_fe = [], {}
         sums = {k: 0 for k in ("rerouted", "local_finishes", "waited",
-                               "shed_ingest", "shed_flush")}
+                               "shed_ingest", "shed_flush",
+                               "steals_in", "steals_out")}
         batch_sizes = []
         for name, srv in items:
             rs = srv.records((since or {}).get(name, 0))
@@ -349,6 +488,8 @@ class GraftFleet:
             "replans": self.stats["replans_applied"],
             "timer_replans": self.stats["timer_replans"],
             "cross_dispatched": self.stats["cross_dispatched"],
+            "steals": self.stats["steals"],
+            "router": "weighted" if self.router is not None else "hrw",
             "mean_batch": float(np.mean(batch_sizes)) if batch_sizes
             else 0.0,
             "n_stage_pools": self.executor.n_stage_pools,

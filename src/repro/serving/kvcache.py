@@ -31,6 +31,7 @@ dtype conversion happens at the gather/write boundary.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -81,6 +82,28 @@ def prompt_chain_keys(sig: tuple, tokens: tuple, bt: int) -> list[tuple]:
         keys.append(key)
         prev = key
     return keys
+
+
+def key_digest(key: tuple) -> int:
+    """Stable 64-bit digest of one prefix-index key. ``repr`` of the
+    chain key is deterministic (ints/strings/tuples only — never the
+    salted builtin ``hash``), so digests compare equal across processes
+    and front-ends."""
+    h = hashlib.blake2b(repr(key).encode(), digest_size=8).digest()
+    return int.from_bytes(h, "big")
+
+
+def prefix_digest(sig: tuple, tokens, block_tokens: int, *,
+                  max_chunks: int = 4) -> tuple:
+    """Compact routing digest of one prompt: hashes of its first
+    ``max_chunks`` chain keys under ``sig``. A request whose digest
+    overlaps a front-end's residency digest has prompt-prefix KV blocks
+    already live behind that front-end — the router's affinity signal."""
+    toks = tuple(int(t) for t in np.asarray(tokens).reshape(-1))
+    if not toks:
+        return ()
+    keys = prompt_chain_keys(sig, toks, block_tokens)[:max(max_chunks, 1)]
+    return tuple(key_digest(k) for k in keys)
 
 
 class PagedKVCache:
@@ -367,6 +390,16 @@ class PagedKVCache:
         if not alloc:
             return 1.0
         return sum(b.filled for b in alloc) / (len(alloc) * self.block_tokens)
+
+    def residency_digest(self, cap: int = 512) -> tuple:
+        """Compact digest of the prefix index — :func:`key_digest` of the
+        most recently touched indexed blocks' keys, newest first. This is
+        what a front-end exports into the router's affinity signal: a
+        request whose :func:`prefix_digest` overlaps it can reuse resident
+        prompt KV here instead of re-prefixing on a cold front-end."""
+        blocks = [b for b in self._blocks if b.key is not None and not b.free]
+        blocks.sort(key=lambda b: -b.tick)
+        return tuple(key_digest(b.key) for b in blocks[:max(int(cap), 0)])
 
     def stats(self) -> dict:
         return {**self.counters,

@@ -115,6 +115,7 @@ class _InFlight:
     chain: list = field(default_factory=list)   # [PoolKey, ...]
     stage: int = 0
     rerouted: int = 0
+    steal_hops: int = 0              # cross-front-end work-steal moves
     local: bool = False              # finished by the in-process fallback
     shed_exempt: bool = False        # budget-forced admit: never shed later
     trace: bool = False              # won the telemetry span-sampling draw
@@ -321,6 +322,15 @@ class GraftServer:
 
         self._uplink_ewma: dict[str, float] = {}
 
+        # router signal state: recent admit/shed outcomes (shed-rate
+        # scoring) and digests of prompt prefixes whose KV blocks were
+        # admitted through THIS front-end (cache-affinity scoring)
+        self._outcomes: deque = deque(maxlen=256)    # True = shed
+        self._affinity_lock = threading.Lock()
+        self._affinity: deque = deque()
+        self._affinity_set: set = set()
+        self.affinity_cap = 1024
+
         self._stop_evt = threading.Event()
         self._kick = threading.Event()
         self._threads: list[threading.Thread] = []
@@ -332,7 +342,8 @@ class GraftServer:
                       "waited": 0, "batches": 0,
                       "shed_ingest": 0, "shed_flush": 0,
                       "shed_decode": 0, "decode_served": 0,
-                      "decode_tokens": 0, "decode_local": 0}
+                      "decode_tokens": 0, "decode_local": 0,
+                      "steals_in": 0, "steals_out": 0}
         self._t0 = time.monotonic()
 
     # -------------------------------------------------------------- clock
@@ -534,7 +545,7 @@ class GraftServer:
             return None
         return list(chain)
 
-    def _decode_sig(self, st: _InFlight) -> tuple:
+    def _reuse_sig(self, client: str, budget_ms: float) -> tuple:
         """Prefix-sharing key: the planner's reuse signature of the
         fragment this request came from, so requests the plan treats as
         the same workload share prompt KV blocks."""
@@ -542,9 +553,42 @@ class GraftServer:
         from repro.core.reuse import fragment_signature
         quantum = getattr(getattr(self.controller, "planner", None),
                           "budget_quantum_ms", 5.0)
-        frag = Fragment(model=self.cfg.name, p=0, t=st.budget_ms, q=0.0,
-                        client=st.req.client)
+        frag = Fragment(model=self.cfg.name, p=0, t=budget_ms, q=0.0,
+                        client=client)
         return fragment_signature(frag, quantum)
+
+    def _decode_sig(self, st: _InFlight) -> tuple:
+        return self._reuse_sig(st.req.client, st.budget_ms)
+
+    def _kv_block_tokens(self) -> int:
+        return int(getattr(self.executor, "kv_block_tokens", 0) or 16)
+
+    def request_digest(self, req: ServeRequest, budget_ms: float) -> tuple:
+        """Prompt-prefix digest of one request (reuse signature + chunked
+        prompt hashes) — what the fleet router matches against each
+        front-end's :meth:`affinity_digest` so repeated prompts land
+        where their KV blocks already live."""
+        from repro.serving.kvcache import prefix_digest
+        return prefix_digest(self._reuse_sig(req.client, budget_ms),
+                             np.asarray(req.tokens).reshape(-1),
+                             self._kv_block_tokens())
+
+    def _note_affinity(self, digests) -> None:
+        """Record prompt-prefix digests admitted through this front-end
+        (bounded LRU — the router's cache-affinity signal)."""
+        with self._affinity_lock:
+            for d in digests:
+                if d in self._affinity_set:
+                    continue
+                while len(self._affinity) >= self.affinity_cap:
+                    self._affinity_set.discard(self._affinity.popleft())
+                self._affinity.append(d)
+                self._affinity_set.add(d)
+
+    def affinity_digest(self) -> frozenset:
+        """Digests of prompt prefixes whose KV was admitted here."""
+        with self._affinity_lock:
+            return frozenset(self._affinity_set)
 
     def _shed_decode_at_ingest(self, rid: int, st: _InFlight,
                                now: float) -> bool:
@@ -727,6 +771,7 @@ class GraftServer:
         if self.registry is not None:
             self.registry.pop(rid, None)
         self.stats["shed_" + where] += 1
+        self._outcomes.append(True)
         self._m_shed.inc()
         self._m_inflight.set(len(self._inflight))
         t = self.now_ms()
@@ -989,10 +1034,11 @@ class GraftServer:
             self.telemetry.span("queue", "server", q_ms, rid=item.rid,
                                 tid="pool/{}/{}-{}".format(*driver.key),
                                 args={"decode": True})
+        sig = self._decode_sig(st)
         try:
             t0 = self._perf()
             r = handle.decode_admit(item.rid, item.client, item.payload,
-                                    st.max_new, sig=self._decode_sig(st),
+                                    st.max_new, sig=sig,
                                     trace=item.trace)
             admit_ms = self._perf() - t0
         except PoolDrainingError:
@@ -1014,6 +1060,9 @@ class GraftServer:
                 driver.batcher.put(item)
             return
         driver.note_exec(admit_ms)       # prefill cost feeds est_cost_ms
+        from repro.serving.kvcache import prefix_digest
+        self._note_affinity(prefix_digest(sig, item.payload,
+                                          self._kv_block_tokens()))
         st.t_first_ms = self.now_ms()
         st.n_gen = 1
         if r.get("done"):
@@ -1073,6 +1122,7 @@ class GraftServer:
             and t_done <= st.deadline_ms
         self.stats["decode_served"] += 1
         self.stats["decode_tokens"] += n
+        self._outcomes.append(False)
         self._m_completed.inc()
         self._m_inflight.set(len(self._inflight))
         self._m_latency_ms.record(t_done - st.t_arrive_ms)
@@ -1179,6 +1229,117 @@ class GraftServer:
             for rid, y in results:
                 self._advance(rid, y)
 
+    # ------------------------------------------------------ work stealing
+    def steal_queued(self, k: Optional[int] = None) -> list:
+        """Hand up to ``k`` queued-NOT-in-flight one-shot items (every
+        eligible item when None) to a peer front-end. Taken under the
+        writer lock so no driver can pop a batch containing them
+        mid-steal; decode items stay — their KV residency and step
+        cadence belong to the pool this front-end admitted them into.
+        Returns ``[(BatchItem, _InFlight)]`` pairs; the request leaves
+        this front-end's in-flight table and join() accounting entirely
+        (the thief's :meth:`accept_stolen` picks both up), so a steal
+        can never strand or double-count a rid."""
+        stolen: list = []
+        with self._rw.write():
+            for drv in list(self._drivers.values()):
+                room = None if k is None else k - len(stolen)
+                if room is not None and room <= 0:
+                    break
+                stolen.extend(drv.batcher.steal(
+                    room, want=lambda it: not it.decode))
+        out = []
+        for item in stolen:
+            st = self._inflight.pop(item.rid, None)
+            if st is None:                    # shed/completed mid-steal
+                continue
+            out.append((item, st))
+        if out:
+            self.stats["steals_out"] += len(out)
+            self._m_inflight.set(len(self._inflight))
+            with self._done_cond:
+                self._n_submitted -= len(out)
+                self._done_cond.notify_all()
+        return out
+
+    def accept_stolen(self, stolen: list) -> int:
+        """Adopt ``(BatchItem, _InFlight)`` pairs stolen off a peer
+        front-end. The extra hop is charged to the request's shed-policy
+        slack: the normal flush checkpoint decides (honoring
+        ``shed_exempt`` and the per-client budget), but the request is
+        NEVER re-billed as a fresh admission — no ``note_admitted``, so
+        one request holds exactly one window entry however many times it
+        is stolen. Returns the number of requests adopted (sheds on
+        arrival included — they are accounted here, not dropped)."""
+        if not stolen:
+            return 0
+        with self._done_cond:
+            self._n_submitted += len(stolen)
+        with self._rw.read():
+            for item, st in stolen:
+                st.steal_hops += 1
+                self._inflight[item.rid] = st
+                if self.registry is not None:
+                    self.registry[item.rid] = self
+                self.stats["steals_in"] += 1
+                now = self.now_ms()
+                hop = self._hop_ms(item.client)
+                if self.shed_policy is not None and \
+                        self._shed_at_flush(item, st, now, extra_ms=hop):
+                    continue
+                self._reroute_item(item, count=False)
+        self._m_inflight.set(len(self._inflight))
+        return len(stolen)
+
+    # ------------------------------------------------------ router signals
+    @property
+    def n_queued(self) -> int:
+        """Queued-not-in-flight items across every pool batcher."""
+        return sum(len(d.batcher) for d in list(self._drivers.values()))
+
+    def queue_depth_ms(self, now: Optional[float] = None) -> float:
+        """Estimated milliseconds of work backed up on this front-end:
+        queued uplink charges, the batch each driver is already pushing
+        (``busy_until_ms``), execution of the queued batches, and the
+        ingest queue still awaiting mobile parts. This is the router's
+        load signal — the marginal wait a new request would inherit."""
+        t = self.now_ms() if now is None else now
+        total = 0.0
+        for drv in list(self._drivers.values()):
+            q = len(drv.batcher)
+            total += drv.batcher.pending_hop_ms \
+                + max(drv.busy_until_ms - t, 0.0)
+            if q:
+                total += (q / max(drv.batcher.max_batch, 1)) \
+                    * drv.est_cost_ms()
+        with self._ingest_cond:
+            n_ingest = len(self._ingest_q)
+        return total + n_ingest * self.hop_default_ms
+
+    def steal_pressure_ms(self, now: Optional[float] = None) -> float:
+        """Milliseconds of work that is LATE on this front-end: batches
+        already pushing (``busy_until_ms``) plus execution of queued
+        items whose flush deadline has passed. Items waiting out a
+        future flush deadline are deliberate batching slack, not
+        pressure — stealing them churns placement without helping
+        latency, so the fleet balancer keys its imbalance test on this
+        instead of :meth:`queue_depth_ms`."""
+        t = self.now_ms() if now is None else now
+        total = 0.0
+        for drv in list(self._drivers.values()):
+            total += max(drv.busy_until_ms - t, 0.0)
+            due = drv.batcher.n_due(t)
+            if due:
+                total += (due / max(drv.batcher.max_batch, 1)) \
+                    * drv.est_cost_ms()
+        return total
+
+    def recent_shed_frac(self) -> float:
+        """Shed fraction over the last ~256 outcomes on this front-end
+        (the router's shed-rate penalty input)."""
+        o = list(self._outcomes)
+        return sum(o) / len(o) if o else 0.0
+
     def _advance(self, rid: int, y) -> None:
         st = self._inflight.get(rid)
         if st is None:
@@ -1206,6 +1367,7 @@ class GraftServer:
             self.registry.pop(rid, None)
         t_done = self.now_ms()
         latency = t_done - st.t_arrive_ms
+        self._outcomes.append(False)
         self._m_completed.inc()
         self._m_inflight.set(len(self._inflight))
         self._m_latency_ms.record(latency)
@@ -1226,9 +1388,12 @@ class GraftServer:
                                              budget_ms=st.budget_ms)
 
     # ------------------------------------------------- reroute / fallback
-    def _reroute_item(self, item: BatchItem) -> None:
+    def _reroute_item(self, item: BatchItem, *, count: bool = True) -> None:
         """Re-home a request whose pool vanished: same block boundary in
-        the client's new chain if one exists, else finish locally."""
+        the client's new chain if one exists, else finish locally.
+        ``count=False`` skips the reroute accounting — a stolen item
+        re-enqueued on its new front-end went exactly where it was
+        routed, it did not bounce off a stale chain."""
         st = self._inflight.get(item.rid)
         if st is None:
             return
@@ -1236,8 +1401,9 @@ class GraftServer:
             # decode re-homing: only another full-range pool will do;
             # otherwise the local fallback keeps the stream exact
             chain = self._decode_chain(item.client)
-            st.rerouted += 1
-            self.stats["rerouted"] += 1
+            if count:
+                st.rerouted += 1
+                self.stats["rerouted"] += 1
             if chain is not None:
                 st.chain = chain
                 st.stage = 0
@@ -1251,12 +1417,14 @@ class GraftServer:
                 if key[1] == item.boundary:
                     st.chain = list(chain)
                     st.stage = idx
-                    st.rerouted += 1
-                    self.stats["rerouted"] += 1
+                    if count:
+                        st.rerouted += 1
+                        self.stats["rerouted"] += 1
                     self._enqueue_stage(item.rid, st, item.payload)
                     return
-        st.rerouted += 1
-        self.stats["rerouted"] += 1
+        if count:
+            st.rerouted += 1
+            self.stats["rerouted"] += 1
         self._finish_local(item.rid, st, item.payload,
                            boundary=item.boundary)
 
@@ -1468,6 +1636,8 @@ class GraftServer:
             "decode_served": self.stats["decode_served"],
             "decode_tokens": self.stats["decode_tokens"],
             "decode_local": self.stats["decode_local"],
+            "steals_in": self.stats["steals_in"],
+            "steals_out": self.stats["steals_out"],
             "mean_batch": float(np.mean(batch_sizes)) if batch_sizes
             else 0.0,
             "n_stage_pools": len(drivers),
@@ -1558,6 +1728,7 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
                    max_check: int = 64, seq_len: int = 16,
                    frontends: int = 1,
                    shed_budget_frac: Optional[float] = None,
+                   router: str = "weighted",
                    advertise_host: str = "127.0.0.1", launcher=None,
                    telemetry=None, trace_out: Optional[str] = None,
                    metrics_dump: Optional[str] = None,
@@ -1573,7 +1744,9 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
 
     ``frontends > 1`` (or a ``shed_budget_frac``) runs the fleet
     topology instead: several front-ends over the one executor, clients
-    rendezvous-routed, the fleet owning the control tick.
+    routed by the load/cache-aware weighted router (``router="hrw"``
+    keeps the static rendezvous ring), the fleet owning the control
+    tick and cross-front-end work stealing.
 
     ``advertise_host``/``launcher`` only apply to ``mode="socket"``:
     workers dial back to the advertised address and are started by the
@@ -1639,7 +1812,8 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
         policy = ShedPolicy(budget_frac=shed_budget_frac) \
             if shed_budget_frac is not None else None
         server = GraftFleet(ex, n_frontends=max(frontends, 1),
-                            controller=ctl, book=book, shed_policy=policy)
+                            controller=ctl, book=book, shed_policy=policy,
+                            router=router)
     else:
         server = GraftServer(ex, controller=ctl, book=book)
     server.start()
@@ -1699,6 +1873,7 @@ def run_serve_loop(*, arch: str = "qwen3-1.7b", mode: str = "inprocess",
         drained = server.join(timeout=600.0)
         report = server.report(since=mark)
         report["drained"] = drained
+        report.setdefault("steals", 0)
         report["controller_replans"] = ctl.stats["replans"] - t_traffic0
         report["controller_triggers"] = dict(ctl.stats["triggers"])
         report["wall_s"] = time.monotonic() - t_start

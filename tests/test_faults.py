@@ -251,6 +251,88 @@ def test_fleet_partitioned_frontend_does_not_stall_others(smoke):
         ex.close()
 
 
+def test_fleet_wedged_frontend_work_is_stolen_and_heals(smoke):
+    """Wedge ONE front-end mid-traffic (drivers stop consuming, channel
+    dark, host marked unhealthy): the survivor STEALS its queued-not-in-
+    flight work through the fleet balancer and completes it with exact
+    numerics — nothing dropped, nothing double-executed. Healing the
+    front-end re-admits it to the router and it serves again."""
+    from conftest import wait_until
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftFleet
+    from repro.serving.smoke import (check_against_monolithic,
+                                     mixed_depth_plan, smoke_setup)
+    cfg, book, params = smoke_setup("qwen3-1.7b", seed=0, n_layers=3)
+    frags = _shared_pool_frags(cfg, ["fe0", "fe1"], p=1)
+    plan = mixed_depth_plan(cfg, book, frags, s=1, batch=4)
+    tp = FlakyTransport(InProcessTransport())
+    ex = GraftExecutor(plan, params, cfg, transport=tp)
+    fleet = GraftFleet(ex, n_frontends=2, book=book).start()
+    try:
+        key = ex.chain_keys(frags[0].client)[0]
+        warm = _requests(cfg, frags, np.random.RandomState(0),
+                         n_per_client=1)
+        for req, p in warm:
+            fleet.submit(req, p, 5000.0)
+        assert fleet.join(timeout=300.0)
+        check_against_monolithic(cfg, params, warm)
+
+        table = fleet.routing_table([f.client for f in frags])
+        dark_fe = table[frags[0].client]
+        lit_fe = next(fe for fe in fleet.frontends if fe != dark_fe)
+        dark, lit = fleet.frontend(dark_fe), fleet.frontend(lit_fe)
+
+        # wedge: the dark front-end's drivers stop consuming and its
+        # pool channel partitions — queued work is going nowhere
+        for drv in dark._drivers.values():
+            drv.batcher.pause()
+        dark._local_handles[key].channel.broken = True
+        doomed = _requests(cfg, [frags[0]], np.random.RandomState(1),
+                           n_per_client=2)
+        for req, p in doomed:          # accepted by dark BEFORE the mark
+            dark.submit(req, p, 5000.0)
+        wait_until(lambda: dark.n_queued == len(doomed),
+                   desc="requests to queue on the wedged front-end")
+
+        fleet.set_health(dark_fe, False)
+        # the next control tick priority-steals the wedged queue
+        wait_until(lambda: fleet.stats["steals"] >= len(doomed),
+                   timeout_s=10.0, desc="the survivor to steal queued work")
+        assert dark.stats["steals_out"] == len(doomed)
+        assert lit.stats["steals_in"] == len(doomed)
+        assert dark.n_inflight == 0            # ownership fully moved
+        assert fleet.join(timeout=300.0), "stolen work never completed"
+        for req, _p in doomed:
+            assert req.result is not None, "steal dropped a request"
+        check_against_monolithic(cfg, params, doomed)
+        # stolen rids completed ONCE, on the thief, within SLO accounting
+        rep = fleet.report()
+        assert rep["served"] == len(warm) + len(doomed)
+        assert rep["shed"] == 0
+        assert rep["steals"] == len(doomed)
+
+        # heal: channel back, drivers consume, health mark lifted —
+        # the router re-admits the front-end with no further ceremony
+        dark._local_handles[key].channel.broken = False
+        for drv in dark._drivers.values():
+            drv.batcher.resume()
+        fleet.set_health(dark_fe, True)
+        dark_batches = dark.stats["batches"]
+        back = _requests(cfg, [frags[0]], np.random.RandomState(2),
+                         n_per_client=2)
+        for req, p in back:
+            dark.submit(req, p, 5000.0)
+        assert fleet.join(timeout=300.0)
+        check_against_monolithic(cfg, params, back)
+        assert dark.stats["batches"] > dark_batches   # serving again
+        assert fleet.stats["steals"] == len(doomed)   # no new steals
+        rep2 = fleet.report()
+        assert rep2["served"] == len(warm) + len(doomed) + len(back)
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
 # ------------------------------------------------- worker kill (remote)
 
 @pytest.mark.slow

@@ -40,6 +40,92 @@ def test_rendezvous_routing_is_deterministic_and_minimal_movement():
         rendezvous_route("c", [])
 
 
+# -------------------------------------------------- weighted router (pure)
+
+def test_weighted_router_scores_load_health_and_falls_back():
+    from repro.serving import WeightedRouter
+    r = WeightedRouter(hysteresis_ms=10.0)
+    fes = ["fe0", "fe1"]
+    hrw = rendezvous_route("c", fes)
+    other = "fe1" if hrw == "fe0" else "fe0"
+    # no signals yet -> HRW fallback, counted
+    assert r.route("c", fes, now_ms=0.0) == hrw
+    assert r.stats["fallback_hrw"] == 1
+    # fresh signals, equal load -> deterministic tie-break = HRW winner
+    r.update("fe0", now_ms=0.0)
+    r.update("fe1", now_ms=0.0)
+    assert r.route("c", fes, now_ms=0.0) == hrw
+    # loaded HRW winner -> the idle peer, beyond hysteresis
+    r.update(hrw, now_ms=0.0, queue_depth_ms=100.0)
+    assert r.route("c", fes, now_ms=0.0) == other
+    assert r.stats["moves"] == 1
+    # hysteresis: a small improvement does NOT move the client back...
+    r.update(hrw, now_ms=0.0, queue_depth_ms=0.0)
+    r.update(other, now_ms=0.0, queue_depth_ms=5.0)
+    assert r.route("c", fes, now_ms=0.0) == other
+    # ...a big one does
+    r.update(other, now_ms=0.0, queue_depth_ms=50.0)
+    assert r.route("c", fes, now_ms=0.0) == hrw
+    # an unhealthy front-end is scored off the ring entirely
+    r.update(hrw, now_ms=0.0, unhealthy=True)
+    assert r.route("c", fes, now_ms=0.0) == other
+    # stale signals -> HRW fallback again (never less available than
+    # the static ring it replaces)
+    assert r.route("c", fes, now_ms=5000.0) == hrw
+    assert r.stats["fallback_hrw"] == 2
+    # shed-rate penalty tips an otherwise-even pair
+    r2 = WeightedRouter(hysteresis_ms=0.0)
+    r2.update(hrw, now_ms=0.0, shed_frac=0.5)
+    r2.update(other, now_ms=0.0)
+    assert r2.route("c", fes, now_ms=0.0) == other
+    # single front-end short-circuits to it
+    assert r.route("c", ["fe0"], now_ms=0.0) == "fe0"
+
+
+def test_weighted_router_pending_load_spreads_a_burst():
+    """Signals only refresh on the fleet tick — a burst arriving inside
+    one tick must not all land on one front-end. The router charges
+    itself pending load per routed request, so a hot client's burst
+    alternates; the next update() clears the self-charge."""
+    from repro.serving import WeightedRouter
+    r = WeightedRouter(hysteresis_ms=25.0, pending_cost_ms=25.0)
+    fes = ["fe0", "fe1"]
+    r.update("fe0", now_ms=0.0)
+    r.update("fe1", now_ms=0.0)
+    got = [r.route("hot", fes, now_ms=0.0) for _ in range(8)]
+    assert got.count("fe0") == got.count("fe1") == 4
+    # a fresh signal push resets the self-charge: the tie-break is the
+    # client's HRW winner again, as if the burst never happened
+    r.update("fe0", now_ms=1.0)
+    r.update("fe1", now_ms=1.0)
+    assert r.route("hot", fes, now_ms=1.0) \
+        == rendezvous_route("hot", fes)
+
+
+def test_weighted_router_affinity_attracts_repeat_prompts():
+    from repro.serving import WeightedRouter
+    r = WeightedRouter(hysteresis_ms=0.0, affinity_bonus_ms=10.0)
+    fes = ["fe0", "fe1"]
+    hrw = rendezvous_route("c", fes)
+    other = "fe1" if hrw == "fe0" else "fe0"
+    r.update(hrw, now_ms=0.0)
+    r.update(other, now_ms=0.0, affinity=(11, 22, 33))
+    # prefix-digest overlap outweighs the tie: the request lands where
+    # its KV blocks already live
+    assert r.route("c", fes, now_ms=0.0, digest=(11, 22)) == other
+    assert r.stats["affinity_hits"] == 1
+    # no overlap -> the tie-break anchors on the client's OWN HRW winner
+    # (signals re-pushed first: the route above charged pending load)
+    r.update(hrw, now_ms=0.0)
+    r.update(other, now_ms=0.0, affinity=(11, 22, 33))
+    assert r.route("c2", fes, now_ms=0.0, digest=(44,)) \
+        == rendezvous_route("c2", fes)
+    # forget() drops both the signal and the sticky choices
+    r.forget(other)
+    assert r.signal(other) is None
+    assert r.route("c", fes, now_ms=0.0) == hrw     # stale -> fallback
+
+
 # ------------------------------------------------------ shed policy (pure)
 
 def test_hopeless_boundary_is_strict():
@@ -301,6 +387,107 @@ def test_fleet_remove_frontend_drains_then_reroutes(smoke):
         with pytest.raises(ValueError):      # never drop to zero ingest
             for name in list(fleet.frontends):
                 fleet.remove_frontend(name)
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+# ------------------------------------------------------- work stealing
+
+
+def test_steal_hop_not_double_billed_by_shed_policy(smoke):
+    """One request billed ONCE against its client's shed budget across a
+    steal hop (mirroring the ``shed_exempt`` rule): the victim's ingest
+    admission is the only window entry — the thief's ``accept_stolen``
+    re-checks feasibility with the hop charged but never re-bills."""
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftFleet
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = _spread_frags(cfg, ["fe0", "fe1"], n_per_fe=1)
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    pol = ShedPolicy(budget_frac=1.0, window=16)
+    fleet = GraftFleet(ex, n_frontends=2, book=book,
+                       shed_policy=pol).start()
+    try:
+        f = frags[0]
+        victim = fleet.route(f.client)
+        thief = fleet.frontend(
+            next(n for n in fleet.frontends if n != victim.name))
+        key = ex.chain_keys(f.client)[0]
+        victim.driver(key).batcher.pause()
+        rng = np.random.RandomState(11)
+        reqs = _requests(cfg, [f], rng, n_per_client=1)
+        for req, p in reqs:
+            victim.submit(req, p, 5000.0)
+        wait_until(lambda: victim.n_queued == 1,
+                   desc="request to queue on the victim")
+        admitted = pol.stats["admitted"]
+        hist = len(pol._hist[f.client])
+        assert admitted >= 1
+
+        stolen = victim.steal_queued()
+        assert len(stolen) == 1
+        rid = stolen[0][0].rid
+        assert thief.accept_stolen(stolen) == 1
+        assert stolen[0][1].steal_hops == 1
+        # the steal moved ownership but billed NOTHING new
+        assert pol.stats["admitted"] == admitted
+        assert len(pol._hist[f.client]) == hist
+        assert fleet.registry[rid] is thief
+        assert victim.n_inflight == 0 and thief.n_inflight == 1
+
+        assert fleet.join(timeout=300.0)
+        for req, _p in reqs:
+            assert req.result is not None
+        check_against_monolithic(cfg, params, reqs)
+        rep = fleet.report()
+        assert rep["served"] == 1 and rep["shed"] == 0
+        assert rep["steals_out"] == 1 and rep["steals_in"] == 1
+    finally:
+        fleet.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
+def test_remove_frontend_drains_through_steal_path(smoke):
+    """Scale-in with queued-not-in-flight work: ``remove_frontend``
+    hands it to a survivor through the SAME steal path live rebalancing
+    uses (``fleet.stats["steals"]`` counts it) — no bespoke drain, no
+    drops, no double execution."""
+    from repro.core import GraftPlanner
+    from repro.serving import GraftExecutor, GraftFleet
+    from repro.serving.smoke import check_against_monolithic
+    cfg, book, params = smoke
+    frags = _spread_frags(cfg, ["fe0", "fe1"], n_per_fe=1)
+    plan = GraftPlanner(book).plan(frags)
+    ex = GraftExecutor(plan, params, cfg)
+    fleet = GraftFleet(ex, n_frontends=2, book=book).start()
+    try:
+        table = fleet.routing_table([f.client for f in frags])
+        f = frags[0]
+        victim_fe = table[f.client]
+        victim = fleet.frontend(victim_fe)
+        for drv in victim._drivers.values():
+            drv.batcher.pause()                # queued, NOT in flight
+        reqs = _requests(cfg, [f], np.random.RandomState(12),
+                         n_per_client=2)
+        for req, p in reqs:
+            victim.submit(req, p, 5000.0)
+        wait_until(lambda: victim.n_queued == len(reqs),
+                   desc="requests to queue on the departing front-end")
+
+        assert fleet.remove_frontend(victim_fe, drain=True, timeout=300.0)
+        assert victim_fe not in fleet.frontends
+        assert fleet.stats["steals"] == len(reqs)      # the steal path
+        assert victim.stats["steals_out"] == len(reqs)
+        assert fleet.join(timeout=300.0)
+        for req, _p in reqs:
+            assert req.result is not None, "scale-in dropped queued work"
+        check_against_monolithic(cfg, params, reqs)
+        rep = fleet.report()
+        assert rep["served"] == len(reqs)              # once each
+        assert rep["frontends"][victim_fe]["retired"]
     finally:
         fleet.stop(drain=False, timeout=5.0)
         ex.close()

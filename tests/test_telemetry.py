@@ -140,6 +140,43 @@ def test_merge_snapshot_is_idempotent_per_source():
     assert st_["min"] == 2.0 and st_["max"] == 8.0
 
 
+def test_router_metrics_merge_into_fleet_dump():
+    """The router's counters/gauges (``route/steals``,
+    ``route/affinity_hits``, ``route/fallback_hrw``, per-FE
+    ``route/queue_depth``) register through the mergeable registry: a
+    front-end's snapshot merges into the fleet registry as prefixed
+    gauges and the lot appears in ``metrics_dump``."""
+    from repro.serving.router import WeightedRouter
+
+    fe_tel = Telemetry(process="fe0")
+    r = WeightedRouter(telemetry=fe_tel, hysteresis_ms=0.0)
+    fes = ["fe0", "fe1"]
+    r.route("c", fes, now_ms=0.0)                 # no signals -> fallback
+    r.update("fe0", now_ms=0.0, queue_depth_ms=12.5, affinity=(7,))
+    r.update("fe1", now_ms=0.0, queue_depth_ms=80.0)
+    r.route("c", fes, now_ms=0.0, digest=(7,))    # weighted + affinity hit
+    assert fe_tel.counter("route/fallback_hrw").value() == 1
+    assert fe_tel.counter("route/weighted").value() == 1
+    assert fe_tel.counter("route/affinity_hits").value() == 1
+    assert fe_tel.gauge("route/fe0/queue_depth").value() == 12.5
+    assert fe_tel.gauge("route/fe1/queue_depth").value() == 80.0
+
+    fleet_tel = Telemetry(process="fleet")
+    fleet_tel.counter("route/steals").inc(3)       # the fleet's own counter
+    for _ in range(2):                             # idempotent re-poll
+        fleet_tel.merge_snapshot(fe_tel.snapshot(), source="fe0",
+                                 prefix="fe0/")
+    assert fleet_tel.gauge("fe0/route/fallback_hrw").value() == 1
+    assert fleet_tel.gauge("fe0/route/affinity_hits").value() == 1
+    assert fleet_tel.gauge("fe0/route/fe0/queue_depth").value() == 12.5
+
+    dump = fleet_tel.metrics_dump()
+    assert dump["counters"]["route/steals"] == 3
+    for g in ("fe0/route/fallback_hrw", "fe0/route/affinity_hits",
+              "fe0/route/fe0/queue_depth", "fe0/route/fe1/queue_depth"):
+        assert g in dump["gauges"], f"{g} missing from metrics_dump"
+
+
 def test_null_telemetry_is_inert():
     assert not NULL.enabled and not NULL.want_trace(1)
     NULL.counter("x").inc()
