@@ -105,6 +105,66 @@ def _run_phase(cfg, book, params, frags, *, continuous: bool,
     }
 
 
+def _run_disagg(cfg, book, params, frags, *, n_requests: int,
+                seq_len: int, lens: tuple) -> dict:
+    """Disaggregated phase: the full-range pool is prefill-role, a
+    decode-role pool is fed KV blocks over the transport. Same burst as
+    `_run_phase`; the extra derived keys are the handoff cost
+    (``kv_handoff_ms``, the admit wall time when a KV frame rides the
+    hop) and the TTFT stamped at the prefill pool's first token."""
+    from repro.serving.executor import GraftExecutor, ServeRequest
+    from repro.serving.server import GraftServer
+    from repro.serving.transport import InProcessTransport
+    from repro.serving.smoke import disagg_plan
+
+    plan = disagg_plan(cfg, book, frags, batch=4)
+    ex = GraftExecutor(plan, params, cfg, transport=InProcessTransport(),
+                       decode_ctx=64, kv_blocks=96, kv_block_tokens=4,
+                       decode_disagg=True)
+    server = GraftServer(ex, book=book).start()
+    rng = np.random.RandomState(7)
+    try:
+        w = ServeRequest(client=frags[0].client,
+                         tokens=rng.randint(0, cfg.vocab_size,
+                                            seq_len).astype(np.int32),
+                         max_new_tokens=2, tpot_budget_ms=1e6)
+        server.submit(w, 0, 1e6)
+        assert server.join(timeout=600.0)
+        mark = server.mark()
+        t0 = time.monotonic()
+        for i in range(n_requests):
+            f = frags[i % len(frags)]
+            req = ServeRequest(client=f.client,
+                               tokens=rng.randint(0, cfg.vocab_size,
+                                                  seq_len).astype(np.int32),
+                               max_new_tokens=int(lens[i % len(lens)]),
+                               tpot_budget_ms=1e6)
+            server.submit(req, 0, 1e6)
+            time.sleep(0.012)
+        assert server.join(timeout=600.0), "disagg bench never drained"
+        wall_s = time.monotonic() - t0
+        recs = [r for r in server.records(since=mark) if r.get("decode")]
+        rep = server.report()
+    finally:
+        server.stop(drain=False, timeout=10.0)
+        ex.close()
+    ttft = np.array([r["ttft_ms"] for r in recs])
+    tpot = np.array([r["tpot_ms"] for r in recs if r["n_tokens"] > 1]
+                    or [0.0])
+    toks = int(sum(r["n_tokens"] for r in recs))
+    return {
+        "n": len(recs),
+        "wall_s": wall_s,
+        "ttft_ms": float(np.mean(ttft)),
+        "ttft_p99_ms": float(np.percentile(ttft, 99)),
+        "tpot_ms": float(np.mean(tpot)),
+        "toks_s": toks / max(wall_s, 1e-9),
+        "kv_handoffs": int(rep["kv_handoffs"]),
+        "kv_handoff_ms": float(rep["kv_handoff_ms"]),
+        "decode_local": int(rep["decode_local"]),
+    }
+
+
 def _prefix_reuse(cfg, book, params, frags, *, seq_len: int) -> dict:
     """Same prompt, back-to-back streams: the second admission must hit
     the retained prefix index instead of re-prefilling."""
@@ -162,9 +222,67 @@ def run(rows: Rows, quick: bool = False) -> None:
              f"ttft_ratio={c['ttft_ms'] / max(w['ttft_ms'], 1e-9):.3f}"
              f";toks_ratio={c['toks_s'] / max(w['toks_s'], 1e-9):.3f}")
 
+    t0 = time.perf_counter()
+    dg = _run_disagg(cfg, book, params, frags, n_requests=n_requests,
+                     seq_len=seq_len, lens=lens)
+    rows.add("decode/serve/disagg",
+             (time.perf_counter() - t0) * 1e6 / max(dg["n"], 1),
+             f"ttft_ms={dg['ttft_ms']:.2f}"
+             f";ttft_p99_ms={dg['ttft_p99_ms']:.2f}"
+             f";tpot_ms={dg['tpot_ms']:.2f}"
+             f";toks_s={dg['toks_s']:.1f}"
+             f";kv_handoff_ms={dg['kv_handoff_ms']:.2f}"
+             f";kv_handoffs={dg['kv_handoffs']}"
+             f";decode_local={dg['decode_local']}"
+             f";n={dg['n']}")
+
     kv = _prefix_reuse(cfg, book, params, frags, seq_len=seq_len)
     rows.add("decode/prefix/reuse", 0.0,
              f"prefix_hits={kv['prefix_hits']}"
              f";prefix_tokens_reused={kv['prefix_tokens_reused']}"
              f";evictions={kv['evictions']}"
              f";cow_copies={kv['cow_copies']}")
+
+
+def main(argv=None) -> int:
+    """Standalone entry: ``python -m benchmarks.bench_decode --disagg``
+    runs just the disaggregated phase and prints its derived keys —
+    handy for iterating on the handoff path without the full suite."""
+    import argparse
+
+    from repro.serving.smoke import smoke_fragments, smoke_setup
+
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_decode")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run only the disaggregated prefill/decode phase")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    rows = Rows()
+    if args.disagg:
+        seq_len = 12
+        lens = (3, 5, 8, 12) if args.quick else (3, 5, 8, 12, 16, 20)
+        n_requests = 10 if args.quick else 16
+        cfg, book, params = smoke_setup(seq_len=seq_len, seed=0)
+        frags = smoke_fragments(cfg, 3, seed=0)
+        t0 = time.perf_counter()
+        dg = _run_disagg(cfg, book, params, frags, n_requests=n_requests,
+                         seq_len=seq_len, lens=lens)
+        rows.add("decode/serve/disagg",
+                 (time.perf_counter() - t0) * 1e6 / max(dg["n"], 1),
+                 f"ttft_ms={dg['ttft_ms']:.2f}"
+                 f";ttft_p99_ms={dg['ttft_p99_ms']:.2f}"
+                 f";tpot_ms={dg['tpot_ms']:.2f}"
+                 f";toks_s={dg['toks_s']:.1f}"
+                 f";kv_handoff_ms={dg['kv_handoff_ms']:.2f}"
+                 f";kv_handoffs={dg['kv_handoffs']}"
+                 f";decode_local={dg['decode_local']}"
+                 f";n={dg['n']}")
+    else:
+        run(rows, quick=args.quick)
+    rows.emit()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,6 +32,12 @@ are *blocking*):
                                server_p99_ms (wide band); arena
                                utilization gates on an absolute DROP
                                (lower = block accounting leak).
+  * ``disagg_ttft_ms`` / ``kv_handoff_ms`` — disaggregated
+                               prefill/decode phase
+                               (``decode/serve/disagg`` row): TTFT over
+                               the two-phase admit and the cross-pool
+                               KV-block handoff cost, both on the same
+                               wide (2.5x) wall-clock band.
 
 Everything else (controller replan latency, transport hop/serialize,
 warm-vs-cold replan wall times, server makespan ratio, fleet scale-out
@@ -153,6 +159,14 @@ def extract_metrics(rows: list) -> dict:
             metrics["tpot_ms"] = d["tpot_ms"]
             metrics["kv_block_util_frac"] = d["kv_block_util_frac"]
             metrics["decode_toks_s"] = d["toks_s"]
+        elif name == "decode/serve/disagg":
+            # disaggregated prefill/decode: TTFT stamped at the prefill
+            # pool's first token, plus the cross-pool KV handoff cost
+            # (admit wall time when a KV frame rides the hop) — both
+            # BLOCKING once baselined, same wide band as ttft_ms
+            metrics["disagg_ttft_ms"] = d["ttft_ms"]
+            metrics["kv_handoff_ms"] = d["kv_handoff_ms"]
+            metrics["disagg_toks_s"] = d["toks_s"]
         elif name == "decode/serve/waved":
             # close-on-flush baseline: recorded for the win ratio
             metrics["decode_waved_ttft_ms"] = d["ttft_ms"]
@@ -173,7 +187,7 @@ GATED_PREFIXES = ("planner_latency_us/", "slo_attainment/")
 GATED_KEYS = ("server_p99_ms", "fragment_exec_ms", "padding_waste_frac",
               "recompile_count", "ttft_ms", "tpot_ms",
               "kv_block_util_frac", "telemetry_overhead_frac",
-              "router_skew_p99_ms")
+              "router_skew_p99_ms", "disagg_ttft_ms", "kv_handoff_ms")
 
 # the observability layer's standing claim: leaving the registry +
 # tracing on may not inflate paced mean latency by more than this —
@@ -231,10 +245,13 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
                 failures.append(
                     f"{key}: {cur:.3f} ms vs baseline {base:.3f} ms "
                     f"(>{wide:.0%} slower)")
-        elif key in ("ttft_ms", "tpot_ms"):
-            # decode serving wall-clock tails: same wide band as
-            # server_p99_ms — catches step functions (continuous
-            # admission lost, a compile back on the step loop), not
+        elif key in ("ttft_ms", "tpot_ms", "disagg_ttft_ms",
+                     "kv_handoff_ms"):
+            # decode serving wall-clock tails (single-pool and
+            # disaggregated) plus the cross-pool KV handoff cost: same
+            # wide band as server_p99_ms — catches step functions
+            # (continuous admission lost, a compile back on the step
+            # loop, a serialize copy on the handoff), not
             # shared-runner jitter
             wide = 2.5 * tol
             if cur > base * (1 + wide):
@@ -367,7 +384,8 @@ def main(argv=None) -> int:
             f"{k[7:]}={v:.4g}" for k, v in sorted(srv.items())))
     dec = {k: v for k, v in metrics.items()
            if k in ("ttft_ms", "tpot_ms", "kv_block_util_frac",
-                    "decode_toks_s", "decode_waved_ttft_ms")}
+                    "decode_toks_s", "decode_waved_ttft_ms",
+                    "disagg_ttft_ms", "kv_handoff_ms")}
     if dec:
         print("  decode: " + "  ".join(
             f"{k}={v:.4g}" for k, v in sorted(dec.items())))

@@ -20,6 +20,13 @@
 #                                  # decode loop over the paged KV arena;
 #                                  # every stream's tokens checked against the
 #                                  # unbatched reference (exit 1 on mismatch)
+#   ./scripts/ci.sh --disagg-smoke # BLOCKING: disaggregated decode end-to-end;
+#                                  # a prefill-role pool hands KV blocks to a
+#                                  # decode-role pool over the transport —
+#                                  # token-exact vs the unbatched reference and
+#                                  # >=1 cross-pool KV handoff required (exit 1
+#                                  # on mismatch / zero handoffs / any local
+#                                  # fallback)
 #   ./scripts/ci.sh --route-smoke  # BLOCKING: routing subsystem end-to-end;
 #                                  # one front-end wedged mid-traffic with a
 #                                  # skewed burst queued against it — the
@@ -64,6 +71,23 @@ if not ok:
     print(f"[decode-smoke] FAIL: "
           f"{report.get('numerics_error', 'no streams completed')}",
           file=sys.stderr)
+sys.exit(0 if ok else 1)
+EOF
+    exit $?
+fi
+
+if [[ "${1:-}" == "--disagg-smoke" ]]; then
+    python - <<'EOF'
+import sys
+from repro.serving.smoke import run_disagg_smoke
+
+report = run_disagg_smoke(log=lambda *a: print(*a, flush=True))
+ok = (report["numerics_ok"] and report["numerics_checked"] > 0
+      and report["kv_handoffs"] >= 1 and report["decode_local"] == 0)
+if not ok:
+    print(f"[disagg-smoke] FAIL: handoffs={report['kv_handoffs']} "
+          f"local={report['decode_local']} "
+          f"{report.get('numerics_error', '')}", file=sys.stderr)
 sys.exit(0 if ok else 1)
 EOF
     exit $?
@@ -153,6 +177,9 @@ if [[ "${1:-}" != "--tests" ]]; then
     # the decode serving path must stay token-exact vs the unbatched
     # reference: continuous batching + paged KV, checked in-process
     "$0" --decode-smoke
+    # the disaggregated decode path must stay token-exact too, with real
+    # cross-pool KV handoffs (prefill pool -> frame -> decode pool)
+    "$0" --disagg-smoke
     # the routing subsystem must keep stealing: wedge a front-end with
     # queued work, the survivor steals and completes it token-exact
     "$0" --route-smoke

@@ -130,10 +130,11 @@ def _build(used: dict, assignments: dict, pools: dict,
     chips = []
     by_chip: dict[int, list] = {}
     for (key, i), chip in assignments.items():
-        model, start, end = key
+        model, start, end = key[:3]
+        role = f"@{key[3]}" if len(key) > 3 else ""
         share = min(int(pools[key].share), chip_capacity)
         by_chip.setdefault(chip, []).append(
-            (f"{model}[{start}:{end})#{i}", share))
+            (f"{model}[{start}:{end}){role}#{i}", share))
     for c in sorted(by_chip):
         insts = sorted(by_chip[c])
         chips.append(Chip(index=c, used=sum(s for _, s in insts),

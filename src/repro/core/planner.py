@@ -57,6 +57,39 @@ class ExecutionPlan:
         from repro.core.plandiff import plan_pools
         return plan_pools(self)
 
+    def with_disagg(self, model: str, n_units: int, *, share: int = 50,
+                    batch: int = 4, n_instances: int = 1,
+                    prefill_key: Optional[tuple] = None
+                    ) -> "ExecutionPlan":
+        """A copy of this plan with prefill/decode pool disaggregation
+        annotated: the full-range pool over ``[0, n_units)`` (created as
+        an extra prefill-role pool if no stage plan spans it) plus a
+        decode-role pool of the same range fed over the KV handoff.
+        The controller's ``disagg_pressure`` replan produces exactly this
+        shape; expressing it as plan *metadata* keeps the transition an
+        ordinary pool diff."""
+        from repro.core.plandiff import (PoolSpec, decode_pool_key,
+                                         plan_pools, pool_range)
+        full = (model, 0, int(n_units))
+        derived = plan_pools(dataclasses.replace(self, meta={}))
+        roles = dict(self.meta.get("pool_roles", {}))
+        extra = [sp for sp in self.meta.get("extra_pools", ())
+                 if pool_range(sp.key) != pool_range(full)]
+        if prefill_key is None:
+            prefill_key = full
+        if tuple(prefill_key) in derived:
+            roles[tuple(prefill_key)] = "prefill"
+        else:
+            extra.append(PoolSpec(key=tuple(prefill_key), share=share,
+                                  batch=batch, n_instances=n_instances,
+                                  role="prefill"))
+        extra.append(PoolSpec(key=decode_pool_key(model, 0, n_units),
+                              share=share, batch=batch,
+                              n_instances=n_instances, role="decode"))
+        meta = {**self.meta, "pool_roles": roles,
+                "extra_pools": tuple(extra)}
+        return dataclasses.replace(self, meta=meta)
+
 
 class GraftPlanner:
     def __init__(self, book: ProfileBook, *,

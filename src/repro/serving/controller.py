@@ -104,7 +104,8 @@ class ServingController:
                  bw_trend_threshold: float = 0.25,
                  bw_trend_min_samples: int = 4,
                  shed_trigger_frac: float = 0.1,
-                 route_imbalance_frac: float = 0.25):
+                 route_imbalance_frac: float = 0.25,
+                 disagg_pressure_frac: float = 0.25):
         from repro.core.reuse import IncrementalPlanner
         self.book = book
         self.planner = planner or IncrementalPlanner(book)
@@ -122,11 +123,17 @@ class ServingController:
         self.bw_trend_min_samples = bw_trend_min_samples
         self.shed_trigger_frac = shed_trigger_frac
         self.route_imbalance_frac = route_imbalance_frac
+        self.disagg_pressure_frac = disagg_pressure_frac
 
         # (now_ms, frac) from the fleet's work-stealing balancer: a
         # persistent queue-depth skew the router couldn't smooth means
         # the PLACEMENT is lopsided, not just the routing
         self._route_imbalance: Optional[tuple] = None
+        # (now_ms, frac) from each front-end's tick: the fraction of
+        # decode completions that fell back to the in-process path — the
+        # deployed pools can't hold the generative load, so the planner
+        # should revisit pool roles/capacity (prefill/decode split)
+        self._disagg_pressure: Optional[tuple] = None
         self._clients: dict[str, ClientWindow] = {}
         self._planned_q: dict[str, float] = {}           # client -> planned RPS
         self._planned_p: dict[str, int] = {}
@@ -190,6 +197,16 @@ class ServingController:
         ``route_imbalance`` trigger so the planner can rebalance the
         capacity the skew is really about."""
         self._route_imbalance = (now_ms, float(frac))
+
+    def observe_disagg_pressure(self, now_ms: float, frac: float) -> None:
+        """A front-end reports the per-tick fraction of decode
+        completions served by its in-process fallback instead of a pool.
+        A fraction above ``disagg_pressure_frac`` fires the
+        ``disagg_pressure`` trigger: the deployment is missing (or has
+        starved) decode capacity and the planner should revisit pool
+        roles — e.g. split a full-range pool into prefill + decode via
+        ``ExecutionPlan.with_disagg``."""
+        self._disagg_pressure = (now_ms, float(frac))
 
     def observe_done(self, now_ms: float, client: str,
                      server_latency_ms: float,
@@ -306,6 +323,13 @@ class ServingController:
                 trig.append("route_imbalance")
             elif not fresh:
                 self._route_imbalance = None   # stale skew: disarm
+        if self._disagg_pressure is not None:
+            t, frac = self._disagg_pressure
+            fresh = now_ms is None or now_ms - t <= self.window_ms
+            if fresh and frac > self.disagg_pressure_frac:
+                trig.append("disagg_pressure")
+            elif not fresh:
+                self._disagg_pressure = None   # stale pressure: disarm
         for name, e in est.items():
             if name not in self._planned_q:
                 trig.append("fragment_arrival")
@@ -431,6 +455,7 @@ class ServingController:
             w.lat.clear()
             w.sheds.clear()
         self._route_imbalance = None
+        self._disagg_pressure = None
         self._last_replan_ms = now_ms
         return plan
 

@@ -41,7 +41,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.planner import ExecutionPlan
 from repro.core.placement import MOVE, migrate, place_pools
-from repro.core.plandiff import diff_plans, plan_pools, PlanDiff, PoolSpec
+from repro.core.plandiff import (diff_plans, plan_pools, pool_range,
+                                 PlanDiff, PoolSpec)
 from repro.core.repartition import pool_key
 from repro.models import n_fragment_units, run_fragment
 from repro.models.decode import (cache_len_for, decode_step, init_cache,
@@ -53,6 +54,7 @@ from repro.serving.kvcache import KVCacheOOM, PagedKVCache
 from repro.serving.simulator import _routing
 from repro.serving.telemetry import NULL as NULL_TELEMETRY
 from repro.serving.transport import (Channel, InProcessTransport, Transport,
+                                     decode_kv_blocks, encode_kv_blocks,
                                      error_reply)
 
 
@@ -73,9 +75,13 @@ class PoolDrainingError(RuntimeError):
 
 
 def pool_endpoint(key: tuple) -> str:
-    """Transport endpoint name for a pool identity."""
-    model, start, end = key
-    return f"pool/{model}/{start}-{end}"
+    """Transport endpoint name for a pool identity. Role-qualified keys
+    (decode pools coexisting with the prefill pool over the same block
+    range) get a ``@role`` suffix so both endpoints can be served."""
+    name = f"pool/{key[0]}/{key[1]}-{key[2]}"
+    if len(key) > 3:
+        name += f"@{key[3]}"
+    return name
 
 
 def _extras_sig(extras: Optional[dict]) -> tuple:
@@ -135,6 +141,7 @@ class FragmentInstance:
         self.key = spec.key
         self.start, self.end = spec.start, spec.end
         self.batch = spec.batch
+        self.role = spec.role                 # both | prefill | decode
         # batch 0 means draining from birth too (the planner never emits
         # it: zero-rate pools carry EMPTY_ALLOC's batch of 1), so the
         # contract is uniform: batch 0 <=> intake refused
@@ -167,6 +174,8 @@ class FragmentInstance:
         self.decode_admits = 0
         self.decode_steps = 0
         self.decode_tokens = 0                # admission firsts + step emits
+        self.prefill_exports = 0              # cross-pool KV handoffs out
+        self.kv_handoffs_in = 0               # cross-pool KV handoffs in
         # cross-request prefix sharing reconstructs a prompt's KV from the
         # paged arena alone, which only the attention-only families allow
         # (hybrid's ssm scan state is per-sequence and not paged)
@@ -178,6 +187,7 @@ class FragmentInstance:
         the drain signal: stop intake, let ``flush`` empty the queue."""
         assert spec.key == self.key
         self.batch = spec.batch
+        self.role = spec.role
         self.draining = spec.batch == 0
 
     def submit(self, req: ServeRequest, payload):
@@ -391,16 +401,62 @@ class FragmentInstance:
         vs = v_np[:, 0, sl].transpose(1, 0, 2, 3)
         return first, c1, ks, vs
 
+    def prefill_export(self, rid: int, client: str, tokens,
+                       sig: tuple) -> dict:
+        """Disaggregated prefill: run the prompt through this pool's
+        arena (prefix sharing included), export the resulting KV blocks
+        for the cross-pool handoff, and return the FIRST generated token
+        — TTFT is measured to this reply, before the decode pool even
+        hears about the stream. No decode slot is consumed: prefill-role
+        pools never hold a resident stream, which is the whole point of
+        the split. The arena retains the blocks (``_kv_share`` families)
+        so repeat prompts re-export without recompute."""
+        if self.draining:
+            raise PoolDrainingError(
+                f"pool {self.key} is draining (batch=0): enqueue refused")
+        if not self.can_decode or self.role == "decode":
+            return {"exported": False, "reason": "not_prefill_capable"}
+        self._ensure_decode()
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        S = int(toks.shape[0])
+        if S + 1 > self.decode_ctx:
+            return {"exported": False, "reason": "ctx_overflow"}
+        if not self.kv.has_room(S):
+            return {"exported": False, "reason": "kv_oom"}
+        key = tuple(sig) if self._kv_share else ("solo", rid)
+        try:
+            n_shared = self.kv.begin(rid, key, toks)
+        except KVCacheOOM:
+            return {"exported": False, "reason": "kv_oom"}
+        first, _c1, ks, vs = self._solo_prefill(rid, toks, n_shared)
+        self.kv.write_prompt_kv(rid, ks, vs)
+        payload = self.kv.export_prefix(rid)
+        self.kv.finish(rid, retain=self._kv_share)
+        self.prefill_exports += 1
+        self.decode_tokens += 1
+        return {"exported": True, "tok": first, "n_shared": n_shared,
+                "kv": encode_kv_blocks(payload)}
+
     def decode_admit(self, rid: int, client: str, tokens, max_new: int,
-                     sig: tuple) -> dict:
+                     sig: tuple, handoff: Optional[dict] = None) -> dict:
         """Admit one sequence into the continuous decode batch: paged-KV
         admission (with prefix sharing), solo prefill of the prompt, row
         copy into a free batch slot. Produces the FIRST generated token —
         TTFT is measured to this reply. Refusals are soft (``admitted``
-        False with a reason) so the driver can fall back or retry."""
+        False with a reason) so the driver can fall back or retry.
+
+        ``handoff`` is a decoded KV-block envelope from a prefill pool's
+        :meth:`prefill_export`: its blocks seed this arena's prefix index
+        under the exporter's chain keys BEFORE ``begin`` runs, so the
+        prompt admits fully shared (only the last position recomputes)
+        and later requests sharing a block-aligned prefix reuse the
+        imported blocks too. A partial import (receiver OOM) just lowers
+        ``n_shared`` — degraded, never wrong."""
         if self.draining:
             raise PoolDrainingError(
                 f"pool {self.key} is draining (batch=0): enqueue refused")
+        if self.role == "prefill":
+            return {"admitted": False, "reason": "role_prefill"}
         if not self.can_decode:
             return {"admitted": False, "reason": "not_decode_capable"}
         self._ensure_decode()
@@ -415,6 +471,9 @@ class FragmentInstance:
             return {"admitted": False, "reason": "no_slot"}
         if not self.kv.has_room(S + max_new):
             return {"admitted": False, "reason": "kv_oom"}
+        if handoff is not None and self._kv_share:
+            self.kv.import_prefix(handoff["sig"], handoff["blocks"])
+            self.kv_handoffs_in += 1
         key = tuple(sig) if self._kv_share else ("solo", rid)
         try:
             n_shared = self.kv.begin(rid, key, toks)
@@ -533,7 +592,7 @@ class PoolService:
         # the hop, and ride back to the front-end via the stats snapshot
         self._traced: set = set()
         self._dtraced: set = set()            # traced resident decode rids
-        self._pool_tid = "pool/{}/{}-{}".format(*inst.key)
+        self._pool_tid = pool_endpoint(inst.key)
 
     def handle(self, msg: dict) -> dict:
         try:
@@ -585,7 +644,8 @@ class PoolService:
         if op == "retarget":
             inst.retarget(PoolSpec(key=tuple(msg["key"]),
                                    share=msg["share"], batch=msg["batch"],
-                                   n_instances=msg["n_instances"]))
+                                   n_instances=msg["n_instances"],
+                                   role=msg.get("role", "both")))
             return {"ok": True}
         if op == "bind":
             # placement binding: which chip each of this pool's instances
@@ -593,12 +653,30 @@ class PoolService:
             # chips actually changed.
             inst.chips = [int(c) for c in msg["chips"]]
             return {"ok": True}
+        if op == "prefill":
+            t0 = time.perf_counter()
+            r = inst.prefill_export(msg["req_id"], msg["client"],
+                                    np.asarray(msg["tokens"], np.int32),
+                                    _sig_tuple(msg.get("sig") or ()))
+            if msg.get("trace") and r.get("exported"):
+                inst.telemetry.span(
+                    "decode/prefill", "pool",
+                    (time.perf_counter() - t0) * 1e3, rid=msg["req_id"],
+                    tid=self._pool_tid,
+                    args={"n_shared": r.get("n_shared", 0)})
+            return {"ok": True, **r}
         if op == "dadmit":
             t0 = time.perf_counter()
+            handoff = msg.get("kv")
+            if handoff is not None:
+                # validate on the receiving side of the hop: a mangled
+                # envelope is a FrameError reply, not an arena crash
+                handoff = decode_kv_blocks(handoff)
             r = inst.decode_admit(msg["req_id"], msg["client"],
                                   np.asarray(msg["tokens"], np.int32),
                                   msg["max_new"],
-                                  _sig_tuple(msg.get("sig") or ()))
+                                  _sig_tuple(msg.get("sig") or ()),
+                                  handoff=handoff)
             if msg.get("trace") and r.get("admitted"):
                 inst.telemetry.span(
                     "decode/admit", "pool",
@@ -636,11 +714,17 @@ class PoolService:
                     "packed": inst.packed,
                     "chips": list(inst.chips),
                     "draining": inst.draining,
+                    "role": inst.role,
                     "decode_active": inst.decode_active,
                     "decode_admits": inst.decode_admits,
                     "decode_steps": inst.decode_steps,
                     "decode_tokens": inst.decode_tokens,
+                    "prefill_exports": inst.prefill_exports,
+                    "kv_handoffs_in": inst.kv_handoffs_in,
                     "kv": inst.kv.stats() if inst.kv else None,
+                    # prefix-residency digest for KV-affinity pool choice
+                    "kv_residency": list(inst.kv.residency_digest())
+                    if inst.kv else [],
                     # worker-side registry rides back here and merges
                     # parent-side (span drain hands ownership over)
                     "telemetry": tel.snapshot(
@@ -722,13 +806,29 @@ class PoolHandle:
 
     def decode_admit(self, req_id: int, client: str, tokens,
                      max_new: int, sig: tuple = (), *,
+                     handoff: Optional[dict] = None,
                      trace: bool = False) -> dict:
         """Admit one sequence into the pool's continuous decode batch;
         the reply carries the FIRST generated token (or a soft refusal
-        with ``admitted`` False and a reason)."""
+        with ``admitted`` False and a reason). ``handoff`` is an encoded
+        KV-block envelope from :meth:`prefill_export` — it crosses this
+        hop and seeds the pool arena's prefix index before admission."""
         msg = {"op": "dadmit", "req_id": req_id, "client": client,
                "tokens": np.asarray(tokens, np.int32),
                "max_new": int(max_new), "sig": list(sig)}
+        if handoff is not None:
+            msg["kv"] = handoff
+        if trace:
+            msg["trace"] = True
+        return self._call(msg)
+
+    def prefill_export(self, req_id: int, client: str, tokens,
+                       sig: tuple = (), *, trace: bool = False) -> dict:
+        """Disaggregated prompt prefill on a prefill-role pool; the reply
+        carries the first generated token plus the KV-block envelope to
+        hand a decode pool (or ``exported`` False with a reason)."""
+        msg = {"op": "prefill", "req_id": req_id, "client": client,
+               "tokens": np.asarray(tokens, np.int32), "sig": list(sig)}
         if trace:
             msg["trace"] = True
         return self._call(msg)
@@ -745,7 +845,7 @@ class PoolHandle:
     def retarget(self, spec: PoolSpec) -> None:
         self._call({"op": "retarget", "key": list(spec.key),
                     "share": spec.share, "batch": spec.batch,
-                    "n_instances": spec.n_instances})
+                    "n_instances": spec.n_instances, "role": spec.role})
 
     def bind(self, chips: list) -> None:
         """Tell the pool which chip each instance is placed on."""
@@ -781,14 +881,11 @@ class GraftExecutor:
         self.decode_ctx = int(decode_ctx)
         self.kv_blocks = int(kv_blocks)
         self.kv_block_tokens = int(kv_block_tokens)
-        if decode_disagg:
-            # prefill/decode pool disaggregation (prefill pools handing
-            # KV blocks to decode pools over transport, expressed as plan
-            # diffs) is stubbed pending the transport KV-handoff item —
-            # the flag exists so callers can already plumb the intent
-            raise NotImplementedError(
-                "prefill/decode pool disaggregation is stubbed: the "
-                "single-pool continuous decode batch is the current path")
+        # prefill/decode pool disaggregation: plans may declare prefill-
+        # and decode-role pools (see plandiff); deploying such a plan
+        # requires this explicit opt-in so a role-annotated plan never
+        # lands on an executor that won't run the two-phase admit
+        self.decode_disagg = bool(decode_disagg)
         self.transport = transport if transport is not None \
             else InProcessTransport()
         self._handles: dict[tuple, PoolHandle] = {}
@@ -845,7 +942,13 @@ class GraftExecutor:
 
     def _deploy(self, plan: ExecutionPlan) -> None:
         self.plan = plan
-        self._pools = plan_pools(plan)
+        pools = plan_pools(plan)
+        if not self.decode_disagg and any(
+                sp.role != "both" for sp in pools.values()):
+            raise ValueError(
+                "plan declares prefill/decode-role pools; construct the "
+                "executor with decode_disagg=True to deploy it")
+        self._pools = pools
         new_specs = []
         for key, spec in self._pools.items():
             if key in self._handles:
@@ -883,8 +986,11 @@ class GraftExecutor:
         (model, start, end) identity survives keep their jitted fragment
         program, queue — and, for remote pools, their worker process —
         instead of paying a fresh trace+compile."""
-        diff = diff_plans(self._pools, plan_pools(new_plan))
+        new_pools = plan_pools(new_plan)
+        diff = diff_plans(self._pools, new_pools)
         removed = diff.by_kind("remove")
+        feeders = {pool_range(k) for k, sp in new_pools.items()
+                   if sp.role in ("both", "prefill")}
         for a in removed:                      # validate before mutating
             s = self._handles[a.key].stats()
             q = int(s["queue_len"])
@@ -894,6 +1000,18 @@ class GraftExecutor:
                     f"cannot remove pool {a.key}: {q} queued requests, "
                     f"{dec} resident decode streams — drain before "
                     f"apply_plan()")
+            # role rule: removing the last prefill-capable pool of a
+            # range while a decode-role pool of that range survives would
+            # leave the decode pool with no feeder — refuse
+            if a.old is not None and a.old.role in ("both", "prefill"):
+                orphans = [k for k, sp in new_pools.items()
+                           if sp.role == "decode"
+                           and pool_range(k) == pool_range(a.key)]
+                if orphans and pool_range(a.key) not in feeders:
+                    raise RuntimeError(
+                        f"cannot remove pool {a.key}: decode pool(s) "
+                        f"{orphans} would be left with no prefill "
+                        "feeder over that range")
         for a in removed:
             self._retire_pool(self._handles.pop(a.key))
             self._bound.pop(a.key, None)
@@ -1011,6 +1129,25 @@ class GraftExecutor:
         """PoolKey -> PoolSpec of the currently deployed plan."""
         return dict(self._pools)
 
+    def pool_role(self, key: tuple) -> str:
+        """Role of a deployed pool (``both`` when unannotated)."""
+        sp = self._pools.get(key)
+        return sp.role if sp is not None else "both"
+
+    def decode_pool_keys(self) -> list:
+        """Keys of the deployed decode-role pools (handoff receivers)."""
+        return [k for k, sp in self._pools.items() if sp.role == "decode"]
+
+    def prefill_pool_keys(self, rng: Optional[tuple] = None) -> list:
+        """Keys of the pools that can run a disaggregated prefill for
+        block range ``rng`` (``(model, start, end)``; None = any range):
+        prefill-role first, then dual-role, so the two-phase admit
+        prefers the pool that exists for exactly this job."""
+        out = [k for k, sp in self._pools.items()
+               if sp.role in ("prefill", "both")
+               and (rng is None or pool_range(k) == tuple(rng))]
+        return sorted(out, key=lambda k: self._pools[k].role != "prefill")
+
     def handle(self, key: tuple) -> PoolHandle:
         return self._handles[key]
 
@@ -1077,9 +1214,9 @@ class GraftExecutor:
             snap = s.get("telemetry")
             if not snap or snap.get("process") == into.process:
                 continue
-            model, start, end = key
-            into.merge_snapshot(snap, source=f"{model}/{start}-{end}",
-                                prefix=f"pool/{model}/{start}-{end}/")
+            label = pool_endpoint(key)[len("pool/"):]
+            into.merge_snapshot(snap, source=label,
+                                prefix=f"pool/{label}/")
             n += 1
         return n
 

@@ -466,7 +466,8 @@ class GraftFleet:
         recs, per_fe = [], {}
         sums = {k: 0 for k in ("rerouted", "local_finishes", "waited",
                                "shed_ingest", "shed_flush",
-                               "steals_in", "steals_out")}
+                               "steals_in", "steals_out",
+                               "kv_handoffs", "decode_local")}
         batch_sizes = []
         for name, srv in items:
             rs = srv.records((since or {}).get(name, 0))

@@ -126,7 +126,9 @@ class PagedKVCache:
         self._tick = 0
         self.counters = {"allocs": 0, "frees": 0, "evictions": 0,
                          "prefix_hits": 0, "prefix_tokens_reused": 0,
-                         "cow_copies": 0, "oom": 0}
+                         "cow_copies": 0, "oom": 0,
+                         "handoff_blocks_in": 0, "handoff_tokens_in": 0,
+                         "handoff_reused": 0}
         tel = telemetry if telemetry is not None else NULL_TELEMETRY
         self._tel_on = tel.enabled      # gates the O(n_blocks) util scan
         self._m_util = tel.gauge("kv/util_frac")
@@ -359,6 +361,75 @@ class PagedKVCache:
     def release(self, rid: int) -> None:
         """Abort path: drop the sequence without retaining anything new."""
         self.finish(rid, retain=False)
+
+    # ------------------------------------------------- cross-arena handoff
+    def export_prefix(self, rid: int) -> dict:
+        """Serialize a resident sequence's prompt blocks for a cross-pool
+        handoff (prefill pool -> decode pool over the transport). The
+        payload carries the signature and the per-block token chunks —
+        everything :func:`prompt_chain_keys` needs — so the importing
+        arena indexes the blocks under the *identical* chain keys and
+        cross-request prefix sharing survives the hop. KV arrays are
+        copies: the exporting arena may evict or free the blocks the
+        moment the frame is on the wire."""
+        seq = self._seqs[rid]
+        chunks = _chunk(self._prompt_tokens(seq), self.block_tokens)
+        blocks = []
+        for i, blk in enumerate(seq.blocks[:len(chunks)]):
+            if blk.tokens != chunks[i]:
+                break                 # diverged (post-prompt append): stop
+            blocks.append({"tokens": [int(t) for t in blk.tokens],
+                           "filled": int(blk.filled),
+                           "k": self._k[blk.idx, :blk.filled].copy(),
+                           "v": self._v[blk.idx, :blk.filled].copy()})
+        return {"sig": seq.sig, "block_tokens": self.block_tokens,
+                "prompt_len": seq.prompt_len, "blocks": blocks}
+
+    def import_prefix(self, sig: tuple, blocks: list) -> dict:
+        """Seed the prefix index with exported prompt blocks. Each block
+        lands as a retained reuse candidate (indexed, refcount 0,
+        evictable) under the same chain key the exporter held, so the
+        next :meth:`begin` for this prompt shares them like any locally
+        retained prefix — and so do OTHER requests sharing a block-
+        aligned prefix. Chunks already indexed here are skipped (the
+        affinity-routed case); an OOM mid-import keeps the contiguous
+        prefix imported so far and stops — ``begin`` recomputes the tail,
+        degraded, never wrong. Returns counters for the caller's stats."""
+        toks = tuple(int(t) for b in blocks for t in b["tokens"])
+        keys = prompt_chain_keys(sig, toks, self.block_tokens)
+        imported = reused = tokens_in = 0
+        pinned: list = []             # chain blocks held until import ends
+        for key, b in zip(keys, blocks):
+            chunk = tuple(int(t) for t in b["tokens"])
+            have = self._index.get(key)
+            if have is not None and have.tokens == chunk:
+                self._touch(have)     # refresh LRU: it is hot again
+                have.ref += 1         # pin: a later alloc must not evict
+                pinned.append(have)   # the chain out from under itself
+                reused += 1
+                continue
+            try:
+                blk = self._alloc_block()
+            except KVCacheOOM:
+                break                 # chain keys need contiguity: stop
+            n = min(int(b["filled"]), self.block_tokens)
+            self._k[blk.idx, :n] = np.asarray(b["k"], np.float32)[:n]
+            self._v[blk.idx, :n] = np.asarray(b["v"], np.float32)[:n]
+            blk.tokens = chunk
+            blk.filled = n
+            blk.ref = 1               # pinned while the import runs
+            blk.key = key
+            self._index[key] = blk
+            pinned.append(blk)
+            imported += 1
+            tokens_in += n
+        for blk in pinned:
+            blk.ref -= 1              # land retained (ref 0, evictable)
+        self.counters["handoff_blocks_in"] += imported
+        self.counters["handoff_tokens_in"] += tokens_in
+        self.counters["handoff_reused"] += reused
+        return {"imported": imported, "reused": reused,
+                "tokens_in": tokens_in}
 
     # ------------------------------------------------------------- stats
     @property

@@ -69,7 +69,7 @@ import numpy as np
 
 from repro.core.plandiff import PoolSpec
 from repro.serving.executor import (FragmentInstance, GraftExecutor,
-                                    PoolHandle, PoolService)
+                                    PoolHandle, PoolService, pool_endpoint)
 from repro.serving.telemetry import Telemetry
 from repro.serving.transport import (
     Channel, DEFAULT_MAX_FRAME, ShapedTransport, SocketChannel,
@@ -188,7 +188,8 @@ def _worker_loop(conn: socket.socket, connect_addr=None,
                 cfg = pickle.loads(msg["cfg"])
                 spec = PoolSpec(key=tuple(msg["key"]), share=msg["share"],
                                 batch=msg["batch"],
-                                n_instances=msg["n_instances"])
+                                n_instances=msg["n_instances"],
+                                role=msg.get("role", "both"))
                 # a worker owns a PRIVATE registry: its state rides back
                 # on the stats op (spans drained — the parent takes
                 # ownership) and merges parent-side, keyed by pool
@@ -537,7 +538,8 @@ class WorkerProc:
         reply = self._main_raw.request({
             "op": "init", "cfg": a["cfg"], "params": a["params"],
             "key": list(spec.key), "share": spec.share, "batch": spec.batch,
-            "n_instances": spec.n_instances, "chips": a["chips"],
+            "n_instances": spec.n_instances, "role": spec.role,
+            "chips": a["chips"],
             "packed": a.get("packed", True),
             "telemetry": a.get("telemetry", False)})
         if not reply.get("ok"):
@@ -554,7 +556,8 @@ class WorkerProc:
             if op == "retarget":
                 self._init_args["spec"] = PoolSpec(
                     key=tuple(msg["key"]), share=msg["share"],
-                    batch=msg["batch"], n_instances=msg["n_instances"])
+                    batch=msg["batch"], n_instances=msg["n_instances"],
+                    role=msg.get("role", "both"))
             else:
                 self._init_args["chips"] = [int(c) for c in msg["chips"]]
 
@@ -863,10 +866,9 @@ class RemoteExecutor(GraftExecutor):
                     self._beacon_seen[key] = time.monotonic()
                     snap = reply.get("telemetry")
                     if snap and self.telemetry.enabled:
-                        model, start, end = key
+                        label = pool_endpoint(key)[len("pool/"):]
                         self.telemetry.merge_snapshot(
-                            snap, source=f"{model}/{start}-{end}",
-                            prefix=f"pool/{model}/{start}-{end}/")
+                            snap, source=label, prefix=f"pool/{label}/")
             except WorkerDiedError:
                 pass        # recover() already ran; next loop rebinds
             except Exception:
@@ -908,7 +910,7 @@ class RemoteExecutor(GraftExecutor):
                                          name=f"beacon-{key}")
                     t.start()
                     self._beacon_pollers[key] = t
-                label = "pool/{}/{}-{}".format(*key)
+                label = pool_endpoint(key)
                 age = now - self._beacon_seen.get(key, now)
                 wedged = age > self.beacon_stale_s
                 tel.gauge(f"beacon/{label}/age_s").set(age)

@@ -47,7 +47,21 @@ from typing import Optional
 
 from repro.serving.telemetry import NULL as NULL_TELEMETRY
 
-__all__ = ["WeightedRouter", "rendezvous_route", "rendezvous_table"]
+__all__ = ["WeightedRouter", "affinity_overlap", "rendezvous_route",
+           "rendezvous_table"]
+
+
+def affinity_overlap(digest, residency) -> int:
+    """How many of a request's prompt-prefix chunk digests are already
+    resident in a cache's digest set — the ONE KV-affinity measure, used
+    both for front-end scoring here and for prefill-pool choice in
+    ``GraftServer`` (PR-9's routing affinity extended down to pools).
+    Chain-keyed digests mean a hit at chunk ``i`` implies hits at every
+    chunk before it, so the count approximates reusable prefix LENGTH,
+    not just membership."""
+    if not digest or not residency:
+        return 0
+    return sum(1 for d in digest if d in residency)
 
 
 def _score(frontend: str, client: str) -> int:
@@ -155,11 +169,10 @@ class WeightedRouter:
         if sig.unhealthy:
             score += self.health_penalty_ms
         hit = False
-        if digest and sig.affinity:
-            overlap = sum(1 for d in digest if d in sig.affinity)
-            if overlap:
-                hit = True
-                score -= self.affinity_bonus_ms * overlap
+        overlap = affinity_overlap(digest, sig.affinity)
+        if overlap:
+            hit = True
+            score -= self.affinity_bonus_ms * overlap
         return score, hit
 
     def route(self, client: str, frontends: list, *, now_ms: float,

@@ -258,6 +258,7 @@ class GraftServer:
         self._m_exec_ms = tel.histogram("server/exec_ms")
         self._m_ttft_ms = tel.histogram("server/ttft_ms")
         self._m_tpot_ms = tel.histogram("server/tpot_ms")
+        self._m_handoff_ms = tel.histogram("server/kv_handoff_ms")
         self._m_apply_ms = tel.histogram("replan/apply_ms")
         self._m_inflight = tel.gauge("server/inflight")
         self.controller = controller
@@ -322,6 +323,19 @@ class GraftServer:
 
         self._uplink_ewma: dict[str, float] = {}
 
+        # prefill/decode disaggregation state: measured cross-pool KV
+        # handoff times (the report's kv_handoff_ms and the shed model's
+        # handoff charge), per-pool residency-digest cache (pool-level
+        # KV-affinity: refreshed lazily with a short TTL so prefill-pool
+        # choice doesn't pay a stats round trip per admission), and the
+        # decode-local completion counts the controller's disagg_pressure
+        # trigger watches between ticks
+        self._handoff_samples: deque = deque(maxlen=4096)
+        self._handoff_ewma_ms: Optional[float] = None
+        self._residency_cache: dict[tuple, tuple] = {}   # key -> (t, set)
+        self.residency_ttl_ms = 250.0
+        self._disagg_mark = (0, 0)            # (decode_local, decode_served)
+
         # router signal state: recent admit/shed outcomes (shed-rate
         # scoring) and digests of prompt prefixes whose KV blocks were
         # admitted through THIS front-end (cache-affinity scoring)
@@ -343,6 +357,7 @@ class GraftServer:
                       "shed_ingest": 0, "shed_flush": 0,
                       "shed_decode": 0, "decode_served": 0,
                       "decode_tokens": 0, "decode_local": 0,
+                      "kv_handoffs": 0,
                       "steals_in": 0, "steals_out": 0}
         self._t0 = time.monotonic()
 
@@ -534,16 +549,31 @@ class GraftServer:
 
     def _decode_chain(self, client: str) -> Optional[list]:
         """Decode needs ONE pool spanning the whole model — the paged
-        cache lives pool-side, so a multi-stage chain (or a pool that
-        starts past block 0) cannot own the sequence."""
-        chain = self._routes.get(client)
-        if not chain or len(chain) != 1:
-            return None
+        cache lives pool-side, so the chain must resolve to a single
+        full-range pool that *owns* resident streams. A "both"-role
+        single-pool route serves decode directly (the continuous path).
+        Otherwise — multi-stage chain, or the full-range pool is
+        prefill-role under disaggregation — decode is served by a
+        decode-role pool when the executor deployed one, which is what
+        unlocks decode on plans whose one-shot route is multi-stage."""
         from repro.models import n_fragment_units
-        key = chain[0]
-        if key[1] != 0 or key[2] != n_fragment_units(self.cfg):
-            return None
-        return list(chain)
+        full = (0, n_fragment_units(self.cfg))
+        chain = self._routes.get(client)
+        if chain and len(chain) == 1:
+            key = chain[0]
+            if (key[1], key[2]) == full and \
+                    self._pool_role(key) == "both":
+                return list(chain)
+        dpools = getattr(self.executor, "decode_pool_keys", None)
+        if dpools is not None:
+            for key in dpools():
+                if (key[1], key[2]) == full:
+                    return [key]
+        return None
+
+    def _pool_role(self, key: tuple) -> str:
+        role_of = getattr(self.executor, "pool_role", None)
+        return role_of(key) if role_of is not None else "both"
 
     def _reuse_sig(self, client: str, budget_ms: float) -> tuple:
         """Prefix-sharing key: the planner's reuse signature of the
@@ -1018,9 +1048,15 @@ class GraftServer:
         if st is None:
             return
         now = self.now_ms()
+        disagg = self._pool_role(driver.key) == "decode"
+        est_first = driver.est_cost_ms()
+        if disagg and self._handoff_ewma_ms is not None:
+            # the cross-pool KV handoff is real work on the TTFT path —
+            # charge it to the shed-slack model like a steal hop
+            est_first += self._handoff_ewma_ms
         if self.shed_policy is not None and not st.shed_exempt:
             blown = ShedPolicy.hopeless_decode(
-                now, st.ttft_deadline_ms, driver.est_cost_ms(),
+                now, st.ttft_deadline_ms, est_first,
                 st.deadline_ms, driver.tpot_est_ms(), st.max_new)
             if blown:
                 if self.shed_policy.should_shed(item.client,
@@ -1035,10 +1071,17 @@ class GraftServer:
                                 tid="pool/{}/{}-{}".format(*driver.key),
                                 args={"decode": True})
         sig = self._decode_sig(st)
+        handoff = None
+        if disagg:
+            # two-phase admit: prompt prefill on a prefill-capable pool,
+            # KV frame rides the admit hop below. Any failure here just
+            # drops the handoff — the decode pool prefills for itself,
+            # token-exact either way, only slower.
+            handoff = self._prefill_handoff(driver, item, st, sig)
         try:
             t0 = self._perf()
             r = handle.decode_admit(item.rid, item.client, item.payload,
-                                    st.max_new, sig=sig,
+                                    st.max_new, sig=sig, handoff=handoff,
                                     trace=item.trace)
             admit_ms = self._perf() - t0
         except PoolDrainingError:
@@ -1046,13 +1089,20 @@ class GraftServer:
             return
         except Exception:
             traceback.print_exc()
+            # the admit may have SUCCEEDED pool-side with only the reply
+            # lost: without an abort the pool keeps a zombie resident
+            # stream and its KV blocks leak while we regenerate locally
+            try:
+                handle.decode_abort(item.rid)
+            except Exception:
+                pass
             self._decode_local(item.rid, st, item.payload)
             return
         if not r.get("admitted"):
             # soft refusal: slots/blocks are full right now (retry at a
             # later step boundary, bounded) — or the pool cannot decode
             # at all, which no retry fixes
-            if r.get("reason") == "not_decode_capable" \
+            if r.get("reason") in ("not_decode_capable", "role_prefill") \
                     or st.decode_retries >= 2:
                 self._decode_local(item.rid, st, item.payload)
             else:
@@ -1060,10 +1110,22 @@ class GraftServer:
                 driver.batcher.put(item)
             return
         driver.note_exec(admit_ms)       # prefill cost feeds est_cost_ms
+        if handoff is not None:
+            # the block transfer is the admit hop's extra freight: admit
+            # wall time IS the measured handoff cost
+            self.stats["kv_handoffs"] += 1
+            self._handoff_samples.append(admit_ms)
+            self._m_handoff_ms.record(admit_ms)
+            e = self._handoff_ewma_ms
+            self._handoff_ewma_ms = admit_ms if e is None \
+                else 0.8 * e + 0.2 * admit_ms
         from repro.serving.kvcache import prefix_digest
         self._note_affinity(prefix_digest(sig, item.payload,
                                           self._kv_block_tokens()))
-        st.t_first_ms = self.now_ms()
+        if st.t_first_ms <= 0.0:
+            # disagg stamped TTFT at the prefill reply already — the
+            # first token existed before the decode pool heard of us
+            st.t_first_ms = self.now_ms()
         st.n_gen = 1
         if r.get("done"):
             self._complete_decode(item.rid, st, r["tokens"])
@@ -1071,6 +1133,69 @@ class GraftServer:
         driver.decode_active += 1
         driver.decode_free = max(driver.decode_free - 1, 0)
         driver.decode_resident[item.rid] = item.client
+
+    def _prefill_handoff(self, driver: PoolDriver, item: BatchItem,
+                         st: _InFlight, sig: tuple):
+        """Phase one of the disaggregated admit: run the prompt through a
+        prefill-capable pool of the decode pool's range and return the
+        encoded KV-block envelope to ride the admit hop (None on any
+        failure — the decode pool then prefills for itself, numerically
+        identical). TTFT stamps HERE: the prefill reply carries the first
+        generated token."""
+        from repro.serving.kvcache import prefix_digest
+        digest = prefix_digest(sig, item.payload, self._kv_block_tokens())
+        key = self._choose_prefill_pool(digest, tuple(driver.key[:3]))
+        if key is None:
+            return None
+        try:
+            handle = self._pool_handle(key)
+            pr = handle.prefill_export(item.rid, item.client, item.payload,
+                                       sig=sig, trace=item.trace)
+        except Exception:
+            traceback.print_exc()
+            return None
+        if not pr.get("exported"):
+            return None
+        if st.t_first_ms <= 0.0:
+            st.t_first_ms = self.now_ms()
+        return pr.get("kv")
+
+    def _choose_prefill_pool(self, digest, rng: tuple) -> Optional[tuple]:
+        """Which prefill-capable pool runs this prompt: PR-9's KV-affinity
+        routing extended down to pool choice — score each candidate by
+        how much of the prompt's chunk digest is already resident in its
+        arena (``residency_digest`` over the framed stats op, TTL-cached)
+        so repeat prompts re-export warm blocks instead of re-prefilling.
+        Ties keep the executor's order (prefill-role pools first)."""
+        pk = getattr(self.executor, "prefill_pool_keys", None)
+        keys = pk(rng) if pk is not None else []
+        if not keys:
+            return None
+        if len(keys) == 1:
+            return keys[0]
+        from repro.serving.router import affinity_overlap
+        best, best_ov = keys[0], -1
+        for key in keys:
+            ov = affinity_overlap(digest, self._pool_residency(key))
+            if ov > best_ov:
+                best, best_ov = key, ov
+        return best
+
+    def _pool_residency(self, key: tuple) -> frozenset:
+        """One pool's KV residency digest, refreshed at most once per
+        ``residency_ttl_ms`` (an admission must not pay a stats round
+        trip; slightly stale residency only costs a colder pick)."""
+        now = self.now_ms()
+        hit = self._residency_cache.get(key)
+        if hit is not None and now - hit[0] <= self.residency_ttl_ms:
+            return hit[1]
+        try:
+            res = frozenset(self._pool_handle(key).stats()
+                            .get("kv_residency", ()))
+        except Exception:
+            res = frozenset()
+        self._residency_cache[key] = (now, res)
+        return res
 
     def _shed_mid_decode(self, driver: PoolDriver, handle,
                          now: float) -> None:
@@ -1231,11 +1356,13 @@ class GraftServer:
 
     # ------------------------------------------------------ work stealing
     def steal_queued(self, k: Optional[int] = None) -> list:
-        """Hand up to ``k`` queued-NOT-in-flight one-shot items (every
-        eligible item when None) to a peer front-end. Taken under the
-        writer lock so no driver can pop a batch containing them
-        mid-steal; decode items stay — their KV residency and step
-        cadence belong to the pool this front-end admitted them into.
+        """Hand up to ``k`` queued-NOT-in-flight items (every eligible
+        item when None) to a peer front-end. Taken under the writer lock
+        so no driver can pop a batch containing them mid-steal. Decode
+        items in the batcher are queued-not-yet-ADMITTED: they hold no
+        resident KV anywhere, so they steal exactly like one-shot items
+        (admitted streams live in ``decode_resident`` and never re-enter
+        a batcher, so residency can't leave with a steal).
         Returns ``[(BatchItem, _InFlight)]`` pairs; the request leaves
         this front-end's in-flight table and join() accounting entirely
         (the thief's :meth:`accept_stolen` picks both up), so a steal
@@ -1246,8 +1373,7 @@ class GraftServer:
                 room = None if k is None else k - len(stolen)
                 if room is not None and room <= 0:
                     break
-                stolen.extend(drv.batcher.steal(
-                    room, want=lambda it: not it.decode))
+                stolen.extend(drv.batcher.steal(room))
         out = []
         for item in stolen:
             st = self._inflight.pop(item.rid, None)
@@ -1479,6 +1605,28 @@ class GraftServer:
             except Exception:
                 traceback.print_exc()
 
+    def _feed_disagg_pressure(self) -> None:
+        """Per-tick delta of decode completions that fell back to the
+        in-process path over all decode completions — a persistently high
+        fraction means the deployed pools can't hold the decode load
+        (wrong roles, wrong capacity) and feeds the controller's
+        ``disagg_pressure`` trigger so the planner can split (or regrow)
+        prefill/decode pools instead of the server serving generative
+        traffic on its own CPU thread forever."""
+        if self.controller is None or \
+                not hasattr(self.controller, "observe_disagg_pressure"):
+            return
+        local = self.stats["decode_local"]
+        served = self.stats["decode_served"]
+        d_local = local - self._disagg_mark[0]
+        d_served = served - self._disagg_mark[1]
+        if d_served <= 0:
+            return                      # no decode completions this tick
+        self._disagg_mark = (local, served)
+        with self._ctl_lock:
+            self.controller.observe_disagg_pressure(
+                self.now_ms(), d_local / d_served)
+
     def tick(self, *, force: bool = False):
         """One control tick: feed live uplink samples to the controller,
         maybe replan, apply the diff, revisit parked requests. Returns
@@ -1486,6 +1634,7 @@ class GraftServer:
         fleet owns the controller; this tick only re-routes and expires
         parked requests."""
         plan = None
+        self._feed_disagg_pressure()
         if self.controller is not None and not self.external_control:
             now = self.now_ms()
             samples = self.executor.drain_uplink()
@@ -1636,6 +1785,9 @@ class GraftServer:
             "decode_served": self.stats["decode_served"],
             "decode_tokens": self.stats["decode_tokens"],
             "decode_local": self.stats["decode_local"],
+            "kv_handoffs": self.stats["kv_handoffs"],
+            "kv_handoff_ms": float(np.mean(self._handoff_samples))
+            if self._handoff_samples else 0.0,
             "steals_in": self.stats["steals_in"],
             "steals_out": self.stats["steals_out"],
             "mean_batch": float(np.mean(batch_sizes)) if batch_sizes

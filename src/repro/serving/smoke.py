@@ -234,6 +234,17 @@ def decode_plan(cfg, book, frags, *, batch: int = 4):
     return mixed_depth_plan(cfg, book, flat, s=0, batch=batch)
 
 
+def disagg_plan(cfg, book, frags, *, batch: int = 4):
+    """The decode topology split across roles: the full-range pool is
+    re-roled to prefill and a decode-role pool of the same range rides
+    along (``ExecutionPlan.with_disagg``) — prompt prefill runs on one
+    pool, the KV blocks cross the transport, and the decode pool owns
+    the resident streams."""
+    from repro.models import n_fragment_units
+    plan = decode_plan(cfg, book, frags, batch=batch)
+    return plan.with_disagg(cfg.name, n_fragment_units(cfg), batch=batch)
+
+
 def reference_decode(cfg, params, tokens, max_new: int) -> list:
     """Unbatched greedy decode: prefill + one token at a time, no cache
     manager — THE numerics the serving path must reproduce exactly."""
@@ -334,6 +345,92 @@ def run_decode_smoke(*, arch: str = DEFAULT_ARCH, n_clients: int = 3,
     say(f"[decode-smoke] served={report['decode_served']} "
         f"local={report['decode_local']} "
         f"prefix_hits={kv.get('prefix_hits', 0)} "
+        f"numerics_ok={report['numerics_ok']} "
+        f"({report['wall_s']:.1f}s)")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# disagg smoke: prefill/decode pool split with cross-pool KV handoff
+# ---------------------------------------------------------------------------
+
+def run_disagg_smoke(*, arch: str = DEFAULT_ARCH, n_clients: int = 3,
+                     n_requests: int = 10, seq_len: int = 12,
+                     max_new: int = 5, decode_ctx: int = 64,
+                     seed: int = 0, budget_ms: float = 4000.0,
+                     tpot_ms: float = 2000.0, log=None) -> dict:
+    """Blocking CI smoke: the disaggregated serve loop end-to-end.
+
+    A prefill-role pool and a decode-role pool over the same range; the
+    server's two-phase admit runs prompt prefill on one and hands the KV
+    blocks to the other over the transport. Every stream must match the
+    unbatched reference token-for-token AND at least one cross-pool KV
+    handoff must actually have happened (otherwise the split silently
+    degenerated to decode-pool self-prefill). Raises on a stranded run."""
+    import time
+
+    from repro.serving.executor import GraftExecutor, ServeRequest
+    from repro.serving.server import GraftServer
+    from repro.serving.transport import InProcessTransport
+
+    say = log if log is not None else (lambda *_: None)
+    cfg, book, params = smoke_setup(arch, seq_len=seq_len, seed=seed)
+    frags = smoke_fragments(cfg, n_clients, rate=30.0, seed=seed)
+    plan = disagg_plan(cfg, book, frags, batch=max(n_clients, 2))
+    ex = GraftExecutor(plan, params, cfg, transport=InProcessTransport(),
+                       decode_ctx=decode_ctx, kv_block_tokens=4,
+                       decode_disagg=True)
+    server = GraftServer(ex, book=book).start()
+    served: list = []
+    say(f"[disagg-smoke] {cfg.name}: {n_requests} streams x {max_new} "
+        f"tokens, prefill pool -> KV frame -> decode pool")
+    t0 = time.monotonic()
+    try:
+        rng = np.random.RandomState(seed)
+        for i in range(n_requests):
+            f = frags[i % len(frags)]
+            # half the streams repeat a per-client prompt so the handoff
+            # path exercises prefix sharing ACROSS the hop too
+            if i % 2 == 0:
+                crng = np.random.RandomState(seed * 131 + i)
+            else:
+                crng = np.random.RandomState(seed * 977 + (i % len(frags)))
+            toks = crng.randint(0, cfg.vocab_size, seq_len).astype(np.int32)
+            req = ServeRequest(client=f.client, tokens=toks,
+                               max_new_tokens=max_new,
+                               tpot_budget_ms=tpot_ms)
+            server.submit(req, 0, budget_ms)
+            served.append((req, max_new))
+            time.sleep(0.01)
+        if not server.join(timeout=600.0):
+            raise RuntimeError("disagg smoke never drained")
+        report = server.report()
+        pool_kv = {}
+        for key, s in ex.pool_stats().items():
+            if s.get("kv"):
+                pool_kv[s.get("role", "both")] = s["kv"]
+    finally:
+        server.stop(drain=False, timeout=10.0)
+        ex.close()
+    report["wall_s"] = time.monotonic() - t0
+    done = [(r, m) for r, m in served if r.out_tokens is not None]
+    try:
+        check_decode_against_reference(cfg, params, done)
+        report["numerics_ok"] = True
+    except AssertionError as e:
+        report["numerics_ok"] = False
+        report["numerics_error"] = str(e)[:500]
+    report["numerics_checked"] = len(done)
+    report["pool_kv"] = pool_kv
+    if report["kv_handoffs"] < 1:
+        raise RuntimeError(
+            "disagg smoke: no cross-pool KV handoff happened "
+            f"(kv_handoffs={report['kv_handoffs']}, "
+            f"decode_local={report['decode_local']})")
+    say(f"[disagg-smoke] served={report['decode_served']} "
+        f"handoffs={report['kv_handoffs']} "
+        f"handoff_ms={report['kv_handoff_ms']:.2f} "
+        f"local={report['decode_local']} "
         f"numerics_ok={report['numerics_ok']} "
         f"({report['wall_s']:.1f}s)")
     return report

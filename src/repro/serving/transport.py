@@ -57,6 +57,8 @@ __all__ = [
     "encode_frame", "decode_frame", "read_frame", "write_frame",
     "Channel", "Transport", "InProcessTransport", "SocketTransport",
     "ShapedTransport", "LinkShape", "ZEROCOPY_MIN_BYTES",
+    "KV_FRAME", "encode_kv_blocks", "decode_kv_blocks", "is_kv_frame",
+    "kv_frame_nbytes",
 ]
 
 _LEN = struct.Struct(">Q")
@@ -112,6 +114,90 @@ def _unpack_hook(obj):
         # was pure overhead exactly where frames are biggest
         return arr
     return obj
+
+
+# ---------------------------------------------------------------------------
+# KV-block frame: prefill -> decode pool handoff payload
+# ---------------------------------------------------------------------------
+
+KV_FRAME = "__kvblocks__"            # frame-type marker key
+
+
+def _deep_tuple(x):
+    """msgpack flattens tuples to lists; chain keys need the exact tuple
+    structure back (sigs nest: ``("m", ("a", 0), 7)``)."""
+    if isinstance(x, (list, tuple)):
+        return tuple(_deep_tuple(v) for v in x)
+    return x
+
+
+def encode_kv_blocks(payload: dict) -> dict:
+    """``PagedKVCache.export_prefix`` payload -> a typed wire envelope.
+
+    The envelope is an ordinary msgpack-able dict (ndarrays ride the
+    ``__nd__`` codec at any depth) tagged with :data:`KV_FRAME` so the
+    receiving side can validate it as a KV handoff rather than trusting
+    whatever shape arrives. Pure restructuring — no copies beyond what
+    the arena export already made.
+    """
+    return {KV_FRAME: 1,
+            "sig": payload["sig"],
+            "block_tokens": int(payload["block_tokens"]),
+            "prompt_len": int(payload["prompt_len"]),
+            "blocks": [{"tokens": [int(t) for t in b["tokens"]],
+                        "filled": int(b["filled"]),
+                        "k": b["k"], "v": b["v"]}
+                       for b in payload["blocks"]]}
+
+
+def is_kv_frame(obj) -> bool:
+    return isinstance(obj, dict) and obj.get(KV_FRAME) == 1
+
+
+def decode_kv_blocks(frame: dict) -> dict:
+    """Validate a received KV-block envelope and restore tuple-typed
+    keys (msgpack listifies tuples; the prefix-chain keys the importing
+    arena derives from ``sig`` must match the exporter's bit-for-bit).
+    Malformed envelopes raise :class:`FrameError` — the transport's one
+    typed error — never a downstream numpy/KeyError."""
+    if not is_kv_frame(frame):
+        raise FrameError("not a KV-block frame")
+    try:
+        bt = int(frame["block_tokens"])
+        out = {"sig": _deep_tuple(frame["sig"]), "block_tokens": bt,
+               "prompt_len": int(frame["prompt_len"]), "blocks": []}
+        if bt <= 0:
+            raise FrameError(f"bad block_tokens {bt}")
+        for b in frame["blocks"]:
+            toks = [int(t) for t in b["tokens"]]
+            filled = int(b["filled"])
+            k, v = np.asarray(b["k"]), np.asarray(b["v"])
+            if not (0 < filled <= bt and len(toks) == filled
+                    and k.shape == v.shape and k.shape[:1] == (filled,)):
+                raise FrameError(
+                    f"inconsistent KV block: filled={filled} "
+                    f"ntokens={len(toks)} k={k.shape} v={v.shape}")
+            out["blocks"].append({"tokens": toks, "filled": filled,
+                                  "k": k, "v": v})
+        return out
+    except FrameError:
+        raise
+    except Exception as e:
+        raise FrameError(f"malformed KV-block frame: "
+                         f"{type(e).__name__}: {e}") from None
+
+
+def kv_frame_nbytes(frame: dict) -> int:
+    """Approximate wire size of a KV envelope (the KV arrays dominate;
+    used to charge the handoff hop to the shed-slack model before the
+    transfer happens)."""
+    n = 0
+    for b in frame.get("blocks", ()):
+        for part in (b.get("k"), b.get("v")):
+            a = np.asarray(part) if part is not None else None
+            n += a.nbytes if a is not None else 0
+        n += 8 * len(b.get("tokens", ()))
+    return n + 64
 
 
 def _require_msgpack():

@@ -52,6 +52,25 @@ class FlakyChannel(Channel):
         self._inner.close()
 
 
+class DropReplyChannel(FlakyChannel):
+    """Forward-then-fail: the pool EXECUTES the request but the reply
+    dies on the way back — the nastier half of a flaky channel (the
+    work happened; the client cannot know it did)."""
+
+    def __init__(self, inner: Channel):
+        super().__init__(inner)
+        self.drop_replies: set = set()   # ops whose NEXT reply is lost
+
+    def request(self, msg: dict) -> dict:
+        r = self._inner.request(msg)
+        op = msg.get("op")
+        if op in self.drop_replies:
+            self.drop_replies.discard(op)
+            raise ConnectionResetError(
+                f"injected reply loss for {op!r} on channel {self.name}")
+        return r
+
+
 class FlakyTransport(Transport):
     """Transport wrapper: every connected channel is a FlakyChannel the
     test can partition/heal individually (``channels`` keeps them in
@@ -179,6 +198,61 @@ def test_server_survives_channel_partition_and_heals(smoke):
         ex.close()
 
 
+def test_lost_admit_reply_aborts_pool_zombie(smoke):
+    """BUGFIX regression: ``decode_admit`` succeeds pool-side but the
+    reply dies on the wire. The front-end falls back to local decode —
+    and must FIRST issue a best-effort ``decode_abort``, else the pool
+    keeps a zombie resident stream whose slot and KV blocks leak while
+    the answer is regenerated in-process (double generation)."""
+    from repro.serving import GraftExecutor, GraftServer, ServeRequest
+    from repro.serving.smoke import (check_decode_against_reference,
+                                     decode_plan, smoke_fragments)
+    cfg, book, params = smoke
+    frags = smoke_fragments(cfg, 1, rate=30.0, seed=0)
+    ex = GraftExecutor(decode_plan(cfg, book, frags, batch=2), params,
+                       cfg, transport=InProcessTransport(),
+                       decode_ctx=64, kv_block_tokens=4)
+    server = GraftServer(ex, book=book).start()
+    rng = np.random.RandomState(5)
+    try:
+        key = ex.chain_keys(frags[0].client)[0]
+
+        def _decode(n):
+            served = []
+            for _ in range(n):
+                req = ServeRequest(
+                    client=frags[0].client,
+                    tokens=rng.randint(0, cfg.vocab_size,
+                                       12).astype(np.int32),
+                    max_new_tokens=4, tpot_budget_ms=2000.0)
+                server.submit(req, 0, 5000.0)
+                served.append((req, 4))
+            assert server.join(timeout=300.0)
+            return served
+
+        warm = _decode(1)              # opens the lane; pool admit works
+        lane = server._pool_handle(key)
+        lane.channel = DropReplyChannel(lane.channel)
+        lane.channel.drop_replies.add("dadmit")
+        cut = _decode(1)               # admit lands, reply is lost
+        check_decode_against_reference(cfg, params, warm + cut)
+        rep = server.report()
+        assert rep["decode_local"] == 1          # fell back in-process...
+        assert rep["decode_served"] == 2         # ...served exactly once
+        s = ex.pool_stats()[key]
+        assert s["decode_active"] == 0           # no zombie slot
+        assert s["kv"]["active_seqs"] == 0       # no leaked KV blocks
+        # the lane heals: pool-side decode again, no new fallbacks
+        after = _decode(1)
+        check_decode_against_reference(cfg, params, after)
+        rep2 = server.report()
+        assert rep2["decode_local"] == 1
+        assert rep2["decode_served"] == 3
+    finally:
+        server.stop(drain=False, timeout=5.0)
+        ex.close()
+
+
 def _shared_pool_frags(cfg, fes, *, p=1):
     """One client per front-end, all entering the SAME shared pool."""
     from repro.core import Fragment
@@ -255,18 +329,25 @@ def test_fleet_wedged_frontend_work_is_stolen_and_heals(smoke):
     """Wedge ONE front-end mid-traffic (drivers stop consuming, channel
     dark, host marked unhealthy): the survivor STEALS its queued-not-in-
     flight work through the fleet balancer and completes it with exact
-    numerics — nothing dropped, nothing double-executed. Healing the
+    numerics — nothing dropped, nothing double-executed. The doomed
+    queue mixes one-shot items with a DECODE burst: queued-not-yet-
+    admitted decode requests hold no resident KV on the victim, so they
+    steal (and re-admit on the thief) like anything else. Healing the
     front-end re-admits it to the router and it serves again."""
     from conftest import wait_until
     from repro.core import GraftPlanner
-    from repro.serving import GraftExecutor, GraftFleet
+    from repro.serving import GraftExecutor, GraftFleet, ServeRequest
     from repro.serving.smoke import (check_against_monolithic,
+                                     check_decode_against_reference,
                                      mixed_depth_plan, smoke_setup)
     cfg, book, params = smoke_setup("qwen3-1.7b", seed=0, n_layers=3)
-    frags = _shared_pool_frags(cfg, ["fe0", "fe1"], p=1)
-    plan = mixed_depth_plan(cfg, book, frags, s=1, batch=4)
+    # p=0 / s=0: ONE full-range shared pool, so decode traffic rides the
+    # same batchers the steal sweeps
+    frags = _shared_pool_frags(cfg, ["fe0", "fe1"], p=0)
+    plan = mixed_depth_plan(cfg, book, frags, s=0, batch=4)
     tp = FlakyTransport(InProcessTransport())
-    ex = GraftExecutor(plan, params, cfg, transport=tp)
+    ex = GraftExecutor(plan, params, cfg, transport=tp,
+                       decode_ctx=64, kv_block_tokens=4)
     fleet = GraftFleet(ex, n_frontends=2, book=book).start()
     try:
         key = ex.chain_keys(frags[0].client)[0]
@@ -291,25 +372,41 @@ def test_fleet_wedged_frontend_work_is_stolen_and_heals(smoke):
                            n_per_client=2)
         for req, p in doomed:          # accepted by dark BEFORE the mark
             dark.submit(req, p, 5000.0)
-        wait_until(lambda: dark.n_queued == len(doomed),
+        drng = np.random.RandomState(42)
+        dburst = [(ServeRequest(
+            client=frags[0].client,
+            tokens=drng.randint(0, cfg.vocab_size, 12).astype(np.int32),
+            max_new_tokens=4, tpot_budget_ms=2000.0), 4)
+            for _ in range(2)]
+        for req, _m in dburst:         # queued, never admitted: no KV
+            dark.submit(req, 0, 5000.0)
+        n_doomed = len(doomed) + len(dburst)
+        wait_until(lambda: dark.n_queued == n_doomed,
                    desc="requests to queue on the wedged front-end")
 
         fleet.set_health(dark_fe, False)
         # the next control tick priority-steals the wedged queue
-        wait_until(lambda: fleet.stats["steals"] >= len(doomed),
+        wait_until(lambda: fleet.stats["steals"] >= n_doomed,
                    timeout_s=10.0, desc="the survivor to steal queued work")
-        assert dark.stats["steals_out"] == len(doomed)
-        assert lit.stats["steals_in"] == len(doomed)
+        assert dark.stats["steals_out"] == n_doomed
+        assert lit.stats["steals_in"] == n_doomed
         assert dark.n_inflight == 0            # ownership fully moved
         assert fleet.join(timeout=300.0), "stolen work never completed"
         for req, _p in doomed:
             assert req.result is not None, "steal dropped a request"
+        for req, _m in dburst:
+            assert req.out_tokens is not None, "steal dropped a stream"
         check_against_monolithic(cfg, params, doomed)
+        # stolen decode streams re-admitted on the THIEF's pool lane and
+        # generated exactly once, token-for-token
+        check_decode_against_reference(cfg, params, dburst)
+        assert lit.stats["decode_served"] == len(dburst)
+        assert dark.stats["decode_served"] == 0
         # stolen rids completed ONCE, on the thief, within SLO accounting
         rep = fleet.report()
-        assert rep["served"] == len(warm) + len(doomed)
+        assert rep["served"] == len(warm) + n_doomed
         assert rep["shed"] == 0
-        assert rep["steals"] == len(doomed)
+        assert rep["steals"] == n_doomed
 
         # heal: channel back, drivers consume, health mark lifted —
         # the router re-admits the front-end with no further ceremony
@@ -325,9 +422,9 @@ def test_fleet_wedged_frontend_work_is_stolen_and_heals(smoke):
         assert fleet.join(timeout=300.0)
         check_against_monolithic(cfg, params, back)
         assert dark.stats["batches"] > dark_batches   # serving again
-        assert fleet.stats["steals"] == len(doomed)   # no new steals
+        assert fleet.stats["steals"] == n_doomed      # no new steals
         rep2 = fleet.report()
-        assert rep2["served"] == len(warm) + len(doomed) + len(back)
+        assert rep2["served"] == len(warm) + n_doomed + len(back)
     finally:
         fleet.stop(drain=False, timeout=5.0)
         ex.close()
